@@ -1,0 +1,41 @@
+"""Paper Figure 2: 99th-percentile latency vs offered request rate.
+
+Rates are swept from low load up to just beneath the *thread* backend's peak
+throughput (the paper's protocol), for each of the four workloads.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.apps import WORKLOADS, build_socialnetwork, make_request_factory
+from repro.core import latency_sweep, run_trial
+
+from .bench_throughput import _app_for, measure_peak
+
+
+def run(quick: bool = False) -> List[str]:
+    duration = 0.6 if quick else 1.2
+    n_points = 3 if quick else 5
+    rows: List[str] = []
+    for workload in WORKLOADS:
+        thread_peak = measure_peak("thread", workload,
+                                   duration=0.5 if quick else 0.8)
+        # sweep up to ~90% of the thread peak, as in the paper
+        rates = [thread_peak * f for f in
+                 [0.1, 0.3, 0.5, 0.7, 0.9][:n_points]]
+        for backend in ("thread", "fiber"):
+            with _app_for(backend) as app:
+                run_trial(app, make_request_factory(workload), rate=100,
+                          duration=0.3, seed=7)  # warmup
+                trials = latency_sweep(app, make_request_factory(workload),
+                                       rates, duration=duration)
+            for tr in trials:
+                rows.append(
+                    f"p99_latency/{workload}/{backend}@{tr.offered_rps:.0f}rps,"
+                    f"{tr.p99 * 1e6:.1f},p50_us={tr.p50 * 1e6:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

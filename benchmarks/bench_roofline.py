@@ -1,0 +1,47 @@
+"""Roofline table from the multi-pod dry-run results.
+
+Reads ``launch_results/dryrun.json`` (produced by
+``python -m repro.launch.dryrun --all``) and emits one CSV row per
+(arch x shape x mesh) cell: the bound step time, the dominant term, and the
+roofline fraction.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "launch_results",
+                       "dryrun.json")
+
+
+def run(quick: bool = False) -> List[str]:
+    path = os.path.abspath(RESULTS)
+    if not os.path.exists(path):
+        return ["roofline/missing,0,run launch.dryrun first"]
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for key in sorted(results):
+        rec = results[key]
+        name = key.replace("|", "/")
+        if rec.get("status") == "skip":
+            rows.append(f"roofline/{name},0,skip:{rec['reason'][:40]}")
+            continue
+        if rec.get("status") != "ok":
+            rows.append(f"roofline/{name},0,error")
+            continue
+        r = rec["roofline"]
+        t_bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        mem = rec.get("memory_tpu_corrected",
+                      rec.get("memory", {})).get("per_device_total_bytes", 0)
+        rows.append(
+            f"roofline/{name},{t_bound * 1e6:.1f},"
+            f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
+            f"mem_gib={mem / 2**30:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,59 @@
+"""Beyond-paper integration: LLM serving engine, thread vs fiber orchestration.
+
+A tiny decoder LM served with continuous batching; request orchestration
+(api -> tokenizer -> engine.submit -> detokenizer) runs on either backend.
+Reports sustained request throughput and p99 latency at a fixed offered rate.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+
+def run(quick: bool = False) -> List[str]:
+    from repro.configs import get_smoke_config
+    from repro.models import Model
+    from repro.serving import ServeConfig, build_llm_app
+
+    cfg = get_smoke_config("qwen2-0.5b").with_(remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    scfg = ServeConfig(max_batch=4, max_len=64, prefill_bucket=16,
+                       max_new_tokens=4)
+    n_requests = 16 if quick else 48
+    rows = []
+    for backend in ("thread", "fiber"):
+        app = build_llm_app(model, params, scfg, backend=backend)
+        with app:
+            app.send("engine", "run", None)
+            # warmup (compile)
+            app.send("api", "generate", {"text": "warmup"}).wait(timeout=120)
+            t0 = time.perf_counter()
+            lat: List[float] = []
+            futs = []
+            for i in range(n_requests):
+                ts = time.perf_counter()
+                fut = app.send("api", "generate", {"text": f"request {i}"})
+                fut.add_done_callback(
+                    lambda f, ts=ts: lat.append(time.perf_counter() - ts))
+                futs.append(fut)
+                time.sleep(0.002)
+            for f in futs:
+                f.wait(timeout=240)
+            dt = time.perf_counter() - t0
+            eng = app.services["engine"].state["engine"]
+            rows.append(
+                f"serving/{backend},{dt / n_requests * 1e6:.1f},"
+                f"rps={n_requests / dt:.1f};p99_ms="
+                f"{np.percentile(lat, 99) * 1e3:.1f};"
+                f"tokens={eng.generated}")
+            app.services["engine"].state["stop"] = True
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,73 @@
+"""Microbenchmark: async-call spawn/join cost, thread vs fiber.
+
+Paper analogue: "the ComposePost service spends 23% of its time in clone and
+exit system calls".  We measure (a) the raw cost of spawning+joining async
+no-op carriers under each backend, and (b) the fraction of a ComposePost
+request's wall time attributable to spawn alone.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import App, AsyncRpc, Compute, ServiceSpec, WaitAll
+
+
+def _noop(svc, payload):
+    return payload
+    yield  # pragma: no cover - marks this as a generator
+
+
+def _fan(svc, payload):
+    futs = []
+    for i in range(payload):
+        f = yield AsyncRpc("noop", "go", i)
+        futs.append(f)
+    yield WaitAll(futs)
+    return payload
+
+
+def _build(backend: str) -> App:
+    app = App(backend=backend)
+    app.add_service(ServiceSpec("noop", {"go": _noop}, n_workers=2))
+    app.add_service(ServiceSpec("fan", {"fan": _fan}, n_workers=2))
+    return app
+
+
+def measure_spawn_cost(backend: str, *, fanout: int = 8,
+                       iters: int = 200) -> Dict[str, float]:
+    """Wall time per async call for a fanout-of-N no-op RPC pattern."""
+    with _build(backend) as app:
+        # warmup
+        for _ in range(10):
+            app.send("fan", "fan", fanout).wait(timeout=10)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            app.send("fan", "fan", fanout).wait(timeout=10)
+        dt = time.perf_counter() - t0
+        spawns = app.total_spawns()
+    return {
+        "us_per_request": dt / iters * 1e6,
+        "us_per_async_call": dt / (iters * fanout) * 1e6,
+        "spawns": spawns,
+    }
+
+
+def run(quick: bool = False) -> List[str]:
+    rows = []
+    iters = 50 if quick else 200
+    res = {}
+    for backend in ("thread", "fiber"):
+        r = measure_spawn_cost(backend, iters=iters)
+        res[backend] = r
+        rows.append(f"spawn_overhead/{backend},{r['us_per_async_call']:.2f},"
+                    f"req_us={r['us_per_request']:.1f}")
+    ratio = res["thread"]["us_per_async_call"] / max(
+        res["fiber"]["us_per_async_call"], 1e-9)
+    rows.append(f"spawn_overhead/thread_over_fiber,{ratio:.2f},x")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

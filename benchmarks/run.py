@@ -1,0 +1,65 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+Tables:
+  1. spawn_overhead   — paper's "23% of time in clone/exit" analogue
+  2. peak_throughput  — paper Figure 1 (peak rps, 4 workloads × 2 backends)
+  3. p99_latency      — paper Figure 2 (p99 vs offered rate)
+  4. serving          — beyond-paper: LLM serving engine, thread vs fiber
+  5. roofline         — dry-run roofline terms (reads launch/dryrun results)
+
+Env:
+  BENCH_QUICK=1   shorter trials (CI)
+  BENCH_ONLY=a,b  run a subset by prefix
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    quick = os.environ.get("BENCH_QUICK", "0") == "1"
+    only = os.environ.get("BENCH_ONLY", "")
+    selected = [s.strip() for s in only.split(",") if s.strip()]
+
+    benches = []
+    from . import bench_spawn_overhead, bench_throughput, bench_latency
+    benches.append(("spawn_overhead", bench_spawn_overhead.run))
+    benches.append(("peak_throughput", bench_throughput.run))
+    benches.append(("p99_latency", bench_latency.run))
+    try:
+        from . import bench_serving
+        benches.append(("serving", bench_serving.run))
+    except ImportError:
+        pass
+    try:
+        from . import bench_roofline
+        benches.append(("roofline", bench_roofline.run))
+    except ImportError:
+        pass
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if selected and not any(name.startswith(s) for s in selected):
+            continue
+        t0 = time.perf_counter()
+        try:
+            for row in fn(quick=quick):
+                print(row, flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name}/ERROR,0,failed", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} took {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr, flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: the paper's technique in 60 lines.
+
+Build a tiny microservice app, run it on the thread backend (DeathStarBench
+std::async baseline) and the fiber backend (the paper's boost::fiber fix),
+and watch the async-call spawn cost difference.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.core import (App, AsyncRpc, Compute, ServiceSpec, Sleep, Wait,
+                        WaitAll)
+
+
+# 1. Write service handlers ONCE as effect generators.
+def fetch(svc, payload):
+    yield Compute(20e-6)           # a little CPU work (serialization)
+    yield Sleep(300e-6)            # wait-dominated I/O (cache round trip)
+    return {"item": payload}
+
+
+def frontpage(svc, payload):
+    # the ComposePost pattern: fan out async RPCs, join them all
+    futs = []
+    for i in range(6):
+        f = yield AsyncRpc("store", "fetch", i)
+        futs.append(f)
+    items = yield WaitAll(futs)
+    return {"items": [x["item"] for x in items]}
+
+
+def build(backend):
+    app = App(backend=backend)
+    app.add_service(ServiceSpec("store", {"fetch": fetch}, n_workers=2))
+    app.add_service(ServiceSpec("front", {"page": frontpage}, n_workers=4))
+    return app
+
+
+# 2. Same app, two execution backends.
+for backend in ("thread", "fiber"):
+    with build(backend) as app:
+        app.send("front", "page", None).wait(timeout=10)   # warmup
+        t0 = time.perf_counter()
+        n = 300
+        futs = [app.send("front", "page", None) for _ in range(n)]
+        for f in futs:
+            f.wait(timeout=30)
+        dt = time.perf_counter() - t0
+        print(f"{backend:7s}: {n / dt:8.0f} req/s  "
+              f"({app.total_spawns()} async-call carriers spawned)")
+
+print("\nfibers win because each async call is a deque push, not a clone().")

@@ -1,0 +1,31 @@
+"""Train a small LM end-to-end with checkpoint/restart fault tolerance.
+
+    PYTHONPATH=src python examples/train_llm.py [--arch olmoe-1b-7b] [--steps 200]
+
+Uses the reduced (smoke) config of the chosen architecture so it runs on
+CPU; the same driver scales to the production mesh via launch/train.py.
+Kill it mid-run and re-run: it resumes from the last async checkpoint.
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+    # delegate to the launcher (same code path as production)
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", args.arch, "--smoke",
+           "--steps", str(args.steps), "--batch", str(args.batch),
+           "--seq", str(args.seq), "--save-every", "25",
+           "--ckpt-dir", f"/tmp/repro_ckpt_{args.arch}"]
+    sys.exit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

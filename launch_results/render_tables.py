@@ -1,0 +1,66 @@
+"""Render EXPERIMENTS.md tables from dryrun.json.
+
+    PYTHONPATH=src python launch_results/render_tables.py [--mesh pod1]
+"""
+import argparse
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def fmt_t(s):
+    if s >= 1:
+        return f"{s:.1f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.1f}ms"
+    return f"{s * 1e6:.0f}us"
+
+
+def fmt_b(b):
+    if b >= 2**30:
+        return f"{b / 2**30:.1f}G"
+    return f"{b / 2**20:.0f}M"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None, choices=(None, "pod1", "pod2"))
+    ap.add_argument("--variants", action="store_true")
+    args = ap.parse_args()
+    with open(os.path.join(HERE, "dryrun.json")) as f:
+        results = json.load(f)
+
+    print("| arch | shape | mesh | mem/dev (tpu-corr) | t_compute | t_memory "
+          "| t_coll | dominant | useful-FLOP ratio | roofline frac |")
+    print("|---|---|---|---:|---:|---:|---:|---|---:|---:|")
+    for key in sorted(results):
+        is_variant = "#" in key
+        if is_variant != args.variants:
+            continue
+        rec = results[key]
+        parts = key.split("#")[0].split("|")
+        arch, shape, mesh = parts
+        if args.mesh and mesh != args.mesh:
+            continue
+        suffix = ("#" + key.split("#")[1]) if is_variant else ""
+        if rec.get("status") == "skip":
+            print(f"| {arch} | {shape} | {mesh} | — | — | — | — | "
+                  f"SKIP (quadratic) | — | — |")
+            continue
+        if rec.get("status") != "ok":
+            print(f"| {arch} | {shape} | {mesh} | ERROR | | | | | | |")
+            continue
+        r = rec["roofline"]
+        mem = rec.get("memory_tpu_corrected", rec.get("memory", {})) \
+            .get("per_device_total_bytes", 0)
+        flag = " (!)" if mem > 16 * 2**30 else ""
+        print(f"| {arch}{suffix} | {shape} | {mesh} | {fmt_b(mem)}{flag} "
+              f"| {fmt_t(r['t_compute_s'])} | {fmt_t(r['t_memory_s'])} "
+              f"| {fmt_t(r['t_collective_s'])} | {r['dominant']} "
+              f"| {r['useful_flops_ratio']:.2f} "
+              f"| {r['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

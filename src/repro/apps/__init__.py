@@ -1,0 +1,4 @@
+"""Example microservice applications built on repro.core."""
+from .socialnetwork import (WORKLOADS, build_socialnetwork, make_request_factory)
+
+__all__ = ["build_socialnetwork", "make_request_factory", "WORKLOADS"]

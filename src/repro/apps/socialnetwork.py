@@ -1,0 +1,209 @@
+"""DeathStarBench SocialNetwork clone on the repro.core substrate.
+
+Service graph (after Gan et al., ASPLOS'19, and the paper's Figure 1):
+
+    ComposePost ──async──> UniqueId, Text, UserService, MediaService
+        │                      Text ──async──> UrlShorten, UserMention
+        └─────async──> HomeTimeline, UserTimeline, PostStorage
+
+    ReadHomeTimeline ──> HomeTimeline ──async──> PostStorage (batch)
+    ReadUserTimeline ──> UserTimeline ──async──> PostStorage (batch)
+
+Four request generators, as in the paper's evaluation: ``compose``,
+``read_home``, ``read_user`` and ``mixed`` (a weighted combination).
+
+Service times model a cache/DB-backed deployment: a small CPU slice
+(serialization, hashing — *real* busy work) plus a wait-dominated I/O slice
+(memcached/MongoDB round trip — timed wait).  The async-call carriers are
+where the two backends differ; everything else is shared.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+from ..core import (App, AsyncRpc, Compute, ServiceSpec, Sleep, Wait, WaitAll)
+
+# --- service-time model (seconds) -----------------------------------------
+# CPU slices are kept small (they serialize on the GIL for both backends);
+# I/O slices dominate, as in a cache-backed social network.
+CPU_TINY = 20e-6     # hashing / id generation
+CPU_SMALL = 60e-6    # text processing, serialization
+IO_CACHE = 300e-6    # memcached-style round trip
+IO_DB = 800e-6       # MongoDB-style round trip
+
+
+# ---------------------------------------------------------------- leaf svcs
+def _unique_id(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    return {"post_id": 42}
+
+
+def _url_shorten(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_CACHE)
+    return {"urls": payload}
+
+
+def _user_mention(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_CACHE)
+    return {"mentions": payload}
+
+
+def _media(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_CACHE)
+    return {"media": payload}
+
+
+def _user_service(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_CACHE)
+    return {"user_id": 7}
+
+
+def _post_storage_store(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_DB)
+    return {"ok": True}
+
+
+def _post_storage_read(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_DB)
+    return {"posts": [{"id": i} for i in range(payload.get("n", 10))]}
+
+
+# ------------------------------------------------------------- mid services
+def _text(svc: Any, payload: Any):
+    """Text service fans out to UrlShorten + UserMention (async, joined)."""
+    yield Compute(CPU_SMALL)
+    f_url = yield AsyncRpc("url_shorten", "shorten", payload)
+    f_men = yield AsyncRpc("user_mention", "resolve", payload)
+    urls, mentions = yield WaitAll([f_url, f_men])
+    return {"text": payload, **urls, **mentions}
+
+
+def _home_timeline_write(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_CACHE)
+    return {"ok": True}
+
+
+def _home_timeline_read(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_CACHE)  # redis timeline lookup
+    f = yield AsyncRpc("post_storage", "read", {"n": 10})
+    posts = yield Wait(f)
+    return posts
+
+
+def _user_timeline_write(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_DB)
+    return {"ok": True}
+
+
+def _user_timeline_read(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_CACHE)
+    f = yield AsyncRpc("post_storage", "read", {"n": 10})
+    posts = yield Wait(f)
+    return posts
+
+
+# ---------------------------------------------------------------- front svc
+def _compose_post(svc: Any, payload: Any):
+    """The paper's running example: four async calls joined, then three more.
+
+    This is the service whose thread backend spends 23% of its time in
+    clone/exit in the paper's simulations.
+    """
+    yield Compute(CPU_SMALL)
+    f_uid = yield AsyncRpc("unique_id", "get", payload)
+    f_txt = yield AsyncRpc("text", "process", payload)
+    f_usr = yield AsyncRpc("user", "lookup", payload)
+    f_med = yield AsyncRpc("media", "upload", payload)
+    uid, text, user, media = yield WaitAll([f_uid, f_txt, f_usr, f_med])
+
+    post = {**uid, **text, **user, **media}
+    f_home = yield AsyncRpc("home_timeline", "write", post)
+    f_user = yield AsyncRpc("user_timeline", "write", post)
+    f_store = yield AsyncRpc("post_storage", "store", post)
+    yield WaitAll([f_home, f_user, f_store])
+    return {"post_id": uid["post_id"]}
+
+
+def _read_home(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    f = yield AsyncRpc("home_timeline", "read", payload)
+    return (yield Wait(f))
+
+
+def _read_user(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    f = yield AsyncRpc("user_timeline", "read", payload)
+    return (yield Wait(f))
+
+
+# ------------------------------------------------------------------ wiring
+def build_socialnetwork(backend: str = "fiber", *, n_workers: int = 2,
+                        frontend_workers: int = 4,
+                        net_latency: float = 0.0,
+                        overrides: Dict[str, str] | None = None) -> App:
+    """Wire the SocialNetwork app.
+
+    ``overrides`` maps service name -> backend, supporting the paper's
+    one-service-at-a-time migration experiment.
+    """
+    overrides = overrides or {}
+    app = App(backend=backend, net_latency=net_latency)
+
+    def add(name: str, handlers: Dict[str, Any], workers: int) -> None:
+        app.add_service(ServiceSpec(
+            name=name, handlers=handlers, n_workers=workers,
+            backend=overrides.get(name)))
+
+    add("frontend", {"compose": _compose_post, "read_home": _read_home,
+                     "read_user": _read_user}, frontend_workers)
+    add("unique_id", {"get": _unique_id}, n_workers)
+    add("text", {"process": _text}, n_workers)
+    add("user", {"lookup": _user_service}, n_workers)
+    add("media", {"upload": _media}, n_workers)
+    add("url_shorten", {"shorten": _url_shorten}, n_workers)
+    add("user_mention", {"resolve": _user_mention}, n_workers)
+    add("home_timeline", {"write": _home_timeline_write,
+                          "read": _home_timeline_read}, n_workers)
+    add("user_timeline", {"write": _user_timeline_write,
+                          "read": _user_timeline_read}, n_workers)
+    add("post_storage", {"store": _post_storage_store,
+                         "read": _post_storage_read}, n_workers)
+    return app
+
+
+# ------------------------------------------------------------ request mixes
+WORKLOADS = ("compose", "read_home", "read_user", "mixed")
+
+# the paper's "mixed" generator combines the three request types; DSB's
+# default mix is read-heavy.
+_MIX = (("compose", 0.10), ("read_home", 0.60), ("read_user", 0.30))
+
+
+def make_request_factory(workload: str):
+    """Returns a RequestFactory for the load generator."""
+    if workload in ("compose", "read_home", "read_user"):
+        def fixed(rng: np.random.Generator) -> Tuple[str, str, Any]:
+            return ("frontend", workload, {"text": "hello @world http://x"})
+        return fixed
+    if workload == "mixed":
+        names = [m for m, _ in _MIX]
+        probs = np.asarray([p for _, p in _MIX])
+        probs = probs / probs.sum()
+
+        def mixed(rng: np.random.Generator) -> Tuple[str, str, Any]:
+            m = names[int(rng.choice(len(names), p=probs))]
+            return ("frontend", m, {"text": "hello @world http://x"})
+        return mixed
+    raise ValueError(f"unknown workload {workload!r} (want {WORKLOADS})")

@@ -1,0 +1,23 @@
+"""Grok-1 314B — 8 experts, top-2 routing, attention softcap [hf:xai-org/grok-1]."""
+from ..models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="grok-1-314b", family="moe",
+        n_layers=64, d_model=6144, d_ff=32768, vocab_size=131072,
+        n_heads=48, n_kv_heads=8, head_dim=128,
+        n_experts=8, experts_per_token=2,
+        attn_logit_softcap=30.0, logit_softcap=30.0,
+        rope_theta=10_000.0, norm_eps=1e-5,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="grok-smoke", family="moe",
+        n_layers=2, d_model=64, d_ff=128, vocab_size=512,
+        n_heads=4, n_kv_heads=2, head_dim=16,
+        n_experts=4, experts_per_token=2,
+        attn_logit_softcap=30.0, logit_softcap=30.0, remat=False,
+    )

@@ -1,0 +1,20 @@
+"""Llama-3.1-405B — dense GQA (kv=8), 128k vocab [arXiv:2407.21783]."""
+from ..models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b", family="dense",
+        n_layers=126, d_model=16384, d_ff=53248, vocab_size=128256,
+        n_heads=128, n_kv_heads=8, head_dim=128,
+        rope_theta=500_000.0, norm_eps=1e-5,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-smoke", family="dense",
+        n_layers=2, d_model=64, d_ff=208, vocab_size=512,
+        n_heads=4, n_kv_heads=2, head_dim=16,
+        rope_theta=500_000.0, remat=False,
+    )

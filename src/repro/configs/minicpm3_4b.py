@@ -1,0 +1,24 @@
+"""MiniCPM3-4B — multi-head latent attention (MLA) [hf:openbmb/MiniCPM3-4B]."""
+from ..models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm3-4b", family="dense",
+        n_layers=62, d_model=2560, d_ff=6400, vocab_size=73448,
+        n_heads=40, n_kv_heads=40, head_dim=64,
+        use_mla=True, q_lora_rank=768, kv_lora_rank=256,
+        qk_nope_dim=64, qk_rope_dim=32, v_head_dim=64,
+        rope_theta=10_000.0, norm_eps=1e-5,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm3-smoke", family="dense",
+        n_layers=2, d_model=64, d_ff=128, vocab_size=512,
+        n_heads=4, n_kv_heads=4, head_dim=16,
+        use_mla=True, q_lora_rank=32, kv_lora_rank=16,
+        qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+        norm_eps=1e-5, remat=False,
+    )

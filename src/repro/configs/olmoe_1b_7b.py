@@ -1,0 +1,22 @@
+"""OLMoE-1B-7B — 64 experts, top-8 routing, qk-norm [arXiv:2409.02060]."""
+from ..models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b", family="moe",
+        n_layers=16, d_model=2048, d_ff=1024, vocab_size=50304,
+        n_heads=16, n_kv_heads=16, head_dim=128,
+        n_experts=64, experts_per_token=8,
+        qk_norm=True, rope_theta=10_000.0, norm_eps=1e-5,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-smoke", family="moe",
+        n_layers=2, d_model=64, d_ff=96, vocab_size=512,
+        n_heads=4, n_kv_heads=4, head_dim=16,
+        n_experts=8, experts_per_token=2,
+        qk_norm=True, remat=False,
+    )

@@ -1,0 +1,21 @@
+"""Qwen2-0.5B — GQA (kv=2) with QKV bias [arXiv:2407.10671]."""
+from ..models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-0.5b", family="dense",
+        n_layers=24, d_model=896, d_ff=4864, vocab_size=151936,
+        n_heads=14, n_kv_heads=2, head_dim=64,
+        qkv_bias=True, tie_embeddings=True,
+        rope_theta=1_000_000.0, norm_eps=1e-6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-smoke", family="dense",
+        n_layers=2, d_model=64, d_ff=160, vocab_size=512,
+        n_heads=4, n_kv_heads=2, head_dim=16,
+        qkv_bias=True, tie_embeddings=True, remat=False,
+    )

@@ -1,0 +1,29 @@
+"""Qwen2-VL-2B backbone — M-RoPE, dynamic resolution [arXiv:2409.12191].
+
+The vision frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings + 3D (t, h, w) M-RoPE position ids.
+"""
+from ..models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b", family="vlm",
+        n_layers=28, d_model=1536, d_ff=8960, vocab_size=151936,
+        n_heads=12, n_kv_heads=2, head_dim=128,
+        qkv_bias=True, tie_embeddings=True,
+        rope_sections=(16, 24, 24),            # t/h/w sections, sum = 64 = head_dim/2
+        frontend="vision",
+        rope_theta=1_000_000.0, norm_eps=1e-6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-smoke", family="vlm",
+        n_layers=2, d_model=64, d_ff=128, vocab_size=512,
+        n_heads=4, n_kv_heads=2, head_dim=16,
+        qkv_bias=True, tie_embeddings=True,
+        rope_sections=(2, 3, 3),               # sum = 8 = head_dim/2
+        frontend="vision", remat=False,
+    )

@@ -1,0 +1,20 @@
+"""Qwen3-32B — GQA (kv=8) with per-head qk-norm [hf:Qwen/Qwen3 family]."""
+from ..models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-32b", family="dense",
+        n_layers=64, d_model=5120, d_ff=25600, vocab_size=151936,
+        n_heads=64, n_kv_heads=8, head_dim=128,
+        qk_norm=True, rope_theta=1_000_000.0, norm_eps=1e-6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-smoke", family="dense",
+        n_layers=2, d_model=64, d_ff=192, vocab_size=512,
+        n_heads=4, n_kv_heads=2, head_dim=16,
+        qk_norm=True, remat=False,
+    )

@@ -1,0 +1,28 @@
+"""RecurrentGemma-9B — RG-LRU + local attention, 2:1 pattern [arXiv:2402.19427].
+
+38 layers with repeating (recurrent, recurrent, local-attention) blocks:
+attention at every third layer, MQA (kv=1), window 2048.
+"""
+from ..models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b", family="hybrid",
+        n_layers=38, d_model=4096, d_ff=12288, vocab_size=256000,
+        n_heads=16, n_kv_heads=1, head_dim=256,
+        lru_width=4096, conv_width=4, attn_window=2048,
+        block_pattern=("rec", "rec", "attn"),
+        embed_scale=True, rope_theta=10_000.0, norm_eps=1e-6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-smoke", family="hybrid",
+        n_layers=6, d_model=64, d_ff=128, vocab_size=512,
+        n_heads=4, n_kv_heads=1, head_dim=16,
+        lru_width=64, conv_width=4, attn_window=16,
+        block_pattern=("rec", "rec", "attn"),
+        embed_scale=True, remat=False,
+    )

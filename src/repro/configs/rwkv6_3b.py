@@ -1,0 +1,20 @@
+"""RWKV6 "Finch" 3B — attention-free, data-dependent decay [arXiv:2404.05892]."""
+from ..models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-3b", family="ssm",
+        n_layers=32, d_model=2560, d_ff=8960, vocab_size=65536,
+        rwkv_head_size=64,                      # 40 heads
+        norm_eps=1e-5,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-smoke", family="ssm",
+        n_layers=2, d_model=64, d_ff=128, vocab_size=512,
+        rwkv_head_size=16,                      # 4 heads
+        norm_eps=1e-5, remat=False,
+    )

@@ -1,0 +1,28 @@
+"""SeamlessM4T-medium backbone — encoder-decoder, multimodal [arXiv:2308.11596].
+
+The speech frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings to the 12-layer text/unit encoder; the 12-layer
+decoder attends to encoder output via cross-attention.
+"""
+from ..models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium", family="audio",
+        n_layers=12, n_enc_layers=12,
+        d_model=1024, d_ff=4096, vocab_size=256206,
+        n_heads=16, n_kv_heads=16, head_dim=64,
+        cross_len=4096, frontend="audio",
+        rope_theta=10_000.0, norm_eps=1e-5,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-smoke", family="audio",
+        n_layers=2, n_enc_layers=2,
+        d_model=64, d_ff=128, vocab_size=512,
+        n_heads=4, n_kv_heads=4, head_dim=16,
+        cross_len=32, frontend="audio", remat=False,
+    )

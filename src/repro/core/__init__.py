@@ -1,0 +1,20 @@
+"""repro.core — async-RPC substrate with thread and fiber backends.
+
+The paper's contribution (fiber-based asynchronous RPC) as a composable
+library: write service handlers once as effect generators, choose the
+execution backend per service.
+"""
+from .effects import (AsyncRpc, Compute, Offload, Sleep, SpawnLocal, Wait,
+                      WaitAll, sync_rpc)
+from .future import Future
+from .loadgen import find_peak_throughput, latency_sweep, run_trial
+from .metrics import LatencyRecorder, PeakResult, TrialResult
+from .service import App, Service, ServiceSpec
+
+__all__ = [
+    "App", "Service", "ServiceSpec", "Future",
+    "AsyncRpc", "Wait", "WaitAll", "Sleep", "Compute", "Offload",
+    "SpawnLocal", "sync_rpc",
+    "run_trial", "find_peak_throughput", "latency_sweep",
+    "LatencyRecorder", "TrialResult", "PeakResult",
+]

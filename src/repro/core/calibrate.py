@@ -1,0 +1,42 @@
+"""CPU-burn calibration for the Compute(seconds) effect.
+
+Service handlers model on-CPU work with a *real* busy loop so that scheduler
+pressure, GIL contention and context-switch costs are physically exercised —
+the quantities the paper attributes the thread-backend collapse to.
+"""
+from __future__ import annotations
+
+import time
+
+_ITERS_PER_SEC: float | None = None
+
+
+def _burn_iters(n: int) -> int:
+    acc = 0
+    for i in range(n):
+        acc += i ^ (acc >> 3)
+    return acc
+
+
+def iters_per_second() -> float:
+    """Calibrate once per process: busy-loop iterations per wall second."""
+    global _ITERS_PER_SEC
+    if _ITERS_PER_SEC is None:
+        n = 200_000
+        t0 = time.perf_counter()
+        _burn_iters(n)
+        dt = time.perf_counter() - t0
+        # refine with a second, longer shot for stability
+        n2 = max(int(n / dt * 0.02), 10_000)  # ~20 ms
+        t0 = time.perf_counter()
+        _burn_iters(n2)
+        dt2 = time.perf_counter() - t0
+        _ITERS_PER_SEC = n2 / max(dt2, 1e-9)
+    return _ITERS_PER_SEC
+
+
+def burn(seconds: float) -> None:
+    """Busy-spin for approximately ``seconds`` of CPU time."""
+    if seconds <= 0:
+        return
+    _burn_iters(max(int(iters_per_second() * seconds), 1))

@@ -1,0 +1,84 @@
+"""Effect vocabulary for service handlers.
+
+Handlers are written **once** as generator functions that ``yield`` effects;
+the executor (thread- or fiber-backed) interprets them.  This mirrors the
+paper's migration path: the service *logic* is untouched, only the async-call
+implementation underneath changes (``std::async`` → ``boost::fiber::async``).
+
+Effects
+-------
+AsyncRpc(dest, method, payload)
+    Fire an asynchronous RPC.  Resumes *immediately* with a :class:`Future`.
+    The interpreter spawns a **carrier** — a kernel thread (thread backend,
+    faithful to ``std::async``'s thread-per-call policy) or a fiber (fiber
+    backend) — whose body performs the transport send and waits for the reply.
+Wait(future) / WaitAll(futures)
+    Join.  Thread backend blocks the kernel thread; fiber backend suspends the
+    fiber and frees the scheduler to run other fibers.
+Sleep(seconds)
+    Wait-dominated I/O time (DB/network).  Thread: ``time.sleep``; fiber:
+    timer-heap suspension.
+Compute(seconds)
+    Calibrated *real* CPU burn — models the service's on-CPU work.
+Offload(fn, *args)
+    Run a blocking callable (e.g. a jitted JAX step) on the shared offload
+    pool; resumes with a Future.  Used by the serving engine so device work
+    never blocks the fiber scheduler.
+SpawnLocal(genfn, *args)
+    Run another handler generator asynchronously on the *same* service
+    (local async function, no transport); resumes with a Future.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Tuple
+
+
+class Effect:
+    __slots__ = ()
+
+
+@dataclass
+class AsyncRpc(Effect):
+    dest: str
+    method: str
+    payload: Any = None
+
+
+@dataclass
+class Wait(Effect):
+    future: Any
+
+
+@dataclass
+class WaitAll(Effect):
+    futures: List[Any]
+
+
+@dataclass
+class Sleep(Effect):
+    seconds: float
+
+
+@dataclass
+class Compute(Effect):
+    seconds: float
+
+
+@dataclass
+class Offload(Effect):
+    fn: Callable[..., Any]
+    args: Tuple[Any, ...] = field(default_factory=tuple)
+
+
+@dataclass
+class SpawnLocal(Effect):
+    genfn: Callable[..., Any]
+    args: Tuple[Any, ...] = field(default_factory=tuple)
+
+
+def sync_rpc(dest: str, method: str, payload: Any = None):
+    """Convenience sub-generator: async call + immediate join."""
+    fut = yield AsyncRpc(dest, method, payload)
+    result = yield Wait(fut)
+    return result

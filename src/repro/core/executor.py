@@ -1,0 +1,211 @@
+"""Service executors: the two async-call backends the paper compares.
+
+``ThreadExecutor``
+    Faithful to DeathStarBench's ``std::async`` default launch policy: every
+    asynchronous RPC spawns a **fresh kernel thread** whose body performs the
+    call and is joined on ``get()``.  Dispatcher threads pull requests from
+    the service mailbox.  Thread create/exit + kernel scheduling is the
+    bottleneck the paper measures (23% of ComposePost time in clone/exit).
+
+``FiberExecutor``
+    The paper's fix: each dispatcher is a :class:`FiberScheduler`; requests
+    and async-RPC carriers are **fibers** on that scheduler.  Spawn cost is a
+    function call; waits are overlapped cooperatively.
+
+Both interpret the *same* handler generators (see ``effects.py``) — switching
+a service between backends is a one-word config change, mirroring the paper's
+``std::async`` → ``boost::fiber::async`` search-and-replace.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Generator, List, Optional
+
+from .calibrate import burn
+from .effects import AsyncRpc, Compute, Offload, Sleep, SpawnLocal, Wait, WaitAll
+from .fiber import FiberScheduler
+from .future import Future
+
+_SHUTDOWN = object()
+
+
+class Executor:
+    """Common interface: deliver(gen, reply_future) + lifecycle."""
+
+    def deliver(self, gen: Generator, reply: Future) -> None:
+        raise NotImplementedError
+
+    def start(self) -> None:
+        raise NotImplementedError
+
+    def stop(self) -> None:
+        raise NotImplementedError
+
+    # instrumentation
+    spawns: int = 0
+
+
+class ThreadExecutor(Executor):
+    """Thread-per-async-call backend (the paper's baseline)."""
+
+    def __init__(self, app: Any, name: str, n_workers: int = 4) -> None:
+        self.app = app
+        self.name = name
+        self.n_workers = n_workers
+        self._mailbox: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._threads: List[threading.Thread] = []
+        self.spawns = 0           # kernel threads created for async calls
+        self.spawn_seconds = 0.0  # wall time spent creating threads
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        for i in range(self.n_workers):
+            t = threading.Thread(target=self._dispatch_loop,
+                                 name=f"{self.name}-disp{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def stop(self) -> None:
+        for _ in self._threads:
+            self._mailbox.put(_SHUTDOWN)
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self._threads.clear()
+
+    def deliver(self, gen: Generator, reply: Future) -> None:
+        self._mailbox.put((gen, reply))
+
+    # ------------------------------------------------------------- dispatch
+    def _dispatch_loop(self) -> None:
+        while True:
+            item = self._mailbox.get()
+            if item is _SHUTDOWN:
+                return
+            gen, reply = item
+            self._drive(gen, reply)
+
+    def _drive(self, gen: Generator, reply: Future) -> None:
+        """Run a handler generator to completion *in this kernel thread*."""
+        send_value: Any = None
+        throw_exc: Optional[BaseException] = None
+        while True:
+            try:
+                if throw_exc is not None:
+                    exc, throw_exc = throw_exc, None
+                    eff = gen.throw(exc)
+                else:
+                    eff = gen.send(send_value)
+            except StopIteration as stop:
+                reply.set_result(stop.value)
+                return
+            except BaseException as exc:
+                reply.set_exception(exc)
+                return
+
+            try:
+                send_value = self._interpret(eff)
+                throw_exc = None
+            except BaseException as exc:
+                throw_exc = exc
+
+    def _interpret(self, eff: Any) -> Any:
+        if isinstance(eff, AsyncRpc):
+            # THE paper's baseline operation: a fresh kernel thread per call.
+            fut = Future()
+            t0 = time.perf_counter()
+            t = threading.Thread(
+                target=self._carrier_body,
+                args=(eff.dest, eff.method, eff.payload, fut),
+                daemon=True)
+            t.start()
+            with self._lock:
+                self.spawns += 1
+                self.spawn_seconds += time.perf_counter() - t0
+            return fut
+
+        if isinstance(eff, Wait):
+            return eff.future.wait()
+
+        if isinstance(eff, WaitAll):
+            return [f.wait() for f in eff.futures]
+
+        if isinstance(eff, Sleep):
+            time.sleep(max(eff.seconds, 0.0))
+            return None
+
+        if isinstance(eff, Compute):
+            burn(eff.seconds)
+            return None
+
+        if isinstance(eff, Offload):
+            return self.app.offload(eff.fn, *eff.args)
+
+        if isinstance(eff, SpawnLocal):
+            fut = Future()
+            t0 = time.perf_counter()
+            t = threading.Thread(target=self._drive,
+                                 args=(eff.genfn(*eff.args), fut),
+                                 daemon=True)
+            t.start()
+            with self._lock:
+                self.spawns += 1
+                self.spawn_seconds += time.perf_counter() - t0
+            return fut
+
+        raise TypeError(f"Unknown effect: {eff!r}")
+
+    def _carrier_body(self, dest: str, method: str, payload: Any,
+                      fut: Future) -> None:
+        """Body of the per-call thread: perform the RPC, block on the reply."""
+        try:
+            self._drive(self.app.rpc_carrier(dest, method, payload), fut)
+        except BaseException as exc:  # pragma: no cover - _drive catches
+            if not fut.done:
+                fut.set_exception(exc)
+
+
+class FiberExecutor(Executor):
+    """Fiber-per-async-call backend (the paper's technique)."""
+
+    def __init__(self, app: Any, name: str, n_workers: int = 1) -> None:
+        self.app = app
+        self.name = name
+        self._scheds: List[FiberScheduler] = [
+            FiberScheduler(app, name=f"{name}-fib{i}") for i in range(n_workers)
+        ]
+        self._rr = 0
+
+    @property
+    def spawns(self) -> int:  # type: ignore[override]
+        return sum(s.fibers_spawned for s in self._scheds)
+
+    @property
+    def switches(self) -> int:
+        return sum(s.switches for s in self._scheds)
+
+    def start(self) -> None:
+        for s in self._scheds:
+            s.start()
+
+    def stop(self) -> None:
+        for s in self._scheds:
+            s.stop()
+
+    def deliver(self, gen: Generator, reply: Future) -> None:
+        # round-robin across schedulers (boost work-sharing analogue);
+        # each fiber stays pinned to its scheduler thereafter.
+        s = self._scheds[self._rr % len(self._scheds)]
+        self._rr += 1
+        s.spawn_external(gen, reply)
+
+
+def make_executor(backend: str, app: Any, name: str,
+                  n_workers: int) -> Executor:
+    if backend == "thread":
+        return ThreadExecutor(app, name, n_workers)
+    if backend == "fiber":
+        return FiberExecutor(app, name, n_workers)
+    raise ValueError(f"unknown backend {backend!r} (want 'thread'|'fiber')")

@@ -1,0 +1,100 @@
+"""Backend-agnostic futures.
+
+A :class:`Future` is the join point between the two execution backends the
+paper compares:
+
+* **threads** (DeathStarBench ``std::async`` default policy): a kernel thread
+  blocks on :meth:`Future.wait` via a condition variable;
+* **fibers** (``boost::fiber::async``): a fiber registers a *callback* that
+  re-enqueues it on its scheduler's ready queue — no kernel involvement.
+
+The same object supports both, so a request can traverse services running on
+different backends (the paper's "replace the affected services one by one"
+migration story).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, List, Optional
+
+
+class FutureError(RuntimeError):
+    pass
+
+
+class Future:
+    """A write-once result slot with thread-safe blocking *and* callback waits."""
+
+    __slots__ = ("_cond", "_done", "_value", "_exc", "_callbacks")
+
+    def __init__(self) -> None:
+        self._cond = threading.Condition()
+        self._done = False
+        self._value: Any = None
+        self._exc: Optional[BaseException] = None
+        self._callbacks: List[Callable[["Future"], None]] = []
+
+    # ---------------------------------------------------------------- write
+    def set_result(self, value: Any) -> None:
+        with self._cond:
+            if self._done:
+                raise FutureError("Future already resolved")
+            self._value = value
+            self._done = True
+            callbacks, self._callbacks = self._callbacks, []
+            self._cond.notify_all()
+        for cb in callbacks:
+            cb(self)
+
+    def set_exception(self, exc: BaseException) -> None:
+        with self._cond:
+            if self._done:
+                raise FutureError("Future already resolved")
+            self._exc = exc
+            self._done = True
+            callbacks, self._callbacks = self._callbacks, []
+            self._cond.notify_all()
+        for cb in callbacks:
+            cb(self)
+
+    # ----------------------------------------------------------------- read
+    @property
+    def done(self) -> bool:
+        with self._cond:
+            return self._done
+
+    def wait(self, timeout: Optional[float] = None) -> Any:
+        """Blocking get — the *thread* backend's join. Re-raises exceptions."""
+        with self._cond:
+            if not self._done:
+                ok = self._cond.wait_for(lambda: self._done, timeout=timeout)
+                if not ok:
+                    raise TimeoutError("Future.wait timed out")
+            if self._exc is not None:
+                raise self._exc
+            return self._value
+
+    def result(self) -> Any:
+        """Non-blocking get; raises if not done."""
+        with self._cond:
+            if not self._done:
+                raise FutureError("Future not resolved yet")
+            if self._exc is not None:
+                raise self._exc
+            return self._value
+
+    def add_done_callback(self, cb: Callable[["Future"], None]) -> None:
+        """The *fiber* backend's join: cb fires immediately if already done,
+        else exactly once on resolution (possibly from another thread)."""
+        run_now = False
+        with self._cond:
+            if self._done:
+                run_now = True
+            else:
+                self._callbacks.append(cb)
+        if run_now:
+            cb(self)
+
+
+def all_done(futures: List[Future]) -> bool:
+    return all(f.done for f in futures)

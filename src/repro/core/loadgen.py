@@ -1,0 +1,129 @@
+"""Open-loop Poisson load generator + peak-throughput search.
+
+Mirrors the paper's evaluation protocol:
+
+* *peak throughput*: "increase the request rate ... until the number of
+  processed requests per second does not increase anymore" — implemented as a
+  geometric ramp; the peak is the best achieved rate across the ramp;
+* *tail latency vs rate*: fixed-rate open-loop trials reporting p99.
+
+Arrivals are generated open-loop (Poisson, seeded) so queueing delay shows up
+as latency rather than throttling the generator — the regime where the thread
+backend's spawn cost collapses, per the paper.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, List, Optional, Tuple
+
+import numpy as np
+
+from .metrics import LatencyRecorder, PeakResult, TrialResult
+from .service import App
+
+# (method, payload) chooser — called per arrival with the trial RNG
+RequestFactory = Callable[[np.random.Generator], Tuple[str, str, Any]]
+
+
+def run_trial(app: App, make_request: RequestFactory, rate: float,
+              duration: float, *, seed: int = 0, max_outstanding: int = 4096,
+              drain: float = 2.0) -> TrialResult:
+    """Offer ``rate`` req/s for ``duration`` seconds; measure completions."""
+    rng = np.random.default_rng(seed)
+    rec = LatencyRecorder()
+    outstanding = [0]
+    shed = [0]
+    lock = threading.Lock()
+
+    t_start = time.perf_counter()
+    t_end = t_start + duration
+    next_arrival = t_start + float(rng.exponential(1.0 / rate))
+
+    while True:
+        now = time.perf_counter()
+        if now >= t_end:
+            break
+        # fire every arrival that is due (catch-up batching keeps the
+        # generator open-loop even when pacing sleep overshoots)
+        while next_arrival <= now:
+            next_arrival += float(rng.exponential(1.0 / rate))
+            with lock:
+                if outstanding[0] >= max_outstanding:
+                    shed[0] += 1
+                    continue
+                outstanding[0] += 1
+            dest, method, payload = make_request(rng)
+            t0 = time.perf_counter()
+
+            def _done(fut: Any, t0: float = t0) -> None:
+                with lock:
+                    outstanding[0] -= 1
+                try:
+                    fut.result()
+                    rec.record(time.perf_counter() - t0)
+                except BaseException:
+                    rec.record_error()
+
+            app.send(dest, method, payload).add_done_callback(_done)
+        pause = min(next_arrival - time.perf_counter(), 0.001)
+        if pause > 0:
+            time.sleep(pause)
+
+    # drain: give in-flight requests a bounded window to finish
+    deadline = time.perf_counter() + drain
+    while time.perf_counter() < deadline:
+        with lock:
+            if outstanding[0] == 0:
+                break
+        time.sleep(0.005)
+
+    elapsed = duration  # completions attributed to the offered window
+    s = rec.summary()
+    return TrialResult(
+        offered_rps=rate,
+        achieved_rps=rec.completed / elapsed,
+        duration=elapsed,
+        p50=s["p50"], p99=s["p99"], mean=s["mean"],
+        completed=rec.completed, shed=shed[0], errors=rec.errors,
+    )
+
+
+def find_peak_throughput(app: App, make_request: RequestFactory, *,
+                         start_rate: float = 50.0, growth: float = 1.6,
+                         duration: float = 1.5, seed: int = 0,
+                         max_trials: int = 18,
+                         verbose: bool = False) -> PeakResult:
+    """Geometric ramp; stop after achieved throughput plateaus/regresses."""
+    trials: List[TrialResult] = []
+    rate = start_rate
+    best = 0.0
+    stall = 0
+    for i in range(max_trials):
+        tr = run_trial(app, make_request, rate, duration, seed=seed + i)
+        trials.append(tr)
+        if verbose:
+            print("   ", tr.row(), flush=True)
+        if tr.achieved_rps > best * 1.05:
+            best = max(best, tr.achieved_rps)
+            stall = 0
+        else:
+            best = max(best, tr.achieved_rps)
+            stall += 1
+            if stall >= 2:
+                break
+        rate *= growth
+    return PeakResult(peak_rps=best, trials=trials)
+
+
+def latency_sweep(app: App, make_request: RequestFactory, rates: List[float],
+                  *, duration: float = 1.5, seed: int = 0,
+                  verbose: bool = False) -> List[TrialResult]:
+    """p99-vs-rate curve (the paper's second figure)."""
+    out = []
+    for i, r in enumerate(rates):
+        tr = run_trial(app, make_request, r, duration, seed=seed + 100 + i)
+        out.append(tr)
+        if verbose:
+            print("   ", tr.row(), flush=True)
+    return out

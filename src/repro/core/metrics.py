@@ -1,0 +1,69 @@
+"""Latency/throughput metrics used by the load generator and benchmarks."""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+
+class LatencyRecorder:
+    """Thread-safe reservoir of request latencies (seconds)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._samples: List[float] = []
+        self.completed = 0
+        self.errors = 0
+
+    def record(self, seconds: float) -> None:
+        with self._lock:
+            self._samples.append(seconds)
+            self.completed += 1
+
+    def record_error(self) -> None:
+        with self._lock:
+            self.errors += 1
+
+    def snapshot(self) -> List[float]:
+        with self._lock:
+            return list(self._samples)
+
+    def summary(self) -> Dict[str, float]:
+        xs = np.asarray(self.snapshot(), dtype=np.float64)
+        if xs.size == 0:
+            return {"n": 0, "mean": float("nan"), "p50": float("nan"),
+                    "p90": float("nan"), "p99": float("nan")}
+        return {
+            "n": int(xs.size),
+            "mean": float(xs.mean()),
+            "p50": float(np.percentile(xs, 50)),
+            "p90": float(np.percentile(xs, 90)),
+            "p99": float(np.percentile(xs, 99)),
+        }
+
+
+@dataclass
+class TrialResult:
+    """One load-generation trial at a fixed offered rate."""
+    offered_rps: float
+    achieved_rps: float
+    duration: float
+    p50: float
+    p99: float
+    mean: float
+    completed: int
+    shed: int
+    errors: int
+
+    def row(self) -> str:
+        return (f"offered={self.offered_rps:9.1f} achieved={self.achieved_rps:9.1f} "
+                f"p50={self.p50 * 1e3:8.2f}ms p99={self.p99 * 1e3:8.2f}ms "
+                f"n={self.completed} shed={self.shed}")
+
+
+@dataclass
+class PeakResult:
+    peak_rps: float
+    trials: List[TrialResult] = field(default_factory=list)

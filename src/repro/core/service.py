@@ -1,0 +1,172 @@
+"""Microservice graph: services, in-process transport, offload pool.
+
+Each :class:`Service` owns a mailbox and an executor (thread- or fiber-
+backed, chosen *per service* — the paper's incremental migration).  An RPC is
+an enqueue into the destination mailbox plus a reply :class:`Future`; the
+client side of the RPC (serialize / send / wait) runs inside a **carrier**
+spawned by the calling service's backend, which is exactly where the paper's
+thread-vs-fiber difference lives.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Generator, Optional
+
+from .effects import Sleep, Wait
+from .executor import Executor, make_executor
+from .future import Future
+
+
+@dataclass
+class ServiceSpec:
+    name: str
+    handlers: Dict[str, Callable[..., Generator]]
+    n_workers: int = 2
+    backend: Optional[str] = None  # None -> App default
+    state: Dict[str, Any] = field(default_factory=dict)
+
+
+class Service:
+    def __init__(self, app: "App", spec: ServiceSpec, backend: str) -> None:
+        self.app = app
+        self.name = spec.name
+        self.handlers = spec.handlers
+        self.state = dict(spec.state)
+        self.lock = threading.Lock()  # protects self.state across workers
+        self.backend = backend
+        self.executor: Executor = make_executor(backend, app, spec.name,
+                                                spec.n_workers)
+        self.requests = 0
+        self._req_lock = threading.Lock()
+
+    def deliver(self, method: str, payload: Any, reply: Future) -> None:
+        handler = self.handlers.get(method)
+        if handler is None:
+            reply.set_exception(KeyError(f"{self.name}: no method {method!r}"))
+            return
+        with self._req_lock:
+            self.requests += 1
+        self.executor.deliver(handler(self, payload), reply)
+
+
+class OffloadPool:
+    """Fixed thread pool for genuinely-blocking work (jitted JAX steps,
+    checkpoint file writes).  Shared app-wide so fiber schedulers never block."""
+
+    def __init__(self, n_threads: int = 2) -> None:
+        import queue as _q
+        self._q: "_q.SimpleQueue" = _q.SimpleQueue()
+        self._threads = [
+            threading.Thread(target=self._loop, name=f"offload{i}", daemon=True)
+            for i in range(n_threads)
+        ]
+        self._started = False
+
+    def start(self) -> None:
+        if not self._started:
+            for t in self._threads:
+                t.start()
+            self._started = True
+
+    def stop(self) -> None:
+        for _ in self._threads:
+            self._q.put(None)
+
+    def submit(self, fn: Callable[..., Any], *args: Any) -> Future:
+        fut = Future()
+        self._q.put((fn, args, fut))
+        return fut
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fn, args, fut = item
+            try:
+                fut.set_result(fn(*args))
+            except BaseException as exc:
+                fut.set_exception(exc)
+
+
+class App:
+    """A wired microservice application.
+
+    Parameters
+    ----------
+    backend:
+        Default async-call backend for every service: ``"thread"`` (paper
+        baseline, std::async semantics) or ``"fiber"`` (paper technique).
+        Individual :class:`ServiceSpec`s may override.
+    net_latency:
+        Simulated one-way network latency the carrier pays before the send
+        (the container has one host; spawn/scheduling costs are real).
+    """
+
+    def __init__(self, backend: str = "fiber", net_latency: float = 0.0,
+                 offload_threads: int = 2) -> None:
+        self.default_backend = backend
+        self.net_latency = net_latency
+        self.services: Dict[str, Service] = {}
+        self.offload_pool = OffloadPool(offload_threads)
+        self._started = False
+
+    # ------------------------------------------------------------- wiring
+    def add_service(self, spec: ServiceSpec) -> Service:
+        if spec.name in self.services:
+            raise ValueError(f"duplicate service {spec.name!r}")
+        svc = Service(self, spec, spec.backend or self.default_backend)
+        self.services[spec.name] = svc
+        return svc
+
+    def start(self) -> None:
+        from .calibrate import iters_per_second
+        iters_per_second()  # calibrate the Compute burn before serving
+        self.offload_pool.start()
+        for svc in self.services.values():
+            svc.executor.start()
+        self._started = True
+
+    def stop(self) -> None:
+        for svc in self.services.values():
+            svc.executor.stop()
+        self.offload_pool.stop()
+        self._started = False
+
+    def __enter__(self) -> "App":
+        self.start()
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.stop()
+
+    # ---------------------------------------------------------- transport
+    def send(self, dest: str, method: str, payload: Any = None) -> Future:
+        """Enqueue an RPC at ``dest``; returns the reply future.
+        Thread-safe; callable from any thread (incl. the load generator)."""
+        reply = Future()
+        svc = self.services.get(dest)
+        if svc is None:
+            reply.set_exception(KeyError(f"no service {dest!r}"))
+            return reply
+        svc.deliver(method, payload, reply)
+        return reply
+
+    def rpc_carrier(self, dest: str, method: str,
+                    payload: Any) -> Generator:
+        """The generator every async-call carrier runs: client-side network
+        latency, send, block on reply.  Interpreted by a kernel thread
+        (thread backend) or a fiber (fiber backend)."""
+        if self.net_latency > 0:
+            yield Sleep(self.net_latency)
+        reply = self.send(dest, method, payload)
+        value = yield Wait(reply)
+        return value
+
+    def offload(self, fn: Callable[..., Any], *args: Any) -> Future:
+        return self.offload_pool.submit(fn, *args)
+
+    # ------------------------------------------------------ instrumentation
+    def total_spawns(self) -> int:
+        return sum(s.executor.spawns for s in self.services.values())

@@ -1,0 +1,6 @@
+"""Distribution layer: logical sharding rules, mesh helpers, fault tolerance."""
+from .api import (LOGICAL_RULES, ShardCtx, current_ctx, shard_hint,
+                  use_sharding)
+
+__all__ = ["shard_hint", "use_sharding", "ShardCtx", "current_ctx",
+           "LOGICAL_RULES"]

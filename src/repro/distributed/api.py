@@ -1,0 +1,111 @@
+"""Logical-axis sharding with divisibility auto-degrade.
+
+Model code annotates activations with *logical* axis names
+(``shard_hint(x, "batch", "seq", None)``); the active :class:`ShardCtx` maps
+them to mesh axes.  A dim is sharded only when its size divides the product of
+the mapped mesh axes — otherwise the rule silently degrades to replication
+(e.g. qwen2-0.5b's 14 attention heads on a 16-way "model" axis).  Outside any
+context the hints are identity, so model code runs unmodified on one device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+AxisMap = Union[None, str, Tuple[str, ...]]
+
+# Baseline logical rules: FSDP("data") x TP("model"), "pod" = pure DP.
+LOGICAL_RULES: Dict[str, AxisMap] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,                 # sequence-parallel variants override
+    "carry_seq": None,           # remat-saved scan carry (block boundary)
+    "embed": None,
+    "tp": "model",               # heads / ff / vocab activation dim
+    "kv_seq": "model",           # decode KV-cache sequence dim (flash-decode)
+    # weights
+    "fsdp": ("pod", "data"),     # weight d_model dim (ZeRO-3, across pods)
+    "wtp": "model",              # weight ff/heads/vocab dim
+    "experts": "model",          # MoE expert dim
+}
+
+_TLS = threading.local()
+
+
+class ShardCtx:
+    def __init__(self, mesh: jax.sharding.Mesh,
+                 rules: Optional[Dict[str, AxisMap]] = None) -> None:
+        self.mesh = mesh
+        self.rules = dict(LOGICAL_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    # ----------------------------------------------------------- resolution
+    def _axes_for(self, name: Optional[str], dim: int) -> AxisMap:
+        if name is None:
+            return None
+        mapped = self.rules.get(name)
+        if mapped is None:
+            return None
+        axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        # drop axes absent from this mesh (e.g. "pod" on the single-pod mesh)
+        axes = tuple(a for a in axes if a in self.mesh.shape)
+        if not axes:
+            return None
+        total = 1
+        for a in axes:
+            total *= self.mesh.shape[a]
+        if dim % total != 0:
+            return None  # divisibility auto-degrade
+        return axes if len(axes) > 1 else axes[0]
+
+    def spec(self, names: Sequence[Optional[str]],
+             shape: Sequence[int]) -> P:
+        assert len(names) == len(shape), (names, shape)
+        used: set = set()
+        parts = []
+        for name, dim in zip(names, shape):
+            ax = self._axes_for(name, dim)
+            # a mesh axis may appear at most once in a PartitionSpec
+            if ax is not None:
+                flat = (ax,) if isinstance(ax, str) else ax
+                if any(a in used for a in flat):
+                    ax = None
+                else:
+                    used.update(flat)
+            parts.append(ax)
+        return P(*parts)
+
+    def sharding(self, names: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(names, shape))
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: jax.sharding.Mesh,
+                 rules: Optional[Dict[str, AxisMap]] = None):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = ShardCtx(mesh, rules)
+    try:
+        yield _TLS.ctx
+    finally:
+        _TLS.ctx = prev
+
+
+def shard_hint(x: Any, *names: Optional[str]) -> Any:
+    """Constrain ``x``'s sharding by logical axis names (identity w/o ctx)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    if len(names) != x.ndim:
+        raise ValueError(f"shard_hint: {len(names)} names for rank-{x.ndim}")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, ctx.spec(names, x.shape)))

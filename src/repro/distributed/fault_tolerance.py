@@ -1,0 +1,175 @@
+"""Fault tolerance for 1000+-node deployments.
+
+Three mechanisms, all built on the paper's fiber runtime (monitoring is
+wait-dominated async work — exactly the workload fibers are for):
+
+* :class:`HeartbeatMonitor` — every host runs a heartbeat fiber; a monitor
+  fiber sweeps for stale hosts, classifying them as *straggler* (late) or
+  *dead* (missed N intervals), and fires callbacks that trigger
+  checkpoint-restore-based eviction/elastic restart.
+* :func:`elastic_reshard` — re-lay-out a checkpointed state pytree onto a
+  *different* mesh (pod count changed) via ``jax.device_put`` with freshly
+  resolved shardings; checkpoints store only logical shapes so this is
+  always well-defined.
+* :class:`TrainSupervisor` — crash/restart loop glue: owns the
+  CheckpointManager, decides restore-vs-init at startup, periodically saves
+  async, and on failure call-sites simply re-enter ``run()``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from ..core import App, Compute, ServiceSpec, Sleep
+from ..core.future import Future
+
+
+# ------------------------------------------------------------- heartbeats
+@dataclass
+class HostState:
+    host_id: int
+    last_beat: float = 0.0
+    beats: int = 0
+    status: str = "alive"          # alive | straggler | dead
+
+
+def _monitor_loop(svc: Any, payload: Any):
+    """Monitor fiber: sweep heartbeat table, classify, fire callbacks."""
+    interval = svc.state["interval"]
+    while not svc.state.get("stop"):
+        now = time.monotonic()
+        with svc.lock:
+            hosts: Dict[int, HostState] = svc.state["hosts"]
+            for h in hosts.values():
+                age = now - h.last_beat
+                prev = h.status
+                if age > 4 * interval:
+                    h.status = "dead"
+                elif age > 2 * interval:
+                    h.status = "straggler"
+                else:
+                    h.status = "alive"
+                if h.status != prev:
+                    for cb in svc.state["callbacks"]:
+                        cb(h.host_id, prev, h.status)
+        yield Sleep(interval / 2)
+    return "stopped"
+
+
+def _beat(svc: Any, payload: Any):
+    yield Compute(1e-6)
+    with svc.lock:
+        hosts = svc.state["hosts"]
+        h = hosts.setdefault(payload["host"], HostState(payload["host"]))
+        h.last_beat = time.monotonic()
+        h.beats += 1
+        if h.status != "alive":
+            h.status = "alive"
+    return {"ok": True}
+
+
+def _host_loop(svc: Any, payload: Any):
+    """Simulated host: sends heartbeats; can be made a straggler/killed."""
+    host_id = payload["host"]
+    interval = svc.state["interval"]
+    while not svc.state.get("stop"):
+        with svc.lock:
+            behavior = svc.state["behavior"].get(host_id, "alive")
+        if behavior == "dead":
+            return "died"
+        if behavior == "straggler":
+            yield Sleep(3 * interval)
+        from ..core.effects import AsyncRpc, Wait
+        f = yield AsyncRpc("monitor", "beat", {"host": host_id})
+        yield Wait(f)
+        yield Sleep(interval)
+    return "stopped"
+
+
+class HeartbeatMonitor:
+    """Fiber-based cluster health monitor (simulated hosts for CI)."""
+
+    def __init__(self, n_hosts: int = 4, interval: float = 0.05,
+                 backend: str = "fiber") -> None:
+        self.interval = interval
+        self.app = App(backend=backend)
+        self.callbacks: List[Callable[[int, str, str], None]] = []
+        self.app.add_service(ServiceSpec(
+            "monitor", {"beat": _beat, "run": _monitor_loop}, n_workers=2,
+            state={"hosts": {}, "interval": interval,
+                   "callbacks": self.callbacks, "behavior": {}}))
+        self.app.add_service(ServiceSpec(
+            "hosts", {"run": _host_loop}, n_workers=max(n_hosts, 2),
+            state={"interval": interval, "behavior": {}}))
+        self.n_hosts = n_hosts
+
+    def start(self) -> None:
+        self.app.start()
+        self.app.send("monitor", "run", None)
+        mon = self.app.services["monitor"]
+        hosts_svc = self.app.services["hosts"]
+        hosts_svc.state["behavior"] = mon.state["behavior"]
+        for h in range(self.n_hosts):
+            self.app.send("hosts", "run", {"host": h})
+
+    def on_transition(self, cb: Callable[[int, str, str], None]) -> None:
+        self.callbacks.append(cb)
+
+    def set_behavior(self, host: int, behavior: str) -> None:
+        mon = self.app.services["monitor"]
+        with mon.lock:
+            mon.state["behavior"][host] = behavior
+
+    def statuses(self) -> Dict[int, str]:
+        mon = self.app.services["monitor"]
+        with mon.lock:
+            return {h.host_id: h.status
+                    for h in mon.state["hosts"].values()}
+
+    def stop(self) -> None:
+        for name in ("monitor", "hosts"):
+            self.app.services[name].state["stop"] = True
+        time.sleep(2.5 * self.interval)
+        self.app.stop()
+
+
+# --------------------------------------------------------- elastic reshard
+def elastic_reshard(state: Any, shardings: Any) -> Any:
+    """Re-lay-out ``state`` onto the shardings of a (possibly different)
+    mesh.  Works device->device or host->device."""
+    import jax
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, shardings)
+
+
+# ------------------------------------------------------------- supervisor
+class TrainSupervisor:
+    """Checkpoint-driven crash/restart glue around a train loop."""
+
+    def __init__(self, ckpt_mgr: Any, save_every: int = 50) -> None:
+        self.mgr = ckpt_mgr
+        self.save_every = save_every
+        self._last_save: Optional[Future] = None
+
+    def startup(self, init_fn: Callable[[], Any], target: Any,
+                shardings: Any = None):
+        """Restore latest checkpoint if one exists, else initialize."""
+        step = self.mgr.latest_step()
+        if step is None:
+            return 0, init_fn()
+        return self.mgr.restore(target, shardings=shardings)
+
+    def maybe_save(self, step: int, state: Any) -> None:
+        if step % self.save_every == 0 and step > 0:
+            # wait for the previous async save before starting a new one
+            if self._last_save is not None and not self._last_save.done:
+                self._last_save.wait(timeout=600)
+            self._last_save = self.mgr.save_async(step, state)
+
+    def finalize(self, step: int, state: Any) -> None:
+        if self._last_save is not None and not self._last_save.done:
+            self._last_save.wait(timeout=600)
+        if self.mgr.latest_step() != step:
+            self.mgr.save_async(step, state).wait(timeout=600)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+The paper itself is host-side (no device kernels); these kernels implement
+the serving/training hot-spots of the surrounding framework, TPU-natively:
+flash attention (prefill), flash-decode (KV-cache attention), chunked WKV6
+(rwkv6) and a single-pass blocked RG-LRU scan (recurrentgemma).
+
+Each kernel ships three artifacts:
+  kernel.py — pl.pallas_call body + BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (interpret-mode fallback on CPU)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+"""

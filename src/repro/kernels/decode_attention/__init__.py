@@ -1,0 +1,4 @@
+from . import ops, ref
+from .ops import decode_attention
+
+__all__ = ["decode_attention", "ops", "ref"]

@@ -1,0 +1,115 @@
+"""Flash-decode — single-token KV-cache attention, Pallas TPU kernel.
+
+Decode attention is HBM-bandwidth bound: the whole KV cache is streamed once
+per step while the query is tiny.  Tiling: grid (B, Hkv, nK) with the K/V
+sequence innermost; the online-softmax state for the *whole GQA group* of
+q heads (g = Hq/Hkv rows) lives in VMEM scratch, so each K/V tile is read
+exactly once (single HBM pass — the roofline-optimal schedule).
+
+Per-step VMEM at (g, Bk, D) = (8, 512, 128): k/v tiles 2x256 KiB, group
+q/acc 2x4 KiB — far under budget, leaving headroom for the next tile's DMA
+(double buffering).  Cache-slot validity comes from per-sequence ``lengths``
+held in SMEM; K blocks past a sequence's length are skipped entirely.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BK = 512
+
+
+def _fd_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *,
+               scale: float, softcap: float, bk: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    length = len_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(ki * bk < length)                     # skip fully-invalid blocks
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                    # (g, D)
+        k = k_ref[0].astype(jnp.float32)                       # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale        # (g, bk)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("softcap", "scale", "bk", "interpret"))
+def decode_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array, *,
+                         softcap: float = 0.0,
+                         scale: Optional[float] = None,
+                         bk: int = DEFAULT_BK,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B,Hq,D); k/v: (B,T,Hkv,D); lengths: (B,). Returns (B,Hq,D)."""
+    B, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    bk = min(bk, T)
+    assert T % bk == 0, (T, bk)
+
+    qf = q.reshape(B, Hkv, g, D)
+    kf = k.transpose(0, 2, 1, 3)                     # (B, Hkv, T, D)
+    vf = v.transpose(0, 2, 1, 3)
+
+    grid = (B, Hkv, T // bk)
+    kernel = functools.partial(_fd_kernel, scale=scale, softcap=softcap,
+                               bk=bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # lengths (B,)
+            pl.BlockSpec((1, 1, g, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, D),
+                         lambda b, h, ki, Hkv=Hkv: (b * Hkv + h, ki, 0)),
+            pl.BlockSpec((1, bk, D),
+                         lambda b, h, ki, Hkv=Hkv: (b * Hkv + h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qf,
+      kf.reshape(B * Hkv, T, D), vf.reshape(B * Hkv, T, D))
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,23 @@
+"""Public flash-decode op (no VJP needed — decode is inference-only)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from .kernel import decode_attention_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, softcap: float = 0.0,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Single-token GQA attention over a KV cache.
+
+    q: (B,Hq,D); k/v: (B,T,Hkv,D); lengths: (B,) valid slots per sequence.
+    """
+    return decode_attention_fwd(q, k, v, lengths, softcap=softcap,
+                                scale=scale, interpret=_on_cpu())

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for single-token KV-cache attention (flash-decode)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         lengths: jnp.ndarray, *,
+                         softcap: float = 0.0,
+                         scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B,Hq,D); k/v: (B,T,Hkv,D); lengths: (B,) valid cache length
+    (slots [0, length) attended). Returns (B,Hq,D)."""
+    B, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Hkv, g, D)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = jnp.arange(T)[None] < lengths[:, None]          # (B,T)
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p.astype(v.dtype), v)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,144 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+Tiling: grid (B*Hq, nQ, nK), K innermost (sequential on TPU), with the
+online-softmax running state (m, l, acc) in VMEM scratch carried across K
+blocks.  Per-step VMEM working set at (Bq, Bk, D) = (256, 256, 128):
+
+    q tile 256x128 f32 (128 KiB) + k/v tiles (2x128 KiB)
+    + acc 256x128 f32 (128 KiB) + scores 256x256 f32 (256 KiB)  <  1 MiB
+
+well inside the 16 MiB/core budget, leaving room for double buffering of the
+HBM->VMEM pipeline (the paper's overlap-the-waits insight applied at the
+memory hierarchy level).  MXU dims are multiples of 128.  Causal/window
+masking skips fully-masked K blocks via pl.when (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, window: int, softcap: float,
+               bq: int, bk: int, seq_q: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions (q offset by T-S for decode-style alignment)
+    q_off = seq_k - seq_q
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # (bq, bk)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+            + q_off
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        valid = kpos < seq_k
+        if causal:
+            valid &= kpos <= qpos
+        if window:
+            valid &= kpos > qpos - window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]                                  # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                               # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                      # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + p.sum(1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal or window:
+        # block-level skip: entirely-masked K blocks issue no MXU work
+        first_q = qi * bq + q_off
+        last_q = first_q + bq - 1
+        first_k = ki * bk
+        last_k = first_k + bk - 1
+        live = jnp.bool_(True)
+        if causal:
+            live &= first_k <= last_q
+        if window:
+            live &= last_k > first_q - window
+        pl.when(live)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "bq", "bk",
+                     "interpret"))
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0,
+                        scale: Optional[float] = None,
+                        bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B,S,Hq,D); k/v: (B,T,Hkv,D) -> (B,S,Hq,D)."""
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+
+    # layout: fold heads into batch; kv head index = q head // g
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, T, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, T, D)
+
+    grid = (B * Hq, S // bq, T // bk)
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, seq_q=S, seq_k=T)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, qi, ki, g=g: (bh // g, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, qi, ki, g=g: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max
+            pltpu.VMEM((bq, 1), jnp.float32),     # running sum
+            pltpu.VMEM((bq, D), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,50 @@
+"""Public flash-attention op: Pallas forward + recompute-based VJP.
+
+The backward pass recomputes attention through the jnp reference under
+``jax.vjp`` (remat-style).  On TPU the forward kernel is the serving/prefill
+hot-spot; training backward goes through XLA's fused attention gradient.
+CPU (this container) runs the kernel in interpret mode for validation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import flash_attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0,
+                    scale: Optional[float] = None) -> jax.Array:
+    """GQA flash attention. q: (B,S,Hq,D); k/v: (B,T,Hkv,D)."""
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale,
+                               interpret=_on_cpu())
+
+
+def _fwd(q, k, v, causal, window, softcap, scale):
+    out = flash_attention(q, k, v, causal, window, softcap, scale)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, softcap, scale, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: flash_attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

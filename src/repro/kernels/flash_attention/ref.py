@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, window, softcap)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B,S,Hq,D); k/v: (B,T,Hkv,D). fp32 softmax. Returns (B,S,Hq,D)."""
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    qg = q.reshape(B, S, Hkv, g, D)
+    s = jnp.einsum("bshgd,bthd->bhgst", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    valid = jnp.ones((S, T), bool)
+    if causal:
+        # decode-style alignment: q position i corresponds to absolute
+        # position i + (T - S)
+        valid &= kpos <= qpos + (T - S)
+    if window:
+        valid &= kpos > qpos + (T - S) - window
+    s = jnp.where(valid[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", p.astype(v.dtype), v)
+    return out.reshape(B, S, Hq, D)

@@ -1,0 +1,4 @@
+from . import ops, ref
+from .ops import rglru_scan
+
+__all__ = ["rglru_scan", "ops", "ref"]

@@ -1,0 +1,81 @@
+"""Blocked RG-LRU linear scan — Pallas TPU kernel.
+
+XLA's ``associative_scan`` lowers to O(log T) full passes over HBM
+(~2 log2(T) reads/writes of the (B,T,W) tensor).  This kernel makes exactly
+ONE pass: grid (B, W/BW, T/C) with time innermost, the running state held in
+VMEM scratch across chunks, and the C-step recurrence unrolled on the VPU
+over (1, BW) lanes.  For prefill_32k at W=4096 that is a ~2x log2(32768)/2
+= ~7.5x cut in scan HBM traffic (the memory-roofline term).
+
+Tile choice: BW=512 lanes x C=128 steps = 256 KiB fp32 per operand tile —
+two operands + output + state well under VMEM, leaving double-buffer room.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BW = 512
+DEFAULT_CHUNK = 128
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, hT_ref, h_ref, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    def step(t, h):
+        a_t = a_ref[0, t].astype(jnp.float32)         # (BW,)
+        b_t = b_ref[0, t].astype(jnp.float32)
+        h = a_t * h + b_t
+        o_ref[0, t] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[0])
+    h_ref[0] = h
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        hT_ref[...] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "chunk", "interpret"))
+def rglru_scan_fwd(a: jax.Array, b: jax.Array, h0: jax.Array, *,
+                   bw: int = DEFAULT_BW, chunk: int = DEFAULT_CHUNK,
+                   interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """a/b: (B,T,W); h0: (B,W). Returns (h (B,T,W), hT (B,W) fp32)."""
+    B, T, W = a.shape
+    BW = min(bw, W)
+    C = min(chunk, T)
+    assert W % BW == 0 and T % C == 0, (W, BW, T, C)
+
+    grid = (B, W // BW, T // C)
+    kernel = functools.partial(_rglru_kernel, chunk=C)
+    out, hT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C, BW), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, C, BW), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, BW), lambda bi, wi, ci: (bi, wi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, BW), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, BW), lambda bi, wi, ci: (bi, wi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, W), a.dtype),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, BW), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return out, hT

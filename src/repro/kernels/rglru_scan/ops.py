@@ -1,0 +1,33 @@
+"""Public RG-LRU scan op: single-pass Pallas forward + recompute VJP."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from .kernel import rglru_scan_fwd
+from .ref import rglru_scan_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@jax.custom_vjp
+def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """First-order linear recurrence h_t = a_t h_{t-1} + b_t (single HBM pass)."""
+    return rglru_scan_fwd(a, b, h0, interpret=_on_cpu())
+
+
+def _fwd(a, b, h0):
+    return rglru_scan(a, b, h0), (a, b, h0)
+
+
+def _bwd(res, g):
+    a, b, h0 = res
+    _, vjp = jax.vjp(rglru_scan_ref, a, b, h0)
+    return vjp(g)
+
+
+rglru_scan.defvjp(_fwd, _bwd)

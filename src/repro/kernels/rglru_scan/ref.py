@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the first-order linear recurrence (step-by-step)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + b_t.  a/b: (B,T,W); h0: (B,W), fp32.
+    Returns (h (B,T,W), final h (B,W))."""
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    xs = (jnp.moveaxis(a32, 1, 0), jnp.moveaxis(b32, 1, 0))
+    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype), hT

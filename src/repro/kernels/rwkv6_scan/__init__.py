@@ -1,0 +1,4 @@
+from . import ops, ref
+from .ops import wkv6
+
+__all__ = ["wkv6", "ops", "ref"]

@@ -1,0 +1,34 @@
+"""Public WKV6 op: chunked Pallas forward + recompute VJP via the reference."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from .kernel import wkv6_fwd
+from .ref import wkv6_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@jax.custom_vjp
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """WKV6 recurrence. r/k/v/w: (B,T,H,D); u: (H,D); state: (B,H,D,D)."""
+    return wkv6_fwd(r, k, v, w, u, state, interpret=_on_cpu())
+
+
+def _fwd(r, k, v, w, u, state):
+    out = wkv6(r, k, v, w, u, state)
+    return out, (r, k, v, w, u, state)
+
+
+def _bwd(res, g):
+    r, k, v, w, u, state = res
+    _, vjp = jax.vjp(wkv6_ref, r, k, v, w, u, state)
+    return vjp(g)
+
+
+wkv6.defvjp(_fwd, _bwd)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the WKV6 recurrence (step-by-step lax.scan)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    """r/k/v/w: (B,T,H,D); u: (H,D); state: (B,H,D,D) fp32 [k-dim x v-dim].
+
+        a_t   = k_t^T v_t
+        out_t = r_t (S_t + diag(u) a_t)
+        S_t+1 = diag(w_t) S_t + a_t
+
+    Returns (out (B,T,H,D) in r.dtype, final state fp32).
+    """
+    r32, k32, v32, w32 = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u32 = u.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        a = k_t[..., :, None] * v_t[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, S + u32[None, :, :, None] * a)
+        S = w_t[..., :, None] * S + a
+        return S, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r32, k32, v32, w32))
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), state

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Defined as a function (not a module-level constant) so importing this module
+never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialization, and everything else must see the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: 256 chips (16,16) ("data","model").
+    Multi-pod: 512 chips (2,16,16) ("pod","data","model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever devices this host actually has (tests / examples)."""
+    n = jax.device_count()
+    return jax.make_mesh((n,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))

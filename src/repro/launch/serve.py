@@ -1,0 +1,64 @@
+"""Serving driver: ``python -m repro.launch.serve --arch qwen2-0.5b --smoke``
+
+Boots the microservice LLM server (api -> tokenizer -> engine ->
+detokenizer) on the chosen async backend and runs a batch of requests
+through it, reporting throughput and latency percentiles.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config, get_smoke_config
+from ..models import Model
+from ..serving import ServeConfig, build_llm_app
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--backend", default="fiber",
+                    choices=("fiber", "thread"),
+                    help="async-RPC backend (the paper's comparison)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = Model(cfg.with_(remat=False))
+    params = model.init(jax.random.PRNGKey(0))
+    scfg = ServeConfig(max_batch=args.max_batch, max_len=128,
+                       prefill_bucket=32, max_new_tokens=args.max_new)
+    app = build_llm_app(model, params, scfg, backend=args.backend)
+    with app:
+        app.send("engine", "run", None)
+        # warmup / compile
+        app.send("api", "generate", {"text": "warmup"}).wait(timeout=300)
+        lats = []
+        t0 = time.perf_counter()
+        futs = []
+        for i in range(args.requests):
+            ts = time.perf_counter()
+            fut = app.send("api", "generate", {"text": f"request {i}"})
+            fut.add_done_callback(
+                lambda f, ts=ts: lats.append(time.perf_counter() - ts))
+            futs.append(fut)
+        for f in futs:
+            f.wait(timeout=600)
+        dt = time.perf_counter() - t0
+        eng = app.services["engine"].state["engine"]
+        print(f"backend={args.backend} requests={args.requests} "
+              f"wall={dt:.2f}s rps={args.requests / dt:.1f} "
+              f"tokens={eng.generated} tok/s={eng.generated / dt:.1f}")
+        print(f"latency p50={np.percentile(lats, 50) * 1e3:.1f}ms "
+              f"p99={np.percentile(lats, 99) * 1e3:.1f}ms")
+        app.services["engine"].state["stop"] = True
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model zoo: six families, ten assigned architectures."""
+from .config import (ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K,
+                     TRAIN_4K, ModelConfig, ShapeConfig, shape_by_name)
+from .init import abstract_params, count_params, init_params
+from .model import Model, cross_entropy
+
+__all__ = [
+    "Model", "ModelConfig", "ShapeConfig", "cross_entropy",
+    "init_params", "abstract_params", "count_params",
+    "ALL_SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "shape_by_name",
+]

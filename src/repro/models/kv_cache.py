@@ -1,0 +1,149 @@
+"""KV-cache / recurrent-state containers for decode.
+
+All caches are plain pytrees (dicts of arrays) with a leading layer dim that
+aligns with scan-over-layers.  Shapes:
+
+  full    : k/v (L, B, Smax, Hkv, D), pos-indexed scatter insert
+  mla     : latent (L, B, Smax, kv_lora), k_rope (L, B, Smax, 1, dr)
+  window  : k/v (L, B, W, Hkv, D) ring buffer + slot positions (L, B, W)
+  rwkv    : wkv state (L, B, H, Dk, Dv) fp32 + token-shift prevs (L, B, d)
+  lru     : h (L, B, lru_width) fp32 + conv tail (L, B, cw-1, lru_width)
+  encdec  : decoder self full-cache + precomputed cross k/v
+
+``long_500k`` stays feasible for ssm/hybrid because their state is O(1) in
+sequence length (rwkv/lru) or bounded by the attention window (ring buffer).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def _maybe(shape, dtype, abstract: bool):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def _maybe_full(shape, value, dtype, abstract: bool):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.full(shape, value, dtype)
+
+
+# ------------------------------------------------------------------- full
+def init_full_cache(cfg: ModelConfig, n_layers: int, batch: int, max_len: int,
+                    abstract: bool = False) -> Dict[str, Any]:
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": _maybe(shape, cfg.cdtype, abstract),
+            "v": _maybe(shape, cfg.cdtype, abstract)}
+
+
+def update_full_cache(ck: jax.Array, cv: jax.Array, k: jax.Array,
+                      v: jax.Array, pos: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Insert one token per sequence. ck/cv: (B,Smax,H,D); k/v: (B,1,H,D)."""
+    b = jnp.arange(ck.shape[0])
+    ck = ck.at[b, pos].set(k[:, 0].astype(ck.dtype))
+    cv = cv.at[b, pos].set(v[:, 0].astype(cv.dtype))
+    return ck, cv
+
+
+# -------------------------------------------------------------------- MLA
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   abstract: bool = False) -> Dict[str, Any]:
+    L = cfg.n_layers
+    return {
+        "latent": _maybe((L, batch, max_len, cfg.kv_lora_rank), cfg.cdtype,
+                         abstract),
+        "k_rope": _maybe((L, batch, max_len, 1, cfg.qk_rope_dim), cfg.cdtype,
+                         abstract),
+    }
+
+
+def update_mla_cache(clat: jax.Array, crope: jax.Array, latent: jax.Array,
+                     k_rope: jax.Array, pos: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    b = jnp.arange(clat.shape[0])
+    clat = clat.at[b, pos].set(latent[:, 0].astype(clat.dtype))
+    crope = crope.at[b, pos].set(k_rope[:, 0].astype(crope.dtype))
+    return clat, crope
+
+
+# ------------------------------------------------------------------ window
+def init_window_cache(cfg: ModelConfig, n_layers: int, batch: int,
+                      abstract: bool = False) -> Dict[str, Any]:
+    W = cfg.attn_window
+    shape = (n_layers, batch, W, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": _maybe(shape, cfg.cdtype, abstract),
+            "v": _maybe(shape, cfg.cdtype, abstract),
+            "pos": _maybe_full((n_layers, batch, W), -1, jnp.int32, abstract)}
+
+
+def update_window_cache(ck: jax.Array, cv: jax.Array, cpos: jax.Array,
+                        k: jax.Array, v: jax.Array, pos: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Ring insert at slot pos % W. ck/cv: (B,W,H,D), cpos: (B,W)."""
+    W = ck.shape[1]
+    b = jnp.arange(ck.shape[0])
+    slot = pos % W
+    ck = ck.at[b, slot].set(k[:, 0].astype(ck.dtype))
+    cv = cv.at[b, slot].set(v[:, 0].astype(cv.dtype))
+    cpos = cpos.at[b, slot].set(pos)
+    return ck, cv, cpos
+
+
+# -------------------------------------------------------------------- rwkv
+def init_rwkv_state(cfg: ModelConfig, batch: int,
+                    abstract: bool = False) -> Dict[str, Any]:
+    L, d = cfg.n_layers, cfg.d_model
+    H, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    return {
+        "wkv": _maybe((L, batch, H, hs, hs), jnp.float32, abstract),
+        "att_prev": _maybe((L, batch, d), cfg.cdtype, abstract),
+        "ffn_prev": _maybe((L, batch, d), cfg.cdtype, abstract),
+    }
+
+
+# --------------------------------------------------------------------- lru
+def init_hybrid_cache(cfg: ModelConfig, batch: int,
+                      abstract: bool = False) -> Dict[str, Any]:
+    n_rec = sum(1 for i in range(cfg.n_layers)
+                if cfg.block_pattern[i % len(cfg.block_pattern)] == "rec")
+    n_attn = cfg.n_layers - n_rec
+    return {
+        "h": _maybe((n_rec, batch, cfg.lru_width), jnp.float32, abstract),
+        "conv": _maybe((n_rec, batch, cfg.conv_width - 1, cfg.lru_width),
+                       cfg.cdtype, abstract),
+        "attn": init_window_cache(cfg, n_attn, batch, abstract),
+    }
+
+
+# ------------------------------------------------------------------ encdec
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      abstract: bool = False) -> Dict[str, Any]:
+    Ld = cfg.n_layers
+    cross_shape = (Ld, batch, cfg.cross_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "self": init_full_cache(cfg, Ld, batch, max_len, abstract),
+        "cross_k": _maybe(cross_shape, cfg.cdtype, abstract),
+        "cross_v": _maybe(cross_shape, cfg.cdtype, abstract),
+    }
+
+
+# ---------------------------------------------------------------- dispatch
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               abstract: bool = False) -> Dict[str, Any]:
+    if cfg.family == "ssm":
+        return init_rwkv_state(cfg, batch, abstract)
+    if cfg.family == "hybrid":
+        return init_hybrid_cache(cfg, batch, abstract)
+    if cfg.is_encdec:
+        return init_encdec_cache(cfg, batch, max_len, abstract)
+    if cfg.use_mla:
+        return init_mla_cache(cfg, batch, max_len, abstract)
+    return init_full_cache(cfg, cfg.n_layers, batch, max_len, abstract)

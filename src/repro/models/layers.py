@@ -1,0 +1,557 @@
+"""Shared neural-net layers (pure JAX, sharding-hint annotated).
+
+Numerics policy: parameters/compute in bf16, softmax + normalization +
+recurrence states in fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import shard_hint
+from .config import ModelConfig
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float,
+             *, offset: float = 0.0) -> jax.Array:
+    """RMSNorm in fp32; ``offset=1`` gives the Gemma (1+w) convention."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (offset + weight.astype(jnp.float32))).astype(dtype)
+
+
+def group_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               n_groups: int, eps: float) -> jax.Array:
+    """GroupNorm over the last dim (RWKV's ln_x), fp32."""
+    dtype = x.dtype
+    *lead, d = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, n_groups, d // n_groups)
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    x = x.reshape(*lead, d)
+    return (x * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               sections: Tuple[int, ...] = ()) -> jax.Array:
+    """Rotary embedding (NeoX half-rotation layout).
+
+    x: (B, S, H, D); positions: (B, S) — or (3, B, S) for M-RoPE, where the
+    three planes are the temporal / height / width position components and
+    ``sections`` splits the D/2 frequency channels among them (Qwen2-VL).
+    """
+    dtype = x.dtype
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                                  # (D/2,)
+    if positions.ndim == 3:
+        assert sections and sum(sections) == d // 2, (sections, d)
+        # freqs per component plane, then select by section
+        f = positions[..., None].astype(jnp.float32) * inv      # (3, B, S, D/2)
+        sel = jnp.repeat(jnp.arange(len(sections)),
+                         jnp.asarray(sections), total_repeat_length=d // 2)
+        idx = jnp.broadcast_to(sel[None, None, None, :],
+                               (1,) + f.shape[1:3] + (d // 2,))
+        freqs = jnp.take_along_axis(f, idx, axis=0)[0]          # (B, S, D/2)
+    else:
+        freqs = positions[..., None].astype(jnp.float32) * inv  # (B, S, D/2)
+    cos = jnp.cos(freqs)[:, :, None, :]                         # (B, S, 1, D/2)
+    sin = jnp.sin(freqs)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# ------------------------------------------------------------- attention
+def _softcap(scores: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        scores = jnp.tanh(scores / cap) * cap
+    return scores
+
+
+def attention_scores_mask(q_pos: jax.Array, k_pos: jax.Array,
+                          window: int = 0,
+                          causal: bool = True) -> jax.Array:
+    """Additive fp32 mask (..., Q, K) built from absolute positions.
+    Negative k positions mark unwritten cache slots (always invalid)."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    valid = kp >= 0
+    if causal:
+        valid &= kp <= qp
+    if window and window > 0:
+        valid &= kp > qp - window
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def multi_head_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         mask: Optional[jax.Array], *,
+                         softcap: float = 0.0,
+                         scale: Optional[float] = None) -> jax.Array:
+    """Grouped-query attention. q: (B,S,Hq,D), k/v: (B,T,Hkv,D[v]).
+
+    Softmax in fp32.  mask: broadcastable to (B, 1|H, S, T), additive.
+    """
+    B, S, Hq, D = q.shape
+    _, T, Hkv, Dv = v.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, S, Hkv, g, D)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None, None]
+        elif mask.ndim == 3:
+            mask = mask[:, None, None]                 # (B,1,1,S,T)
+        elif mask.ndim == 4:
+            mask = mask[:, :, None]                    # (B,H?,1,S,T)
+        scores = scores + mask
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v.dtype), v)
+    return out.reshape(B, S, Hq, Dv)
+
+
+# ------------------------------------------------------------ projections
+def linear(x: jax.Array, w: jax.Array,
+           b: Optional[jax.Array] = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def gqa_project(x: jax.Array, p: dict, cfg: ModelConfig,
+                positions: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Project + norm + rope. Returns q (B,S,H,D), k/v (B,S,Hkv,D)."""
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, S, H, D)
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, S, Hkv, D)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, S, Hkv, D)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_sections)
+    q = shard_hint(q, "batch", None, "tp", None)
+    return q, k, v
+
+
+# XLA-level flash attention: above this q length, attention runs as a
+# remat'd scan over q blocks with lazily-built per-block masks, so neither
+# the (S,T) score tensor nor the (S,T) mask is ever materialized in full.
+ATTN_CHUNK_THRESHOLD = 4096
+ATTN_CHUNK = 128
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+         q_pos: Optional[jax.Array] = None,
+         k_pos: Optional[jax.Array] = None,
+         causal: bool = True, window: int = 0,
+         softcap: float = 0.0, scale: Optional[float] = None,
+         threshold: Optional[int] = None) -> jax.Array:
+    """Scaled-dot-product GQA attention with lazy masks + q-block chunking.
+
+    q: (B,S,Hq,D); k/v: (B,T,Hkv,D). ``q_pos``/``k_pos``: (B,S)/(B,T)
+    absolute positions (negative k positions = invalid slots).  When both
+    are None and not causal/windowed, no mask is built at all.
+    """
+    B, S = q.shape[:2]
+    T = k.shape[1]
+
+    def mask_for(qp: Optional[jax.Array]) -> Optional[jax.Array]:
+        if not causal and not window and k_pos is None:
+            return None
+        kp = k_pos
+        if kp is None:
+            kp = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                                  (B, T))
+        if qp is None:
+            qp = jnp.broadcast_to(
+                jnp.arange(T - S, T, dtype=jnp.int32)[None], (B, S))
+        return attention_scores_mask(qp, kp, window=window, causal=causal)
+
+    thr = ATTN_CHUNK_THRESHOLD if threshold is None else threshold
+    if S <= thr or S % ATTN_CHUNK != 0:
+        return multi_head_attention(q, k, v, mask_for(q_pos),
+                                    softcap=softcap, scale=scale)
+
+    C = ATTN_CHUNK
+    nb = S // C
+    qb = jnp.moveaxis(q.reshape(B, nb, C, *q.shape[2:]), 1, 0)
+    qp = q_pos
+    if qp is None:
+        qp = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    qpb = jnp.moveaxis(qp.reshape(B, nb, C), 1, 0)
+
+    def body(_, xs):
+        qi, qpi = xs
+        out = multi_head_attention(qi, k, v, mask_for(qpi),
+                                   softcap=softcap, scale=scale)
+        return None, out
+
+    _, outs = jax.lax.scan(jax.checkpoint(body), None, (qb, qpb))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, q.shape[2], v.shape[-1])
+
+
+def sdpa_online(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                causal: bool = True, window: int = 0,
+                softcap: float = 0.0, scale: Optional[float] = None,
+                bq: int = 128, bk: int = 512) -> jax.Array:
+    """Flash-style attention in pure XLA: nested scans over (q, kv) blocks
+    with the online-softmax running state (m, l, acc) carried between kv
+    blocks.  Partial (bq x bk) score tiles are fusion-local — the S x T
+    score tensor never reaches HBM, exactly the Pallas kernel's schedule.
+    Wrapped in remat per q block so the backward recomputes tiles too.
+    """
+    B, S, Hq, D = q.shape
+    _, T, Hkv, Dv = v.shape
+    g = Hq // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    bq = min(bq, S)
+    bk = min(bk, T)
+    if S % bq or T % bk:
+        return sdpa(q, k, v, causal=causal, window=window, softcap=softcap,
+                    scale=scale)
+    nq, nk = S // bq, T // bk
+    q_off = T - S
+
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, Hq, D), 1, 0)        # (nq,B,bq,H,D)
+    kb = jnp.moveaxis(k.reshape(B, nk, bk, Hkv, D), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bk, Hkv, Dv), 1, 0)
+
+    def q_block(_, xs):
+        qi_idx, qblk = xs                                        # (B,bq,H,D)
+        qg = qblk.reshape(B, bq, Hkv, g, D)
+
+        def kv_block(carry, kxs):
+            m, l, acc = carry
+            ki_idx, kblk, vblk = kxs
+            s = jnp.einsum("bshgd,bthd->bhgst", qg, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            qp = qi_idx * bq + q_off \
+                + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kp = ki_idx * bk \
+                + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            valid = jnp.ones((bq, bk), bool)
+            if causal:
+                valid &= kp <= qp
+            if window:
+                valid &= kp > qp - window
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgst,bthd->bhgsd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, bq, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0),
+            (jnp.arange(nk, dtype=jnp.int32), kb, vb))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, jnp.moveaxis(out, 3, 1).reshape(B, bq, Hq, Dv)
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_block), None,
+                           (jnp.arange(nq, dtype=jnp.int32), qb))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, Hq, Dv).astype(q.dtype)
+
+
+def gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array,
+               mask: Optional[jax.Array], p: dict,
+               cfg: ModelConfig, *,
+               q_pos: Optional[jax.Array] = None,
+               k_pos: Optional[jax.Array] = None,
+               causal: bool = True) -> jax.Array:
+    """Attention + output projection. Returns (B,S,d).
+
+    If ``mask`` is given it is used directly (decode paths); otherwise the
+    mask is built lazily from positions inside :func:`sdpa` (chunked for
+    long q), or via the online-softmax (flash) path when ``cfg.attn_online``.
+    """
+    B, S, H, D = q.shape
+    if mask is not None:
+        out = multi_head_attention(q, k, v, mask,
+                                   softcap=cfg.attn_logit_softcap)
+    elif cfg.attn_online and S > 1 and q_pos is None and k_pos is None:
+        out = sdpa_online(q, k, v, causal=causal, window=cfg.attn_window,
+                          softcap=cfg.attn_logit_softcap)
+    else:
+        out = sdpa(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal,
+                   window=cfg.attn_window, softcap=cfg.attn_logit_softcap,
+                   threshold=cfg.attn_chunk_threshold)
+    out = linear(out.reshape(B, S, H * v.shape[-1]), p["wo"])
+    return shard_hint(out, "batch", "seq", None)
+
+
+def gqa_attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
+                        positions: jax.Array, mask: Optional[jax.Array],
+                        ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full GQA attention (train/prefill). Returns (output, (k, v))."""
+    q, k, v = gqa_project(x, p, cfg, positions)
+    return gqa_attend(q, k, v, mask, p, cfg), (k, v)
+
+
+# ----------------------------------------------------------------- MLA
+def mla_project_q(x: jax.Array, p: dict, cfg: ModelConfig,
+                  positions: jax.Array) -> jax.Array:
+    """Queries through the low-rank path: (B,S,H,nope+rope)."""
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    ql = rms_norm(linear(x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+    q = linear(ql, p["wq_b"]).reshape(B, S, H, dn + dr)
+    q_rope = apply_rope(q[..., dn:], positions, cfg.rope_theta)
+    q = jnp.concatenate([q[..., :dn], q_rope], axis=-1)
+    return shard_hint(q, "batch", None, "tp", None)
+
+
+def mla_latent(x: jax.Array, p: dict, cfg: ModelConfig,
+               positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """The compressed KV: latent (B,S,kv_lora) + shared k_rope (B,S,1,dr).
+    This pair is exactly what MLA caches for decode."""
+    kv_a = linear(x, p["wkv_a"])
+    latent = rms_norm(kv_a[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv_a[..., None, cfg.kv_lora_rank:], positions,
+                        cfg.rope_theta)
+    return latent, k_rope
+
+
+def mla_attend(qq: jax.Array, latent: jax.Array, k_rope: jax.Array,
+               mask: Optional[jax.Array], p: dict, cfg: ModelConfig, *,
+               q_pos: Optional[jax.Array] = None,
+               k_pos: Optional[jax.Array] = None,
+               causal: bool = True) -> jax.Array:
+    """Latent-space ("weight-absorbed") MLA attention.
+
+    Instead of expanding the latent to per-head K/V — (B,T,H,dn+dv), 343 GB
+    at 32k context for MiniCPM3 — the up-projection W_uk is absorbed into
+    the query and W_uv into the output:
+
+        scores = (q_nope @ W_uk) . latent + q_rope . k_rope
+        out    = (softmax(scores) @ latent) @ W_uv
+
+    so the only T-sized tensors are the latent (r=256/channel) and the
+    shared rotary key — exactly what the MLA cache stores.  Long q is
+    chunked like :func:`sdpa`.
+    """
+    B, S = qq.shape[:2]
+    H, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    r = cfg.kv_lora_rank
+    T = latent.shape[1]
+    scale = (dn + dr) ** -0.5
+
+    w = p["wkv_b"].reshape(r, H, dn + dv)
+    w_uk, w_uv = w[..., :dn], w[..., dn:]
+    q_nope, q_rope = qq[..., :dn], qq[..., dn:]
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk.astype(qq.dtype))
+    kr = k_rope[:, :, 0]                                     # (B,T,dr)
+
+    def mask_for(qp):
+        if mask is not None:
+            return mask
+        if not causal and k_pos is None:
+            return None
+        kp = k_pos
+        if kp is None:
+            kp = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                                  (B, T))
+        if qp is None:
+            qp = jnp.broadcast_to(
+                jnp.arange(T - S, T, dtype=jnp.int32)[None], (B, S))
+        return attention_scores_mask(qp, kp, causal=causal)
+
+    def attend_block(qa, qr, qp):
+        s = (jnp.einsum("bshr,btr->bhst", qa, latent,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bshp,btp->bhst", qr, kr,
+                          preferred_element_type=jnp.float32)) * scale
+        m = mask_for(qp)
+        if m is not None:
+            if m.ndim == 3:
+                m = m[:, None]
+            s = s + m
+        probs = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", probs.astype(latent.dtype),
+                         latent)
+        return jnp.einsum("bshr,rhv->bshv", ctx, w_uv.astype(ctx.dtype))
+
+    if S <= cfg.attn_chunk_threshold or S % ATTN_CHUNK != 0 \
+            or mask is not None:
+        out = attend_block(q_abs, q_rope, q_pos)
+    else:
+        C = ATTN_CHUNK
+        nb = S // C
+        qp = q_pos
+        if qp is None:
+            qp = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                  (B, S))
+        xs = (jnp.moveaxis(q_abs.reshape(B, nb, C, H, r), 1, 0),
+              jnp.moveaxis(q_rope.reshape(B, nb, C, H, dr), 1, 0),
+              jnp.moveaxis(qp.reshape(B, nb, C), 1, 0))
+
+        def body(_, x):
+            return None, attend_block(*x)
+
+        _, outs = jax.lax.scan(jax.checkpoint(body), None, xs)
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, dv)
+
+    out = linear(out.reshape(B, S, H * dv), p["wo"])
+    return shard_hint(out, "batch", "seq", None)
+
+
+def mla_attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
+                        positions: jax.Array, mask: Optional[jax.Array],
+                        ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full MLA attention (train/prefill). Returns (output, (latent, k_rope))."""
+    qq = mla_project_q(x, p, cfg, positions)
+    latent, k_rope = mla_latent(x, p, cfg, positions)
+    return mla_attend(qq, latent, k_rope, mask, p, cfg), (latent, k_rope)
+
+
+# ----------------------------------------------------------------- MLPs
+def swiglu_mlp(x: jax.Array, p: dict) -> jax.Array:
+    h = jax.nn.silu(linear(x, p["w_gate"])) * linear(x, p["w_up"])
+    h = shard_hint(h, "batch", None, "tp")
+    return shard_hint(linear(h, p["w_down"]), "batch", "seq", None)
+
+
+def gelu_mlp(x: jax.Array, p: dict) -> jax.Array:
+    h = jax.nn.gelu(linear(x, p["w_up"]))
+    h = shard_hint(h, "batch", None, "tp")
+    return shard_hint(linear(h, p["w_down"]), "batch", "seq", None)
+
+
+# ------------------------------------------------------------------ MoE
+def moe_ffn(x: jax.Array, p: dict, cfg: ModelConfig,
+            capacity_factor: Optional[float] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k routed SwiGLU experts, sort-based capacity dispatch.
+
+    Tokens are grouped per batch row; within each group, (token, expert)
+    assignments are sorted by expert id and scattered into an
+    (E, C) capacity buffer — pure XLA ops (argsort/cumsum/scatter), no ragged
+    support needed.  Over-capacity assignments are dropped (counted in the
+    aux output).  Returns (output, aux_loss).
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    cf = capacity_factor if capacity_factor is not None \
+        else cfg.moe_capacity_factor
+    C = max(int(S * K / E * cf), K)
+
+    gate_logits = linear(x, p["router"].astype(x.dtype)) \
+        .astype(jnp.float32)                                       # (B,S,E)
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                         # (B,S,K)
+    top_w = top_w / jnp.clip(top_w.sum(-1, keepdims=True), 1e-9)   # renorm
+
+    # ---- load-balancing aux loss (Switch-style), fp32
+    me = probs.mean(axis=(0, 1))                                   # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        jnp.ones((B * S * K,), jnp.float32)) / (B * S * K)
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    # ---- per-group sort-based dispatch
+    flat_e = top_e.reshape(B, S * K)                               # (B, N)
+    flat_w = top_w.reshape(B, S * K).astype(x.dtype)
+    tok_id = jnp.repeat(jnp.arange(S), K)[None].repeat(B, 0)       # (B, N)
+
+    order = jnp.argsort(flat_e, axis=-1)                           # stable
+    e_sorted = jnp.take_along_axis(flat_e, order, -1)
+    t_sorted = jnp.take_along_axis(tok_id, order, -1)
+    w_sorted = jnp.take_along_axis(flat_w, order, -1)
+
+    # position within expert = index - start-of-segment (the assignments are
+    # sorted by expert id, so segments are contiguous).  O(N) — no (N,E)
+    # one-hot cumsum, which would be TB-scale at 32k x top-8 x 64e.
+    N = e_sorted.shape[1]
+    idx = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[None], e_sorted.shape)
+    is_new = jnp.concatenate(
+        [jnp.ones((B, 1), bool), e_sorted[:, 1:] != e_sorted[:, :-1]], axis=1)
+    seg_start = jax.lax.cummax(jnp.where(is_new, idx, 0), axis=1)
+    pos_in_e = idx - seg_start
+    keep = pos_in_e < C
+    slot = e_sorted * C + jnp.where(keep, pos_in_e, 0)             # (B,N)
+
+    # gathers/scatters are expressed per batch row via vmap so they lower
+    # with operand batching dims — GSPMD keeps the batch axis sharded
+    # (a flat .at[arange(B)[:,None], idx] scatter replicates the (B,S,d)
+    # operand and all-reduces it over BOTH mesh axes: measured 3 TB/step
+    # of fp32 all-reduce on grok-1 before this change)
+    xs = jax.vmap(lambda row, t: jnp.take(row, t, axis=0))(
+        x, t_sorted)                                               # (B,N,d)
+    buf = jax.vmap(lambda s, v: jnp.zeros((E * C, d), x.dtype)
+                   .at[s].add(v))(slot, jnp.where(keep[..., None], xs, 0))
+    buf = buf.reshape(B, E, C, d)
+    buf = shard_hint(buf, "batch", "experts", None, None)
+
+    # ---- expert SwiGLU: (B,E,C,d) x (E,d,f)
+    ks = cfg.moe_expert_split
+    if ks > 1:
+        # half-expert sharding: weights are stored pre-split as
+        # (E*ks, d, f/ks); replicate each expert's tokens to its ks
+        # sub-experts so compute is sub-expert-local, then reduce the ks
+        # partial down-projections — a ks-chip reduction instead of a
+        # TP-wide all-reduce when E*ks divides the "model" axis.
+        bufs = jnp.repeat(buf, ks, axis=1)            # (B,E*ks,C,d)
+        bufs = shard_hint(bufs, "batch", "experts", None, None)
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", bufs,
+                                   p["w_gate"].astype(x.dtype))) \
+            * jnp.einsum("becd,edf->becf", bufs, p["w_up"].astype(x.dtype))
+        y_s = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+        y_e = y_s.reshape(B, E, ks, C, d).sum(axis=2)
+    else:
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf,
+                                   p["w_gate"].astype(x.dtype))) \
+            * jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(x.dtype))
+        y_e = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+    y_e = shard_hint(y_e, "batch", "experts", None, None).reshape(B, E * C, d)
+
+    # ---- gather back + weighted combine (vmap'd: batch stays sharded)
+    ys = jax.vmap(lambda row, s: jnp.take(row, s, axis=0))(y_e, slot)
+    ys = ys * (w_sorted * keep.astype(x.dtype))[..., None]
+    out = jax.vmap(lambda t, v: jnp.zeros((S, d), x.dtype)
+                   .at[t].add(v))(t_sorted, ys)
+    return shard_hint(out, "batch", "seq", None), aux
+
+
+# ------------------------------------------------------------- embeddings
+def embed_tokens(tokens: jax.Array, table: jax.Array,
+                 scale: bool = False) -> jax.Array:
+    x = jnp.take(table, tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(table.shape[-1] ** 0.5, x.dtype)
+    return shard_hint(x, "batch", "seq", None)
+
+
+def lm_logits(x: jax.Array, table: jax.Array,
+              softcap: float = 0.0) -> jax.Array:
+    logits = jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+    logits = _softcap(logits.astype(jnp.float32), softcap)
+    return shard_hint(logits, "batch", None, "tp")

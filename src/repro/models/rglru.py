@@ -1,0 +1,323 @@
+"""Griffin-style hybrid blocks (RecurrentGemma): RG-LRU + local attention.
+
+Layer pattern (rec, rec, attn) repeating.  The recurrent block:
+
+    y = gelu(W_y x)                               (gate branch)
+    u = conv1d_causal(W_x x)                      (depthwise, width 4)
+    r_t = sigmoid(blockdiag(A_r) u_t)             (recurrence gate)
+    i_t = sigmoid(blockdiag(A_i) u_t)             (input gate)
+    a_t = exp(-c * softplus(L) * r_t)             (data-dependent decay, c=8)
+    h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t u_t)   (RG-LRU)
+    out = W_o (h * y)
+
+The first-order linear recurrence is evaluated with
+``jax.lax.associative_scan`` (O(log T) depth — TPU-native adaptation of the
+paper's GPU linear-scan kernel); the Pallas blocked kernel in
+``repro.kernels.rglru_scan`` is the fused fast path.  Local attention uses a
+ring-buffer window cache, so ``long_500k`` decode state stays bounded.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import shard_hint
+from .config import ModelConfig
+from .kv_cache import update_window_cache
+from .layers import (attention_scores_mask, embed_tokens, gqa_attend,
+                     gqa_project, linear, lm_logits, rms_norm)
+
+RGLRU_C = 8.0
+
+
+# ----------------------------------------------------------------- RG-LRU
+def _gates(u: jax.Array, p: Dict[str, Any], n_blocks: int
+           ) -> Tuple[jax.Array, jax.Array]:
+    """Block-diagonal gate projections (RecurrentGemma convention)."""
+    B, T, W = u.shape
+    ub = u.reshape(B, T, n_blocks, W // n_blocks)
+    ra = jnp.einsum("btnw,nwv->btnv", ub,
+                    p["gate_a_w"].astype(u.dtype)).reshape(B, T, W)
+    ia = jnp.einsum("btnw,nwv->btnv", ub,
+                    p["gate_i_w"].astype(u.dtype)).reshape(B, T, W)
+    r = jax.nn.sigmoid(ra + p["gate_a_b"].astype(u.dtype))
+    i = jax.nn.sigmoid(ia + p["gate_i_b"].astype(u.dtype))
+    return r, i
+
+
+def rglru_ref(u: jax.Array, r: jax.Array, i: jax.Array,
+              lam: jax.Array, h0: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """RG-LRU via associative scan, fp32. u/r/i: (B,T,W); h0: (B,W).
+    Returns (h (B,T,W), final state)."""
+    u32, r32, i32 = (t.astype(jnp.float32) for t in (u, r, i))
+    log_a = -RGLRU_C * jax.nn.softplus(lam.astype(jnp.float32)) * r32
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i32 * u32)
+    # prepend h0 as the t=0 element: h_t = a_t h_{t-1} + b_t
+    a_ext = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    b_ext = jnp.concatenate([h0[:, None].astype(jnp.float32), gated], axis=1)
+
+    def combine(l, rgt):
+        al, bl = l
+        ar, br = rgt
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a_ext, b_ext), axis=1)
+    return h[:, 1:].astype(u.dtype), h[:, -1]
+
+
+def rglru_step(u: jax.Array, r: jax.Array, i: jax.Array,
+               lam: jax.Array, h0: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step (T=1)."""
+    u32, r32, i32 = (t.astype(jnp.float32) for t in (u[:, 0], r[:, 0], i[:, 0]))
+    log_a = -RGLRU_C * jax.nn.softplus(lam.astype(jnp.float32)) * r32
+    a = jnp.exp(log_a)
+    h = a * h0 + jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i32 * u32)
+    return h[:, None].astype(u.dtype), h
+
+
+def causal_conv1d(u: jax.Array, w: jax.Array, b: jax.Array,
+                  tail: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. u: (B,T,W); w: (cw,W); tail: (B,cw-1,W).
+    Returns (out (B,T,W), new tail)."""
+    cw = w.shape[0]
+    ext = jnp.concatenate([tail.astype(u.dtype), u], axis=1)   # (B,cw-1+T,W)
+    out = jnp.zeros_like(u)
+    for j in range(cw):
+        out = out + ext[:, j:j + u.shape[1]] * w[cw - 1 - j][None, None]
+    out = out + b[None, None].astype(u.dtype)
+    new_tail = ext[:, -(cw - 1):] if cw > 1 else tail
+    return out, new_tail
+
+
+# ------------------------------------------------------------------ blocks
+def recurrent_block(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig,
+                    h0: jax.Array, conv_tail: jax.Array, decode: bool
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Temporal-mix via RG-LRU. Returns (out, new_h, new_conv_tail)."""
+    y = jax.nn.gelu(linear(x, p["w_y"]))
+    u = linear(x, p["w_x"])
+    u = shard_hint(u, "batch", None, "tp")
+    u, new_tail = causal_conv1d(u, p["conv_w"], p["conv_b"], conv_tail)
+    r, i = _gates(u, p, cfg.n_heads)
+    if decode:
+        h, hT = rglru_step(u, r, i, p["lam"], h0)
+    else:
+        h, hT = rglru_ref(u, r, i, p["lam"], h0)
+    out = linear(h * y, p["w_o"])
+    return shard_hint(out, "batch", "seq", None), hT, new_tail
+
+
+def hybrid_block(x: jax.Array, kind: str, p: Dict[str, Any],
+                 cfg: ModelConfig, state: Dict[str, jax.Array],
+                 positions: jax.Array, mask: Any, decode: bool,
+                 pos: jax.Array
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One (temporal-mix + MLP) griffin block; kind in {rec, attn}."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps, offset=1.0)
+    new_state = dict(state)
+    if kind == "rec":
+        out, hT, tail = recurrent_block(h, p["rec"], cfg, state["h"],
+                                        state["conv"], decode)
+        new_state["h"], new_state["conv"] = hT, tail
+    else:
+        if decode:
+            q, k_new, v_new = gqa_project(h, p["attn"], cfg, pos[:, None])
+            ck, cv, cpos = update_window_cache(
+                state["k"], state["v"], state["pos"], k_new, v_new, pos)
+            amask = attention_scores_mask(pos[:, None], cpos, causal=False,
+                                          window=cfg.attn_window)
+            out = gqa_attend(q, ck, cv, amask, p["attn"], cfg)
+            new_state.update({"k": ck, "v": cv, "pos": cpos})
+        else:
+            q, k, v = gqa_project(h, p["attn"], cfg, positions)
+            out = gqa_attend(q, k, v, mask, p["attn"], cfg)
+            new_state.update(window_cache_from_chunk(k, v, cfg.attn_window))
+    x = x + out
+    h = rms_norm(x, p["ln2"], cfg.norm_eps, offset=1.0)
+    # GeGLU MLP (gemma convention)
+    ff = jax.nn.gelu(linear(h, p["mlp"]["w_gate"])) * linear(h, p["mlp"]["w_up"])
+    ff = shard_hint(ff, "batch", None, "tp")
+    x = x + linear(ff, p["mlp"]["w_down"])
+    return x, new_state
+
+
+def window_cache_from_chunk(k: jax.Array, v: jax.Array,
+                            W: int) -> Dict[str, jax.Array]:
+    """Build the ring cache from a prefill chunk: the last W tokens land at
+    slot pos % W so subsequent decode inserts stay consistent."""
+    B, S = k.shape[:2]
+    if S >= W:
+        last_pos = jnp.arange(S - W, S, dtype=jnp.int32)
+        slots = last_pos % W
+        ck = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(
+            k[:, -W:])
+        cv = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(
+            v[:, -W:])
+        cpos = jnp.zeros((B, W), jnp.int32).at[:, slots].set(
+            jnp.broadcast_to(last_pos, (B, W)))
+    else:
+        pos = jnp.arange(S, dtype=jnp.int32)
+        ck = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, :S].set(k)
+        cv = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, :S].set(v)
+        cpos = jnp.full((B, W), -1, jnp.int32).at[:, :S].set(
+            jnp.broadcast_to(pos, (B, S)))
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+# ------------------------------------------------------------------- model
+def _pattern_layout(cfg: ModelConfig):
+    """Group layers into full pattern repeats + remainder; returns
+    (n_groups, remainder_kinds)."""
+    P = len(cfg.block_pattern)
+    n_groups = cfg.n_layers // P
+    rem = tuple(cfg.block_pattern[i % P] for i in range(n_groups * P,
+                                                        cfg.n_layers))
+    return n_groups, rem
+
+
+def forward(params: Dict[str, Any], cfg: ModelConfig,
+            inputs: Dict[str, jax.Array], cache: Dict[str, Any],
+            decode: bool, pos: jax.Array, emit_cache: bool = True
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Scan over pattern groups; remainder layers run unrolled.
+
+    cache: {"h": (Lr,B,W), "conv": (Lr,B,cw-1,W), "attn": window cache}.
+    ``emit_cache=False`` (training) skips stacking per-layer state outputs.
+    """
+    x = embed_tokens(inputs["tokens"], params["embed"],
+                     scale=cfg.embed_scale).astype(cfg.cdtype)
+    B, S = inputs["tokens"].shape
+    if decode:
+        positions, mask = pos[:, None], None
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        mask = None   # lazy/chunked masks inside the attention
+
+    n_groups, rem = _pattern_layout(cfg)
+    P = len(cfg.block_pattern)
+    rec_per_group = sum(1 for k in cfg.block_pattern if k == "rec")
+    attn_per_group = P - rec_per_group
+
+    def group_body(h, xs):
+        pg, rec_state, attn_state = xs
+        ri = ai = 0
+        new_rec, new_attn = [], []
+        for kind in cfg.block_pattern:
+            if kind == "rec":
+                st = {"h": rec_state["h"][ri], "conv": rec_state["conv"][ri]}
+                h, ns = hybrid_block(h, kind, _ith(pg["rec"], ri), cfg, st,
+                                     positions, mask, decode, pos)
+                new_rec.append({"h": ns["h"], "conv": ns["conv"]})
+                ri += 1
+            else:
+                st = {"k": attn_state["k"][ai], "v": attn_state["v"][ai],
+                      "pos": attn_state["pos"][ai]}
+                h, ns = hybrid_block(h, kind, _ith(pg["attn"], ai), cfg, st,
+                                     positions, mask, decode, pos)
+                new_attn.append({k: ns[k] for k in ("k", "v", "pos")})
+                ai += 1
+        stack = lambda ds: {k: jnp.stack([d[k] for d in ds]) for k in ds[0]}
+        if not emit_cache:
+            return h, None
+        return h, (stack(new_rec), stack(new_attn))
+
+    body_fn = jax.checkpoint(group_body) if cfg.remat else group_body
+
+    # split stacked params/caches into scan groups + remainder
+    Lr_scan = n_groups * rec_per_group
+    La_scan = n_groups * attn_per_group
+    rec_p_scan = jax.tree.map(lambda a: _regroup(a, n_groups),
+                              _take(params["rec_blocks"], 0, Lr_scan))
+    attn_p_scan = jax.tree.map(lambda a: _regroup(a, n_groups),
+                               _take(params["attn_blocks"], 0, La_scan))
+    rec_c_scan = jax.tree.map(lambda a: _regroup(a, n_groups),
+                              _take_cache(cache, "rec", 0, Lr_scan))
+    attn_c_scan = jax.tree.map(lambda a: _regroup(a, n_groups),
+                               _take_cache(cache, "attn", 0, La_scan))
+
+    x, scanned = jax.lax.scan(
+        body_fn, x, ({"rec": rec_p_scan, "attn": attn_p_scan},
+                     rec_c_scan, attn_c_scan))
+
+    # remainder layers (unrolled)
+    ri, ai = Lr_scan, La_scan
+    rec_tail, attn_tail = [], []
+    for kind in rem:
+        if kind == "rec":
+            st = {"h": cache["h"][ri], "conv": cache["conv"][ri]}
+            x, ns = hybrid_block(x, kind,
+                                 jax.tree.map(lambda a: a[ri],
+                                              params["rec_blocks"]),
+                                 cfg, st, positions, mask, decode, pos)
+            rec_tail.append({"h": ns["h"], "conv": ns["conv"]})
+            ri += 1
+        else:
+            st = {k: cache["attn"][k][ai] for k in ("k", "v", "pos")}
+            x, ns = hybrid_block(x, kind,
+                                 jax.tree.map(lambda a: a[ai],
+                                              params["attn_blocks"]),
+                                 cfg, st, positions, mask, decode, pos)
+            attn_tail.append({k: ns[k] for k in ("k", "v", "pos")})
+            ai += 1
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps, offset=1.0)
+    if not emit_cache:
+        return x, cache
+
+    new_rec, new_attn = scanned
+    new_rec = jax.tree.map(_flatten_groups, new_rec)
+    new_attn = jax.tree.map(_flatten_groups, new_attn)
+
+    def cat(head, tail_list, key):
+        if not tail_list:
+            return head
+        tail = jnp.stack([t[key] for t in tail_list])
+        return jnp.concatenate([head, tail.astype(head.dtype)], axis=0)
+
+    new_cache = {
+        "h": cat(new_rec["h"].astype(jnp.float32), rec_tail, "h"),
+        "conv": cat(new_rec["conv"], rec_tail, "conv"),
+        "attn": {k: cat(new_attn[k], attn_tail, k)
+                 for k in ("k", "v", "pos")},
+    }
+    return x, new_cache
+
+
+def decode_step(params: Dict[str, Any], cfg: ModelConfig,
+                cache: Dict[str, Any], tokens: jax.Array, pos: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    x, new_cache = forward(params, cfg, {"tokens": tokens}, cache,
+                           decode=True, pos=pos)
+    logits = lm_logits(x, params["lm_head"], cfg.logit_softcap)
+    return logits[:, -1], new_cache
+
+
+# -------------------------------------------------------------- utilities
+def _ith(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _take(tree, start, end):
+    return jax.tree.map(lambda a: a[start:end], tree)
+
+
+def _take_cache(cache, which, start, end):
+    if which == "rec":
+        return {"h": cache["h"][start:end], "conv": cache["conv"][start:end]}
+    return {k: cache["attn"][k][start:end] for k in ("k", "v", "pos")}
+
+
+def _regroup(a: jax.Array, n_groups: int) -> jax.Array:
+    """(G*n, ...) -> (G, n, ...) for scan-over-groups."""
+    return a.reshape((n_groups, a.shape[0] // n_groups) + a.shape[1:])
+
+
+def _flatten_groups(a: jax.Array) -> jax.Array:
+    """(G, n, ...) -> (G*n, ...)."""
+    return a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:])

@@ -1,0 +1,172 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay.
+
+Time-mixing uses the WKV6 linear recurrence over per-head (Dk x Dv) states:
+
+    a_t   = k_t^T v_t                      (outer product)
+    out_t = r_t (S_t + diag(u) a_t)
+    S_t+1 = diag(w_t) S_t + a_t            (w_t data-dependent, per channel)
+
+plus LoRA-based data-dependent token-shift interpolation (ddlerp) for the
+five mix targets (w,k,v,r,g) and a LoRA'd decay.  Channel-mixing is the
+squared-ReLU RWKV FFN.  State is O(1) in sequence length — ``long_500k`` runs.
+
+The time recurrence here is the jnp reference (lax.scan over T); the Pallas
+chunked kernel in ``repro.kernels.rwkv6_scan`` is the TPU-optimized path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import shard_hint
+from .config import ModelConfig
+from .layers import embed_tokens, group_norm, linear, lm_logits
+
+TM_LORA = 32      # ddlerp LoRA dim
+DECAY_LORA = 64   # decay LoRA dim
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dtype)
+
+
+# ------------------------------------------------------------- time mixing
+def _ddlerp(x: jax.Array, xx: jax.Array, p: Dict[str, Any]
+            ) -> Tuple[jax.Array, ...]:
+    """Data-dependent lerp between x_t and x_{t-1} for the 5 mix targets."""
+    B, T, d = x.shape
+    base = x + xx * p["mu_x"].astype(x.dtype)
+    stacked = jnp.tanh(linear(base, p["tm_w1"])).reshape(B, T, 5, TM_LORA)
+    delta = jnp.einsum("btki,kid->btkd", stacked,
+                       p["tm_w2"].astype(x.dtype))          # (B,T,5,d)
+    mus = jnp.stack([p["mu_w"], p["mu_k"], p["mu_v"], p["mu_r"], p["mu_g"]])
+    mixed = x[:, :, None] + xx[:, :, None] * (mus.astype(x.dtype) + delta)
+    return tuple(mixed[:, :, i] for i in range(5))
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Reference WKV6 recurrence (fp32 state).
+
+    r/k/v/w: (B,T,H,D); u: (H,D); state: (B,H,D,D) [k-dim x v-dim].
+    Returns (out (B,T,H,D), final state).
+    """
+    r32, k32, v32, w32 = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u32 = u.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                            # (B,H,D)
+        a = k_t[..., :, None] * v_t[..., None, :]           # (B,H,Dk,Dv)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         S + u32[None, :, :, None] * a)
+        S = w_t[..., :, None] * S + a
+        return S, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r32, k32, v32, w32))
+    state, outs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), state
+
+
+def time_mix(x: jax.Array, x_prev: jax.Array, wkv_state: jax.Array,
+             p: Dict[str, Any], cfg: ModelConfig, use_kernel: bool = False
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """RWKV6 attention replacement.
+
+    x: (B,T,d); x_prev: (B,d) last token of previous chunk;
+    wkv_state: (B,H,D,D) fp32.  Returns (out, new_x_prev, new_state).
+    """
+    B, T, d = x.shape
+    H, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xx = shifted - x
+    xw, xk, xv, xr, xg = _ddlerp(x, xx, p)
+
+    r = linear(xr, p["wr"]).reshape(B, T, H, hs)
+    k = linear(xk, p["wk"]).reshape(B, T, H, hs)
+    v = linear(xv, p["wv"]).reshape(B, T, H, hs)
+    g = jax.nn.silu(linear(xg, p["wg"]))
+
+    # data-dependent decay, fp32: w = exp(-exp(w0 + lora(xw)))
+    dec = linear(jnp.tanh(linear(xw, p["decay_w1"])), p["decay_w2"])
+    logw = p["w0"].astype(jnp.float32) + dec.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw)).reshape(B, T, H, hs)
+
+    if use_kernel:
+        from ..kernels.rwkv6_scan import ops as wkv_ops
+        out, new_state = wkv_ops.wkv6(r, k, v, w, p["u"], wkv_state)
+    else:
+        out, new_state = wkv6_ref(r, k, v, w, p["u"], wkv_state)
+
+    out = group_norm(out.reshape(B, T, d), p["ln_x_w"], p["ln_x_b"],
+                     H, eps=1e-5 * 8)  # rwkv convention: eps*head_size/8
+    out = linear(out * g, p["wo"])
+    return shard_hint(out, "batch", "seq", None), x[:, -1], new_state
+
+
+# ---------------------------------------------------------- channel mixing
+def channel_mix(x: jax.Array, x_prev: jax.Array, p: Dict[str, Any]
+                ) -> Tuple[jax.Array, jax.Array]:
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xx = shifted - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(linear(xk, p["w_k"])))
+    k = shard_hint(k, "batch", None, "tp")
+    out = jax.nn.sigmoid(linear(xr, p["w_r"]).astype(jnp.float32)).astype(x.dtype) \
+        * linear(k, p["w_v"])
+    return shard_hint(out, "batch", "seq", None), x[:, -1]
+
+
+# ------------------------------------------------------------------ blocks
+def block(x: jax.Array, state_l: Dict[str, jax.Array], p: Dict[str, Any],
+          cfg: ModelConfig, use_kernel: bool = False
+          ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h = layer_norm(x, p["ln1_w"], p["ln1_b"], cfg.norm_eps)
+    att, att_prev, wkv = time_mix(h, state_l["att_prev"], state_l["wkv"],
+                                  p["att"], cfg, use_kernel)
+    x = x + att
+    h = layer_norm(x, p["ln2_w"], p["ln2_b"], cfg.norm_eps)
+    ffn, ffn_prev = channel_mix(h, state_l["ffn_prev"], p["ffn"])
+    x = x + ffn
+    return x, {"wkv": wkv, "att_prev": att_prev, "ffn_prev": ffn_prev}
+
+
+# ------------------------------------------------------------------- model
+def forward(params: Dict[str, Any], cfg: ModelConfig,
+            inputs: Dict[str, jax.Array], state: Dict[str, jax.Array],
+            use_kernel: bool = False, emit_state: bool = True
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunk forward (train: full seq with zero state; serve: continuation).
+    Returns (hidden, new_state)."""
+    x = embed_tokens(inputs["tokens"], params["embed"]).astype(cfg.cdtype)
+    x = layer_norm(x, params["ln0_w"], params["ln0_b"], cfg.norm_eps)
+
+    def body(h, xs):
+        p_l, state_l = xs
+        h2, new_state_l = block(h, state_l, p_l, cfg, use_kernel)
+        return h2, (new_state_l if emit_state else None)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, new_state = jax.lax.scan(body_fn, x, (params["blocks"], state))
+    x = layer_norm(x, params["ln_f_w"], params["ln_f_b"], cfg.norm_eps)
+    return x, (new_state if emit_state else state)
+
+
+def decode_step(params: Dict[str, Any], cfg: ModelConfig,
+                state: Dict[str, jax.Array], tokens: jax.Array,
+                pos: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token step: T=1 forward carrying the recurrent state."""
+    del pos  # rwkv has no positional input
+    x, new_state = forward(params, cfg, {"tokens": tokens}, state)
+    logits = lm_logits(x, params["lm_head"], cfg.logit_softcap)
+    return logits[:, -1], new_state

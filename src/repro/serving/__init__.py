@@ -1,0 +1,5 @@
+"""Serving substrate: continuous-batching engine on the async-RPC runtime."""
+from .engine import InferenceEngine, ServeConfig
+from .service import build_llm_app
+
+__all__ = ["InferenceEngine", "ServeConfig", "build_llm_app"]

@@ -1,0 +1,11 @@
+"""Training substrate: optimizer, train step, checkpointing, data pipeline."""
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+from .train_step import TrainSettings, make_train_step
+from .checkpoint import CheckpointManager
+from .data import SyntheticDataset, Prefetcher
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update",
+    "TrainSettings", "make_train_step",
+    "CheckpointManager", "SyntheticDataset", "Prefetcher",
+]

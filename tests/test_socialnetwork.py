@@ -1,0 +1,62 @@
+"""Integration tests: DeathStarBench SocialNetwork clone on both backends."""
+import pytest
+
+from repro.apps import WORKLOADS, build_socialnetwork, make_request_factory
+from repro.core import run_trial
+
+BACKENDS = ("thread", "fiber")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_compose_post(backend):
+    with build_socialnetwork(backend) as app:
+        out = app.send("frontend", "compose", {"text": "hi @u http://x"}).wait(timeout=10)
+        assert out == {"post_id": 42}
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_read_timelines(backend):
+    with build_socialnetwork(backend) as app:
+        home = app.send("frontend", "read_home", {}).wait(timeout=10)
+        user = app.send("frontend", "read_user", {}).wait(timeout=10)
+        assert len(home["posts"]) == 10
+        assert len(user["posts"]) == 10
+
+
+@pytest.mark.parametrize("workload", WORKLOADS)
+def test_workload_factories(workload):
+    import numpy as np
+    f = make_request_factory(workload)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        dest, method, payload = f(rng)
+        assert dest == "frontend"
+        assert method in ("compose", "read_home", "read_user")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_low_rate_trial_completes(backend):
+    """At low rates both backends must achieve ~offered rate (paper: fiber
+    is comparable to threads at low load)."""
+    with build_socialnetwork(backend) as app:
+        tr = run_trial(app, make_request_factory("mixed"), rate=100,
+                       duration=0.8, seed=3)
+        assert tr.achieved_rps > 50, tr.row()
+        assert tr.errors == 0
+
+
+def test_incremental_migration():
+    """Paper: services can be migrated one at a time without interruption."""
+    app = build_socialnetwork("thread", overrides={"frontend": "fiber",
+                                                   "text": "fiber"})
+    with app:
+        out = app.send("frontend", "compose", {"text": "t"}).wait(timeout=10)
+        assert out == {"post_id": 42}
+
+
+def test_spawn_accounting():
+    """ComposePost fans out 7 async calls + 2 in Text = 9 carriers/request."""
+    with build_socialnetwork("fiber") as app:
+        base = app.total_spawns()
+        app.send("frontend", "compose", {"text": "t"}).wait(timeout=10)
+        assert app.total_spawns() - base == 9
