@@ -1,38 +1,43 @@
 """Paper Figure 2: 99th-percentile latency vs offered request rate.
 
 Rates are swept from low load up to just beneath the *thread* backend's peak
-throughput (the paper's protocol), for each of the four workloads.
+throughput (the paper's protocol), for each workload of each registered app.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional, Sequence
 
-from repro.apps import WORKLOADS, build_socialnetwork, make_request_factory
-from repro.core import latency_sweep, run_trial
+from repro.apps import APP_NAMES, build_bench_app, get_app_def
+from repro.core import latency_sweep, warmup
 
-from .bench_throughput import _app_for, measure_peak
+from .bench_throughput import BACKENDS, measure_peak
 
 
-def run(quick: bool = False) -> List[str]:
+def run(quick: bool = False,
+        apps: Optional[Sequence[str]] = None) -> List[str]:
     duration = 0.6 if quick else 1.2
     n_points = 3 if quick else 5
+    apps = list(apps) if apps else list(APP_NAMES)
     rows: List[str] = []
-    for workload in WORKLOADS:
-        thread_peak = measure_peak("thread", workload,
-                                   duration=0.5 if quick else 0.8)
-        # sweep up to ~90% of the thread peak, as in the paper
-        rates = [thread_peak * f for f in
-                 [0.1, 0.3, 0.5, 0.7, 0.9][:n_points]]
-        for backend in ("thread", "fiber"):
-            with _app_for(backend) as app:
-                run_trial(app, make_request_factory(workload), rate=100,
-                          duration=0.3, seed=7)  # warmup
-                trials = latency_sweep(app, make_request_factory(workload),
-                                       rates, duration=duration)
-            for tr in trials:
-                rows.append(
-                    f"p99_latency/{workload}/{backend}@{tr.offered_rps:.0f}rps,"
-                    f"{tr.p99 * 1e6:.1f},p50_us={tr.p50 * 1e6:.1f}")
+    for app_name in apps:
+        d = get_app_def(app_name)
+        for workload in d.workloads:
+            thread_peak = measure_peak(app_name, "thread", workload,
+                                       duration=0.5 if quick else 0.8)
+            # sweep up to ~90% of the thread peak, as in the paper
+            rates = [thread_peak * f for f in
+                     [0.1, 0.3, 0.5, 0.7, 0.9][:n_points]]
+            for backend in BACKENDS:
+                with build_bench_app(app_name, backend) as app:
+                    warmup(app, d.make_request_factory(workload), seed=7)
+                    trials = latency_sweep(app,
+                                           d.make_request_factory(workload),
+                                           rates, duration=duration)
+                for tr in trials:
+                    rows.append(
+                        f"p99_latency/{app_name}/{workload}/{backend}"
+                        f"@{tr.offered_rps:.0f}rps,"
+                        f"{tr.p99 * 1e6:.1f},p50_us={tr.p50 * 1e6:.1f}")
     return rows
 
 

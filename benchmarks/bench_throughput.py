@@ -1,50 +1,54 @@
 """Paper Figure 1: peak throughput per workload, thread vs fiber.
 
 Protocol follows the paper: ramp the open-loop request rate until processed
-requests/s stops increasing; report the best achieved rate.  Worker pools are
-sized generously for the thread backend (DSB's thread-per-connection Thrift
-servers) so that async-call spawn cost — not pool size — is the binding
-constraint, as in the paper's setup.
+requests/s stops increasing; report the best achieved rate.  Runs every app
+in ``repro.apps.REGISTRY`` (SocialNetwork, HotelReservation, MediaService)
+so the headline fiber-vs-thread claim is measured across service-graph
+shapes, not one hand-picked graph.  Worker pools are sized generously for
+the thread backend (DSB's thread-per-connection Thrift servers) so that
+async-call spawn cost — not pool size — is the binding constraint.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
-from repro.apps import WORKLOADS, build_socialnetwork, make_request_factory
-from repro.core import find_peak_throughput, run_trial
+from repro.apps import APP_NAMES, build_bench_app, get_app_def
+from repro.core import find_peak_throughput, warmup
 
-
-def _app_for(backend: str):
-    if backend == "thread":
-        return build_socialnetwork("thread", n_workers=8, frontend_workers=16)
-    return build_socialnetwork("fiber", n_workers=2, frontend_workers=2)
+BACKENDS = ("thread", "fiber")
 
 
-def measure_peak(backend: str, workload: str, *, duration: float = 1.0,
-                 verbose: bool = False) -> float:
-    with _app_for(backend) as app:
-        # warmup (calibration + code paths)
-        run_trial(app, make_request_factory(workload), rate=100,
-                  duration=0.3, seed=99)
-        pk = find_peak_throughput(app, make_request_factory(workload),
+def measure_peak(app_name: str, backend: str, workload: str, *,
+                 duration: float = 1.0, verbose: bool = False) -> float:
+    d = get_app_def(app_name)
+    with build_bench_app(app_name, backend) as app:
+        warmup(app, d.make_request_factory(workload))
+        pk = find_peak_throughput(app, d.make_request_factory(workload),
                                   start_rate=200, duration=duration,
                                   growth=1.7, verbose=verbose)
     return pk.peak_rps
 
 
-def run(quick: bool = False) -> List[str]:
+def run(quick: bool = False,
+        apps: Optional[Sequence[str]] = None) -> List[str]:
     duration = 0.5 if quick else 1.0
+    apps = list(apps) if apps else list(APP_NAMES)
     rows: List[str] = []
-    peaks: Dict[str, Dict[str, float]] = {}
-    for workload in WORKLOADS:
-        peaks[workload] = {}
-        for backend in ("thread", "fiber"):
-            p = measure_peak(backend, workload, duration=duration)
-            peaks[workload][backend] = p
-            rows.append(f"peak_throughput/{workload}/{backend},"
-                        f"{1e6 / max(p, 1e-9):.2f},rps={p:.0f}")
-        gain = peaks[workload]["fiber"] / max(peaks[workload]["thread"], 1e-9)
-        rows.append(f"peak_throughput/{workload}/fiber_gain,{gain:.2f},x")
+    for app_name in apps:
+        d = get_app_def(app_name)
+        peaks: Dict[str, Dict[str, float]] = {}
+        for workload in d.workloads:
+            peaks[workload] = {}
+            for backend in BACKENDS:
+                p = measure_peak(app_name, backend, workload,
+                                 duration=duration)
+                peaks[workload][backend] = p
+                rows.append(f"peak_throughput/{app_name}/{workload}/{backend},"
+                            f"{1e6 / max(p, 1e-9):.2f},rps={p:.0f}")
+            gain = (peaks[workload]["fiber"]
+                    / max(peaks[workload]["thread"], 1e-9))
+            rows.append(f"peak_throughput/{app_name}/{workload}/fiber_gain,"
+                        f"{gain:.2f},x")
     return rows
 
 

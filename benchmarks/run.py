@@ -4,41 +4,80 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
 Tables:
   1. spawn_overhead   — paper's "23% of time in clone/exit" analogue
-  2. peak_throughput  — paper Figure 1 (peak rps, 4 workloads × 2 backends)
+  2. peak_throughput  — paper Figure 1 (peak rps, app x workload x backend)
   3. p99_latency      — paper Figure 2 (p99 vs offered rate)
   4. serving          — beyond-paper: LLM serving engine, thread vs fiber
   5. roofline         — dry-run roofline terms (reads launch/dryrun results)
 
-Env:
-  BENCH_QUICK=1   shorter trials (CI)
+The microservice tables (2, 3) sweep every app in ``repro.apps.REGISTRY``;
+restrict with ``--app`` (repeatable / comma-separated).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only peak,p99]
+      [--app socialnetwork --app hotelreservation]
+
+Env (equivalent to the flags, kept for CI wrappers):
+  BENCH_QUICK=1   shorter trials
   BENCH_ONLY=a,b  run a subset by prefix
+  BENCH_APPS=a,b  restrict the app sweep
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
 import traceback
 
 
-def main() -> None:
-    quick = os.environ.get("BENCH_QUICK", "0") == "1"
-    only = os.environ.get("BENCH_ONLY", "")
-    selected = [s.strip() for s in only.split(",") if s.strip()]
+def _csv_list(vals) -> list:
+    out = []
+    for v in vals or []:
+        out.extend(s.strip() for s in v.split(",") if s.strip())
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    default=os.environ.get("BENCH_QUICK", "0") == "1")
+    ap.add_argument("--only", action="append", default=None,
+                    help="benchmark name prefixes to run (comma-separated)")
+    ap.add_argument("--app", action="append", default=None,
+                    help="apps to sweep in the microservice tables "
+                         "(default: all registered)")
+    args = ap.parse_args(argv)
+
+    quick = args.quick
+    selected = _csv_list(args.only) or \
+        _csv_list([os.environ.get("BENCH_ONLY", "")])
+    apps = _csv_list(args.app) or \
+        _csv_list([os.environ.get("BENCH_APPS", "")]) or None
+    if apps:
+        from repro.apps import get_app_def
+        try:
+            for a in apps:
+                get_app_def(a)  # fail fast on typos
+        except ValueError as e:
+            ap.error(str(e))
 
     benches = []
     from . import bench_spawn_overhead, bench_throughput, bench_latency
-    benches.append(("spawn_overhead", bench_spawn_overhead.run))
-    benches.append(("peak_throughput", bench_throughput.run))
-    benches.append(("p99_latency", bench_latency.run))
+    benches.append(("spawn_overhead",
+                    lambda quick: bench_spawn_overhead.run(quick=quick)))
+    benches.append(("peak_throughput",
+                    lambda quick: bench_throughput.run(quick=quick,
+                                                       apps=apps)))
+    benches.append(("p99_latency",
+                    lambda quick: bench_latency.run(quick=quick, apps=apps)))
     try:
         from . import bench_serving
-        benches.append(("serving", bench_serving.run))
+        benches.append(("serving", lambda quick: bench_serving.run(quick=quick)))
     except ImportError:
         pass
     try:
         from . import bench_roofline
-        benches.append(("roofline", bench_roofline.run))
+        benches.append(("roofline", lambda quick: bench_roofline.run(quick=quick)))
     except ImportError:
         pass
 
@@ -49,7 +88,7 @@ def main() -> None:
             continue
         t0 = time.perf_counter()
         try:
-            for row in fn(quick=quick):
+            for row in fn(quick):
                 print(row, flush=True)
         except Exception:
             failures += 1

@@ -1,0 +1,56 @@
+"""DeathStarBench reproduction driver — any registered app, both backends.
+
+Measures peak throughput (paper Fig. 1) and p99-vs-rate (paper Fig. 2)
+for each of the app's request generators under both async backends.
+
+    PYTHONPATH=src python examples/deathstarbench.py \
+        --app {socialnetwork,hotelreservation,mediaservice} [--quick]
+"""
+import argparse
+
+from repro.apps import APP_NAMES, build_bench_app, get_app_def
+from repro.core import find_peak_throughput, latency_sweep, warmup
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app", default="socialnetwork", choices=APP_NAMES)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--workloads", nargs="*", default=None)
+    args = ap.parse_args(argv)
+    duration = 0.6 if args.quick else 1.2
+
+    d = get_app_def(args.app)
+    workloads = args.workloads or list(d.workloads)
+    print(f"=== app: {d.name} ({d.description}) ===")
+
+    print("=== peak throughput (paper Fig. 1) ===")
+    peaks = {}
+    for wl in workloads:
+        factory = d.make_request_factory(wl)
+        for backend in ("thread", "fiber"):
+            with build_bench_app(d.name, backend) as app:
+                warmup(app, factory)
+                pk = find_peak_throughput(app, factory, start_rate=200,
+                                          duration=duration)
+            peaks[(wl, backend)] = pk.peak_rps
+            print(f"  {wl:10s} {backend:7s}: {pk.peak_rps:8.0f} rps")
+        gain = peaks[(wl, 'fiber')] / max(peaks[(wl, 'thread')], 1e-9)
+        print(f"  {wl:10s} fiber gain: {gain:.2f}x")
+
+    print("\n=== p99 latency vs offered rate (paper Fig. 2) ===")
+    for wl in workloads:
+        factory = d.make_request_factory(wl)
+        thread_peak = peaks[(wl, "thread")]
+        rates = [thread_peak * f for f in (0.2, 0.5, 0.8)]
+        for backend in ("thread", "fiber"):
+            with build_bench_app(d.name, backend) as app:
+                warmup(app, factory)
+                rows = latency_sweep(app, factory, rates, duration=duration)
+            for tr in rows:
+                print(f"  {wl:10s} {backend:7s} @{tr.offered_rps:7.0f} rps: "
+                      f"p99={tr.p99 * 1e3:9.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,56 +1,19 @@
 """DeathStarBench SocialNetwork reproduction — the paper's evaluation.
 
-Measures peak throughput (paper Fig. 1) and p99-vs-rate (paper Fig. 2)
-for the four request generators under both async backends.
+Thin wrapper over the app-generic driver; kept for backwards compatibility.
 
     PYTHONPATH=src python examples/socialnetwork.py [--quick]
-"""
-import argparse
 
-from repro.apps import WORKLOADS, build_socialnetwork, make_request_factory
-from repro.core import find_peak_throughput, latency_sweep, run_trial
+Equivalent to ``examples/deathstarbench.py --app socialnetwork``; see that
+driver for HotelReservation and MediaService.
+"""
+import sys
+
+from deathstarbench import main as dsb_main
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--workloads", nargs="*", default=list(WORKLOADS))
-    args = ap.parse_args()
-    duration = 0.6 if args.quick else 1.2
-
-    print("=== peak throughput (paper Fig. 1) ===")
-    peaks = {}
-    for wl in args.workloads:
-        for backend in ("thread", "fiber"):
-            app = build_socialnetwork(
-                backend,
-                n_workers=8 if backend == "thread" else 2,
-                frontend_workers=16 if backend == "thread" else 2)
-            with app:
-                run_trial(app, make_request_factory(wl), 100, 0.3)  # warmup
-                pk = find_peak_throughput(app, make_request_factory(wl),
-                                          start_rate=200, duration=duration)
-            peaks[(wl, backend)] = pk.peak_rps
-            print(f"  {wl:10s} {backend:7s}: {pk.peak_rps:8.0f} rps")
-        gain = peaks[(wl, 'fiber')] / max(peaks[(wl, 'thread')], 1e-9)
-        print(f"  {wl:10s} fiber gain: {gain:.2f}x")
-
-    print("\n=== p99 latency vs offered rate (paper Fig. 2) ===")
-    for wl in args.workloads:
-        thread_peak = peaks[(wl, "thread")]
-        rates = [thread_peak * f for f in (0.2, 0.5, 0.8)]
-        for backend in ("thread", "fiber"):
-            app = build_socialnetwork(
-                backend,
-                n_workers=8 if backend == "thread" else 2,
-                frontend_workers=16 if backend == "thread" else 2)
-            with app:
-                run_trial(app, make_request_factory(wl), 100, 0.3)
-                rows = latency_sweep(app, make_request_factory(wl), rates,
-                                     duration=duration)
-            for tr in rows:
-                print(f"  {wl:10s} {backend:7s} @{tr.offered_rps:7.0f} rps: "
-                      f"p99={tr.p99 * 1e3:9.2f} ms")
+    dsb_main(["--app", "socialnetwork"] + sys.argv[1:])
 
 
 if __name__ == "__main__":

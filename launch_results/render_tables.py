@@ -1,10 +1,18 @@
-"""Render EXPERIMENTS.md tables from dryrun.json.
+"""Render EXPERIMENTS.md tables from dryrun.json or benchmark CSV.
 
     PYTHONPATH=src python launch_results/render_tables.py [--mesh pod1]
+    PYTHONPATH=src python launch_results/render_tables.py \
+        --bench bench.csv [--app hotelreservation]
+
+``--bench`` consumes the ``name,us_per_call,derived`` CSV emitted by
+``benchmarks/run.py`` and renders one thread-vs-fiber markdown table per
+app (peak throughput per workload + fiber gain, then the p99 sweep).
 """
 import argparse
 import json
 import os
+import re
+from collections import defaultdict
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 
@@ -23,11 +31,89 @@ def fmt_b(b):
     return f"{b / 2**20:.0f}M"
 
 
+def _parse_derived(derived):
+    """'rps=1234;p50_us=5.1' -> {'rps': 1234.0, 'p50_us': 5.1}"""
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def render_bench(path, app_filter=None):
+    """Render per-app thread-vs-fiber tables from benchmarks/run.py CSV."""
+    peaks = defaultdict(dict)   # (app, workload) -> backend -> rps
+    gains = {}                  # (app, workload) -> fiber gain
+    p99s = defaultdict(list)    # app -> (workload, backend, rate, p99, p50)
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith(("#", "name,")):
+                continue
+            name, value, derived = line.split(",", 2)
+            d = _parse_derived(derived)
+            m = re.match(r"peak_throughput/([^/]+)/([^/]+)/([^/,@]+)$", name)
+            if m:
+                app, wl, backend = m.groups()
+                if backend == "fiber_gain":
+                    gains[(app, wl)] = float(value)
+                else:
+                    peaks[(app, wl)][backend] = d.get("rps", 0.0)
+                continue
+            m = re.match(r"p99_latency/([^/]+)/([^/]+)/([^@]+)@(\d+)rps$",
+                         name)
+            if m:
+                app, wl, backend, rate = m.groups()
+                p99s[app].append((wl, backend, float(rate), float(value),
+                                  d.get("p50_us", float("nan"))))
+
+    available = sorted({a for a, _ in peaks} | set(p99s))
+    apps = available
+    if app_filter:
+        wanted = [a for v in app_filter for a in v.split(",") if a]
+        apps = [a for a in available if a in wanted]
+        missing = sorted(set(wanted) - set(available))
+        if missing:
+            raise SystemExit(
+                f"no benchmark rows for app(s) {missing} "
+                f"(CSV has: {available})")
+    for app in apps:
+        print(f"### {app}\n")
+        wls = [wl for (a, wl) in peaks if a == app]
+        if wls:
+            print("| workload | thread rps | fiber rps | fiber gain |")
+            print("|---|---:|---:|---:|")
+            for wl in wls:
+                row = peaks[(app, wl)]
+                gain = gains.get((app, wl), float("nan"))
+                print(f"| {wl} | {row.get('thread', 0):.0f} "
+                      f"| {row.get('fiber', 0):.0f} | {gain:.2f}x |")
+            print()
+        if p99s.get(app):
+            print("| workload | backend | offered rps | p99 | p50 |")
+            print("|---|---|---:|---:|---:|")
+            for wl, backend, rate, p99, p50 in p99s[app]:
+                print(f"| {wl} | {backend} | {rate:.0f} "
+                      f"| {fmt_t(p99 * 1e-6)} | {fmt_t(p50 * 1e-6)} |")
+            print()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default=None, choices=(None, "pod1", "pod2"))
     ap.add_argument("--variants", action="store_true")
+    ap.add_argument("--bench", default=None, metavar="CSV",
+                    help="render app benchmark tables from run.py output")
+    ap.add_argument("--app", action="append", default=None,
+                    help="with --bench: restrict to these apps")
     args = ap.parse_args()
+    if args.bench:
+        render_bench(args.bench, app_filter=args.app)
+        return
     with open(os.path.join(HERE, "dryrun.json")) as f:
         results = json.load(f)
 

@@ -1,4 +1,21 @@
-"""Example microservice applications built on repro.core."""
-from .socialnetwork import (WORKLOADS, build_socialnetwork, make_request_factory)
+"""DeathStarBench-style microservice applications built on repro.core.
 
-__all__ = ["build_socialnetwork", "make_request_factory", "WORKLOADS"]
+Three canonical DSB apps on the shared substrate — SocialNetwork,
+HotelReservation, MediaService — each exposing the same protocol
+(``build(backend, ...)``, ``make_request_factory(workload)``, four
+workloads) through :data:`REGISTRY`.
+"""
+from .hotelreservation import build_hotelreservation
+from .mediaservice import build_mediaservice
+# Legacy single-app exports (SocialNetwork was the first app; its names are
+# still imported by older call sites).
+from .socialnetwork import (WORKLOADS, build_socialnetwork,
+                            make_request_factory)
+from .registry import (APP_NAMES, REGISTRY, AppDef, build_bench_app,
+                       get_app_def)
+
+__all__ = [
+    "REGISTRY", "APP_NAMES", "AppDef", "get_app_def", "build_bench_app",
+    "build_socialnetwork", "build_hotelreservation", "build_mediaservice",
+    "make_request_factory", "WORKLOADS",
+]

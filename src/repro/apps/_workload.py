@@ -1,0 +1,42 @@
+"""Shared request-workload plumbing for the DeathStarBench-style apps.
+
+Every app exposes the same four-generator protocol from the paper's
+evaluation: one compose-style write, two read paths, and a weighted
+``mixed`` combination.  This module factors the factory construction that
+each app module previously hard-coded, so the load generator sees one
+uniform :data:`repro.core.RequestFactory` shape regardless of app.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import numpy as np
+
+Mix = Sequence[Tuple[str, float]]
+
+
+def make_factory(workload: str, *, frontend: str,
+                 workloads: Sequence[str], mix: Mix, payload: Any):
+    """Build a RequestFactory for ``workload``.
+
+    ``workload`` must be one of ``workloads``; every non-``mixed`` entry maps
+    to a fixed ``(frontend, workload, payload)`` request, while ``mixed``
+    samples methods from ``mix`` with the trial RNG (seeded by the load
+    generator, so request sequences are reproducible across backends).
+    """
+    if workload not in workloads:
+        raise ValueError(
+            f"unknown workload {workload!r} (want one of {tuple(workloads)})")
+    if workload != "mixed":
+        def fixed(rng: np.random.Generator) -> Tuple[str, str, Any]:
+            return (frontend, workload, payload)
+        return fixed
+
+    names = [m for m, _ in mix]
+    probs = np.asarray([p for _, p in mix], dtype=np.float64)
+    probs = probs / probs.sum()
+
+    def mixed(rng: np.random.Generator) -> Tuple[str, str, Any]:
+        m = names[int(rng.choice(len(names), p=probs))]
+        return (frontend, m, payload)
+    return mixed

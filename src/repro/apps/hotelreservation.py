@@ -1,0 +1,176 @@
+"""DeathStarBench HotelReservation clone on the repro.core substrate.
+
+Service graph (after Gan et al., ASPLOS'19, HotelReservation app):
+
+    SearchHotel ──> Search ──async──> Geo, Rate          (joined)
+        └──async──> Profile, Reservation.check           (joined)
+    Recommend ──> Recommendation ──> Profile
+    Reserve   ──async──> User (auth), Reservation.check  (joined)
+        └──> Reservation.make
+
+Compared with SocialNetwork this graph is *shallower* (max depth 3) and its
+frontend fan-out is narrower (2-wide joins instead of the 4-wide ComposePost
+join), but the reserve path adds a user-auth password hash — a CPU-heavier
+leaf.  Backend sensitivity is therefore expected to be smaller than
+SocialNetwork's but still thread-unfavourable at high rates: every search
+still spawns 4 async carriers.
+
+Service times model DSB's memcached+MongoDB deployment: geo and
+recommendation hit Mongo (slow), rate/profile/availability hit memcached
+(fast), reservation writes hit Mongo.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from ..core import App, AsyncRpc, Compute, ServiceSpec, Sleep, Wait, WaitAll
+from ._workload import make_factory
+
+# --- service-time model (seconds) -----------------------------------------
+CPU_TINY = 20e-6     # id lookups, serialization
+CPU_SMALL = 60e-6    # distance math, rate plan merge
+CPU_AUTH = 120e-6    # password hash on the user-auth path
+IO_CACHE = 300e-6    # memcached round trip
+IO_DB = 800e-6       # MongoDB round trip
+
+FRONTEND = "frontend"
+
+_NEARBY = [101, 102, 103, 104, 105]
+
+
+# ---------------------------------------------------------------- leaf svcs
+def _geo_nearby(svc: Any, payload: Any):
+    """Geo index lookup (Mongo-backed in DSB)."""
+    yield Compute(CPU_SMALL)
+    yield Sleep(IO_DB)
+    return {"hotel_ids": list(_NEARBY)}
+
+
+def _rate_get(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_CACHE)
+    ids = (payload or {}).get("hotel_ids", _NEARBY)
+    return {"rates": {h: 100 + h % 7 for h in ids}}
+
+
+def _profile_get(svc: Any, payload: Any):
+    yield Compute(CPU_SMALL)
+    yield Sleep(IO_CACHE)
+    ids = (payload or {}).get("hotel_ids", _NEARBY)
+    return {"profiles": [{"id": h, "name": f"hotel-{h}"} for h in ids]}
+
+
+def _recommendation_get(svc: Any, payload: Any):
+    yield Compute(CPU_SMALL)
+    yield Sleep(IO_DB)
+    return {"hotel_ids": list(_NEARBY[:3])}
+
+
+def _user_check(svc: Any, payload: Any):
+    """User auth: the CPU-heavy leaf (password hash) + credential lookup."""
+    yield Compute(CPU_AUTH)
+    yield Sleep(IO_CACHE)
+    return {"authorized": True, "user": (payload or {}).get("user", "guest")}
+
+
+def _reservation_check(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_CACHE)
+    ids = (payload or {}).get("hotel_ids", _NEARBY)
+    return {"available": {h: True for h in ids}}
+
+
+def _reservation_make(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_DB)
+    return {"confirmed": True, "hotel_id": (payload or {}).get("hotel_id", 101)}
+
+
+# ------------------------------------------------------------- mid services
+def _search_nearby(svc: Any, payload: Any):
+    """Search fans out to Geo + Rate (async, joined)."""
+    yield Compute(CPU_SMALL)
+    f_geo = yield AsyncRpc("geo", "nearby", payload)
+    f_rate = yield AsyncRpc("rate", "get_rates", payload)
+    geo, rate = yield WaitAll([f_geo, f_rate])
+    return {**geo, **rate}
+
+
+# ---------------------------------------------------------------- front svc
+def _search_hotel(svc: Any, payload: Any):
+    """Read path 1: search, then join profiles + availability."""
+    yield Compute(CPU_SMALL)
+    f = yield AsyncRpc("search", "nearby", payload)
+    found = yield Wait(f)
+    req = {"hotel_ids": found["hotel_ids"]}
+    f_prof = yield AsyncRpc("profile", "get_profiles", req)
+    f_avail = yield AsyncRpc("reservation", "check_availability", req)
+    prof, avail = yield WaitAll([f_prof, f_avail])
+    return {**found, **prof, **avail}
+
+
+def _recommend(svc: Any, payload: Any):
+    """Read path 2: recommendation engine, then profiles."""
+    yield Compute(CPU_TINY)
+    f = yield AsyncRpc("recommendation", "get_recs", payload)
+    recs = yield Wait(f)
+    f_prof = yield AsyncRpc("profile", "get_profiles", recs)
+    prof = yield Wait(f_prof)
+    return {**recs, **prof}
+
+
+def _reserve(svc: Any, payload: Any):
+    """Write path: auth + availability joined, then the reservation write."""
+    yield Compute(CPU_SMALL)
+    f_auth = yield AsyncRpc("user", "check_user", payload)
+    f_avail = yield AsyncRpc("reservation", "check_availability", payload)
+    auth, avail = yield WaitAll([f_auth, f_avail])
+    if not auth["authorized"]:  # pragma: no cover - auth stub always passes
+        raise PermissionError("bad credentials")
+    f_make = yield AsyncRpc("reservation", "make_reservation",
+                            {"hotel_id": (payload or {}).get("hotel_id", 101)})
+    made = yield Wait(f_make)
+    return {"user": auth["user"], **made}
+
+
+# ------------------------------------------------------------------ wiring
+def build_hotelreservation(backend: str = "fiber", *, n_workers: int = 2,
+                           frontend_workers: int = 4,
+                           net_latency: float = 0.0,
+                           overrides: Dict[str, str] | None = None) -> App:
+    """Wire the HotelReservation app (per-service backend ``overrides``
+    support the paper's one-service-at-a-time migration experiment)."""
+    overrides = overrides or {}
+    app = App(backend=backend, net_latency=net_latency)
+
+    def add(name: str, handlers: Dict[str, Any], workers: int) -> None:
+        app.add_service(ServiceSpec(
+            name=name, handlers=handlers, n_workers=workers,
+            backend=overrides.get(name)))
+
+    add(FRONTEND, {"search": _search_hotel, "recommend": _recommend,
+                   "reserve": _reserve}, frontend_workers)
+    add("search", {"nearby": _search_nearby}, n_workers)
+    add("geo", {"nearby": _geo_nearby}, n_workers)
+    add("rate", {"get_rates": _rate_get}, n_workers)
+    add("profile", {"get_profiles": _profile_get}, n_workers)
+    add("recommendation", {"get_recs": _recommendation_get}, n_workers)
+    add("user", {"check_user": _user_check}, n_workers)
+    add("reservation", {"check_availability": _reservation_check,
+                        "make_reservation": _reservation_make}, n_workers)
+    return app
+
+
+# ------------------------------------------------------------ request mixes
+WORKLOADS = ("reserve", "search", "recommend", "mixed")
+
+# DSB's hotel mix is search-dominated with rare writes.
+_MIX = (("search", 0.60), ("recommend", 0.25), ("reserve", 0.15))
+
+_PAYLOAD = {"user": "u7", "lat": 37.7, "lon": -122.4, "hotel_id": 103}
+
+
+def make_request_factory(workload: str):
+    """Returns a RequestFactory for the load generator."""
+    return make_factory(workload, frontend=FRONTEND, workloads=WORKLOADS,
+                        mix=_MIX, payload=_PAYLOAD)

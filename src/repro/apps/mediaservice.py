@@ -1,0 +1,178 @@
+"""DeathStarBench MediaService (movie reviewing) clone on repro.core.
+
+Service graph (after Gan et al., ASPLOS'19, MediaService app):
+
+    ComposeReview ──async──> UniqueId, Text, UserService, MovieId   (4-wide join)
+        └──async──> ReviewStorage.store, UserReview.upload,
+                    MovieReview.upload                              (3-wide join)
+
+    ReadMovieReviews ──> MovieReview ──async──> ReviewStorage (batch)
+    ReadUserReviews  ──> UserReview  ──async──> ReviewStorage (batch)
+
+Structurally this is the *widest* of the three apps relative to its depth:
+ComposeReview performs 7 async calls with no nested fan-out (SocialNetwork's
+Text service adds 2 more a level down), so the per-request carrier count is
+entirely concentrated in one service.  The paper predicts this shape is the
+most sensitive to async-call spawn cost — the frontend's dispatcher pays for
+every spawn itself — so the fiber backend's edge should be largest here on
+the compose path and smallest on the cache-friendly read paths.
+
+Service times model DSB's deployment: movie-title→id lookup and review reads
+hit memcached first, review writes land in MongoDB.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from ..core import App, AsyncRpc, Compute, ServiceSpec, Sleep, Wait, WaitAll
+from ._workload import make_factory
+
+# --- service-time model (seconds) -----------------------------------------
+CPU_TINY = 20e-6     # id generation, serialization
+CPU_SMALL = 60e-6    # review-text processing, rating math
+IO_CACHE = 300e-6    # memcached round trip
+IO_DB = 800e-6       # MongoDB round trip
+
+FRONTEND = "frontend"
+
+
+# ---------------------------------------------------------------- leaf svcs
+def _unique_id(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    return {"review_id": 77}
+
+
+def _text(svc: Any, payload: Any):
+    yield Compute(CPU_SMALL)
+    yield Sleep(IO_CACHE)
+    return {"text": (payload or {}).get("text", "")}
+
+
+def _user_service(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_CACHE)
+    return {"user_id": 13}
+
+
+def _movie_id(svc: Any, payload: Any):
+    """Title -> movie-id lookup (memcached in front of Mongo in DSB)."""
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_CACHE)
+    return {"movie_id": "m-42",
+            "rating": (payload or {}).get("rating", 5)}
+
+
+def _review_storage_store(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_DB)
+    return {"ok": True}
+
+
+def _review_storage_read(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_DB)
+    n = (payload or {}).get("n", 10)
+    return {"reviews": [{"review_id": i} for i in range(n)]}
+
+
+# ------------------------------------------------------------- mid services
+def _user_review_upload(svc: Any, payload: Any):
+    """Append to the user's review timeline (Mongo sorted insert)."""
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_DB)
+    return {"ok": True}
+
+
+def _user_review_read(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_CACHE)  # timeline ids from memcached
+    f = yield AsyncRpc("review_storage", "read", {"n": 10})
+    return (yield Wait(f))
+
+
+def _movie_review_upload(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_DB)
+    return {"ok": True}
+
+
+def _movie_review_read(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    yield Sleep(IO_CACHE)
+    f = yield AsyncRpc("review_storage", "read", {"n": 10})
+    return (yield Wait(f))
+
+
+# ---------------------------------------------------------------- front svc
+def _compose_review(svc: Any, payload: Any):
+    """Write path: 4-wide component join, then 3-wide storage/timeline join."""
+    yield Compute(CPU_SMALL)
+    f_uid = yield AsyncRpc("unique_id", "get", payload)
+    f_txt = yield AsyncRpc("text", "process", payload)
+    f_usr = yield AsyncRpc("user", "lookup", payload)
+    f_mov = yield AsyncRpc("movie_id", "resolve", payload)
+    uid, text, user, movie = yield WaitAll([f_uid, f_txt, f_usr, f_mov])
+
+    review = {**uid, **text, **user, **movie}
+    f_store = yield AsyncRpc("review_storage", "store", review)
+    f_ur = yield AsyncRpc("user_review", "upload", review)
+    f_mr = yield AsyncRpc("movie_review", "upload", review)
+    yield WaitAll([f_store, f_ur, f_mr])
+    return {"review_id": uid["review_id"]}
+
+
+def _read_movie(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    f = yield AsyncRpc("movie_review", "read", payload)
+    return (yield Wait(f))
+
+
+def _read_user(svc: Any, payload: Any):
+    yield Compute(CPU_TINY)
+    f = yield AsyncRpc("user_review", "read", payload)
+    return (yield Wait(f))
+
+
+# ------------------------------------------------------------------ wiring
+def build_mediaservice(backend: str = "fiber", *, n_workers: int = 2,
+                       frontend_workers: int = 4,
+                       net_latency: float = 0.0,
+                       overrides: Dict[str, str] | None = None) -> App:
+    """Wire the MediaService app (per-service backend ``overrides`` support
+    the paper's one-service-at-a-time migration experiment)."""
+    overrides = overrides or {}
+    app = App(backend=backend, net_latency=net_latency)
+
+    def add(name: str, handlers: Dict[str, Any], workers: int) -> None:
+        app.add_service(ServiceSpec(
+            name=name, handlers=handlers, n_workers=workers,
+            backend=overrides.get(name)))
+
+    add(FRONTEND, {"compose": _compose_review, "read_movie": _read_movie,
+                   "read_user": _read_user}, frontend_workers)
+    add("unique_id", {"get": _unique_id}, n_workers)
+    add("text", {"process": _text}, n_workers)
+    add("user", {"lookup": _user_service}, n_workers)
+    add("movie_id", {"resolve": _movie_id}, n_workers)
+    add("review_storage", {"store": _review_storage_store,
+                           "read": _review_storage_read}, n_workers)
+    add("user_review", {"upload": _user_review_upload,
+                        "read": _user_review_read}, n_workers)
+    add("movie_review", {"upload": _movie_review_upload,
+                         "read": _movie_review_read}, n_workers)
+    return app
+
+
+# ------------------------------------------------------------ request mixes
+WORKLOADS = ("compose", "read_movie", "read_user", "mixed")
+
+# movie-review traffic skews heavily toward reading a movie's reviews.
+_MIX = (("compose", 0.10), ("read_movie", 0.65), ("read_user", 0.25))
+
+_PAYLOAD = {"title": "Contact", "text": "great @scenes", "rating": 5}
+
+
+def make_request_factory(workload: str):
+    """Returns a RequestFactory for the load generator."""
+    return make_factory(workload, frontend=FRONTEND, workloads=WORKLOADS,
+                        mix=_MIX, payload=_PAYLOAD)

@@ -1,0 +1,76 @@
+"""App registry: one place that knows every DeathStarBench-style app.
+
+The load generator, the serving benchmarks, ``benchmarks/run.py`` and
+``launch_results/render_tables.py`` are all parameterized by app name
+through this table instead of hard-coding SocialNetwork, so adding an app
+means registering one :class:`AppDef` here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+from ..core import App
+from . import hotelreservation, mediaservice, socialnetwork
+
+# build(backend, *, n_workers, frontend_workers, net_latency, overrides)
+BuildFn = Callable[..., App]
+
+
+@dataclass(frozen=True)
+class AppDef:
+    """Everything the harnesses need to drive one app."""
+    name: str
+    build: BuildFn
+    make_request_factory: Callable[[str], Any]
+    workloads: Tuple[str, ...]
+    frontend: str
+    description: str = ""
+
+
+REGISTRY: Dict[str, AppDef] = {
+    "socialnetwork": AppDef(
+        name="socialnetwork",
+        build=socialnetwork.build_socialnetwork,
+        make_request_factory=socialnetwork.make_request_factory,
+        workloads=tuple(socialnetwork.WORKLOADS),
+        frontend="frontend",
+        description="deep graph, nested fan-out (ComposePost: 7+2 carriers)",
+    ),
+    "hotelreservation": AppDef(
+        name="hotelreservation",
+        build=hotelreservation.build_hotelreservation,
+        make_request_factory=hotelreservation.make_request_factory,
+        workloads=tuple(hotelreservation.WORKLOADS),
+        frontend=hotelreservation.FRONTEND,
+        description="shallow graph, 2-wide joins, CPU-heavy auth leaf",
+    ),
+    "mediaservice": AppDef(
+        name="mediaservice",
+        build=mediaservice.build_mediaservice,
+        make_request_factory=mediaservice.make_request_factory,
+        workloads=tuple(mediaservice.WORKLOADS),
+        frontend=mediaservice.FRONTEND,
+        description="widest single-service fan-out (ComposeReview: 7 carriers)",
+    ),
+}
+
+APP_NAMES: Tuple[str, ...] = tuple(REGISTRY)
+
+
+def get_app_def(name: str) -> AppDef:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown app {name!r} (want one of {APP_NAMES})") from None
+
+
+def build_bench_app(name: str, backend: str, **overrides: Any) -> App:
+    """Build ``name`` with the benchmark pool sizing: generous thread pools
+    (DSB's thread-per-connection Thrift servers) so async-call spawn cost —
+    not pool size — is the binding constraint, as in the paper's setup."""
+    sizing = (dict(n_workers=8, frontend_workers=16) if backend == "thread"
+              else dict(n_workers=2, frontend_workers=2))
+    sizing.update(overrides)
+    return get_app_def(name).build(backend, **sizing)

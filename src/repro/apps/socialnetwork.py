@@ -19,11 +19,10 @@ where the two backends differ; everything else is shared.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
-
-import numpy as np
+from typing import Any, Dict
 
 from ..core import (App, AsyncRpc, Compute, ServiceSpec, Sleep, Wait, WaitAll)
+from ._workload import make_factory
 
 # --- service-time model (seconds) -----------------------------------------
 # CPU slices are kept small (they serialize on the GIL for both backends);
@@ -190,20 +189,10 @@ WORKLOADS = ("compose", "read_home", "read_user", "mixed")
 # default mix is read-heavy.
 _MIX = (("compose", 0.10), ("read_home", 0.60), ("read_user", 0.30))
 
+_PAYLOAD = {"text": "hello @world http://x"}
+
 
 def make_request_factory(workload: str):
     """Returns a RequestFactory for the load generator."""
-    if workload in ("compose", "read_home", "read_user"):
-        def fixed(rng: np.random.Generator) -> Tuple[str, str, Any]:
-            return ("frontend", workload, {"text": "hello @world http://x"})
-        return fixed
-    if workload == "mixed":
-        names = [m for m, _ in _MIX]
-        probs = np.asarray([p for _, p in _MIX])
-        probs = probs / probs.sum()
-
-        def mixed(rng: np.random.Generator) -> Tuple[str, str, Any]:
-            m = names[int(rng.choice(len(names), p=probs))]
-            return ("frontend", m, {"text": "hello @world http://x"})
-        return mixed
-    raise ValueError(f"unknown workload {workload!r} (want {WORKLOADS})")
+    return make_factory(workload, frontend="frontend", workloads=WORKLOADS,
+                        mix=_MIX, payload=_PAYLOAD)

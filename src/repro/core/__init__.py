@@ -7,7 +7,8 @@ execution backend per service.
 from .effects import (AsyncRpc, Compute, Offload, Sleep, SpawnLocal, Wait,
                       WaitAll, sync_rpc)
 from .future import Future
-from .loadgen import find_peak_throughput, latency_sweep, run_trial
+from .loadgen import (RequestFactory, find_peak_throughput, latency_sweep,
+                      run_trial, warmup)
 from .metrics import LatencyRecorder, PeakResult, TrialResult
 from .service import App, Service, ServiceSpec
 
@@ -15,6 +16,7 @@ __all__ = [
     "App", "Service", "ServiceSpec", "Future",
     "AsyncRpc", "Wait", "WaitAll", "Sleep", "Compute", "Offload",
     "SpawnLocal", "sync_rpc",
-    "run_trial", "find_peak_throughput", "latency_sweep",
+    "run_trial", "find_peak_throughput", "latency_sweep", "warmup",
+    "RequestFactory",
     "LatencyRecorder", "TrialResult", "PeakResult",
 ]

@@ -18,6 +18,7 @@ a service between backends is a one-word config change, mirroring the paper's
 """
 from __future__ import annotations
 
+import itertools
 import queue
 import threading
 import time
@@ -176,7 +177,10 @@ class FiberExecutor(Executor):
         self._scheds: List[FiberScheduler] = [
             FiberScheduler(app, name=f"{name}-fib{i}") for i in range(n_workers)
         ]
-        self._rr = 0
+        # atomic round-robin ticket; a plain `self._rr += 1` is a lost-update
+        # race when many dispatcher threads deliver concurrently, which
+        # silently unbalances the schedulers.
+        self._rr = itertools.count()
 
     @property
     def spawns(self) -> int:  # type: ignore[override]
@@ -197,8 +201,7 @@ class FiberExecutor(Executor):
     def deliver(self, gen: Generator, reply: Future) -> None:
         # round-robin across schedulers (boost work-sharing analogue);
         # each fiber stays pinned to its scheduler thereafter.
-        s = self._scheds[self._rr % len(self._scheds)]
-        self._rr += 1
+        s = self._scheds[next(self._rr) % len(self._scheds)]
         s.spawn_external(gen, reply)
 
 

@@ -89,6 +89,14 @@ def run_trial(app: App, make_request: RequestFactory, rate: float,
     )
 
 
+def warmup(app: App, make_request: RequestFactory, *, rate: float = 100.0,
+           duration: float = 0.3, seed: int = 99) -> TrialResult:
+    """Short unmeasured trial: touches the Compute calibration and every
+    code path of the workload before a measured trial begins.  Every
+    benchmark previously open-coded this."""
+    return run_trial(app, make_request, rate, duration, seed=seed)
+
+
 def find_peak_throughput(app: App, make_request: RequestFactory, *,
                          start_rate: float = 50.0, growth: float = 1.6,
                          duration: float = 1.5, seed: int = 0,

@@ -1,0 +1,181 @@
+"""Deterministic FiberScheduler unit tests + FiberExecutor regression tests.
+
+Drives a single scheduler directly (no App, no transport) so timer order,
+exception propagation and shutdown behaviour are exact, not statistical.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import Future, Sleep, Wait, WaitAll
+from repro.core.executor import FiberExecutor
+from repro.core.fiber import FiberScheduler
+
+
+@pytest.fixture
+def sched():
+    s = FiberScheduler(app=None, name="test-sched")
+    s.start()
+    yield s
+    s.stop()
+
+
+# ------------------------------------------------------------ timer order
+def test_timers_fire_in_deadline_order(sched):
+    """Fibers spawned in one order but sleeping different durations must
+    resume in deadline order."""
+    order = []
+
+    def napper(tag, seconds):
+        yield Sleep(seconds)
+        order.append(tag)
+
+    futs = [sched.spawn_external(napper("slow", 0.06)),
+            sched.spawn_external(napper("fast", 0.01)),
+            sched.spawn_external(napper("mid", 0.03))]
+    for f in futs:
+        f.wait(timeout=5)
+    assert order == ["fast", "mid", "slow"]
+
+
+def test_equal_deadline_timers_fire_fifo():
+    """The timer heap tie-breaks *identical* deadlines by push sequence
+    (without the seq field, heapq would compare Fiber objects and raise).
+    Entries are injected directly so the deadlines are exactly equal —
+    Sleep-computed deadlines are always strictly increasing."""
+    import heapq
+
+    from repro.core.fiber import Fiber
+
+    s = FiberScheduler(app=None, name="tie-test")
+    order = []
+
+    def body(tag):
+        order.append(tag)
+        return tag
+        yield  # pragma: no cover - marks this as a generator
+
+    deadline = time.monotonic() + 0.01
+    fibs = [Fiber(body(i)) for i in range(5)]
+    for fib in fibs:  # scheduler not started yet: safe to touch the heap
+        heapq.heappush(s._timers, (deadline, next(s._timer_seq), fib, None))
+    s.start()
+    try:
+        for fib in fibs:
+            fib.future.wait(timeout=5)
+    finally:
+        s.stop()
+    assert order == list(range(5))
+
+
+def test_sleep_zero_resumes(sched):
+    def z():
+        yield Sleep(0.0)
+        return "done"
+    assert sched.spawn_external(z()).wait(timeout=5) == "done"
+
+
+# ------------------------------------------------- WaitAll exception paths
+def test_waitall_exception_propagates_when_already_failed(sched):
+    """Fast path: all futures resolved, one failed -> thrown into fiber."""
+    ok, bad = Future(), Future()
+    ok.set_result(1)
+    bad.set_exception(ValueError("pre-failed"))
+
+    def joiner():
+        yield WaitAll([ok, bad])
+
+    with pytest.raises(ValueError, match="pre-failed"):
+        sched.spawn_external(joiner()).wait(timeout=5)
+
+
+def test_waitall_exception_propagates_when_resolved_late(sched):
+    """Slow path: fiber parks on WaitAll, a future fails afterwards."""
+    a, b = Future(), Future()
+    parked = threading.Event()
+
+    def joiner():
+        parked.set()
+        yield WaitAll([a, b])
+
+    fut = sched.spawn_external(joiner())
+    assert parked.wait(timeout=5)
+    a.set_result(1)
+    b.set_exception(RuntimeError("late failure"))
+    with pytest.raises(RuntimeError, match="late failure"):
+        fut.wait(timeout=5)
+
+
+def test_waitall_exception_is_catchable_inside_fiber(sched):
+    bad = Future()
+    bad.set_exception(KeyError("caught"))
+
+    def joiner():
+        try:
+            yield WaitAll([bad])
+        except KeyError:
+            return "recovered"
+        return "missed"
+
+    assert sched.spawn_external(joiner()).wait(timeout=5) == "recovered"
+
+
+# ------------------------------------------------------------ clean stop()
+def test_stop_with_parked_fibers_returns_promptly():
+    """stop() must join the scheduler thread even while fibers are parked
+    on a never-resolved future (shutdown must not hang on live fibers)."""
+    sched = FiberScheduler(app=None, name="stop-test")
+    sched.start()
+    parked = threading.Event()
+    never = Future()
+
+    def waiter():
+        parked.set()
+        yield Wait(never)
+
+    sched.spawn_external(waiter())
+    assert parked.wait(timeout=5)
+    t0 = time.perf_counter()
+    sched.stop()
+    assert time.perf_counter() - t0 < 2.0
+    assert not sched._thread.is_alive()
+
+
+def test_stop_idle_scheduler():
+    sched = FiberScheduler(app=None, name="idle-stop")
+    sched.start()
+    sched.stop()
+    assert not sched._thread.is_alive()
+
+
+# ------------------------------------------- FiberExecutor round-robin race
+def test_deliver_round_robin_is_balanced_under_concurrency():
+    """Regression: `self._rr += 1` was an unlocked read-modify-write, so
+    concurrent deliver() calls lost ticket increments and piled fibers onto
+    a subset of schedulers.  With an atomic counter the split is exact."""
+    n_sched, n_threads, per_thread = 4, 8, 500
+    ex = FiberExecutor(app=None, name="rr", n_workers=n_sched)
+    counts = [0] * n_sched
+    lock = threading.Lock()
+    for i, s in enumerate(ex._scheds):
+        def spy(gen, reply=None, name="", i=i):
+            with lock:
+                counts[i] += 1
+        s.spawn_external = spy
+
+    def hammer():
+        for _ in range(per_thread):
+            ex.deliver(iter(()), Future())
+
+    threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    total = n_threads * per_thread
+    assert sum(counts) == total
+    # itertools.count() hands out each ticket exactly once, so every
+    # scheduler gets exactly total / n_sched deliveries.
+    assert counts == [total // n_sched] * n_sched
