@@ -1,7 +1,10 @@
 """Paper Figure 2: 99th-percentile latency vs offered request rate.
 
 Rates are swept from low load up to just beneath the *thread* backend's peak
-throughput (the paper's protocol), for each workload of each registered app.
+throughput (the paper's protocol), for each workload of each registered app,
+under every backend in the matrix (``BACKENDS`` — thread, thread-pool,
+fiber, fiber-steal), so the latency cliffs of all four dispatch mechanisms
+line up on a common x-axis.
 """
 from __future__ import annotations
 

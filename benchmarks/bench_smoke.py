@@ -1,0 +1,207 @@
+"""CI bench-smoke: tiny-duration sweep of every app × backend cell.
+
+Drives the full ``repro.apps.REGISTRY`` × ``BENCH_BACKENDS`` matrix the way
+the real benchmarks do, but at smoke scale, and writes a JSON artifact for
+CI.  Per cell it checks:
+
+1. **semantic parity** — a fixed, seeded request sequence must return results
+   identical to the ``thread`` baseline (the paper's migration invariant);
+2. **liveness under load** — a tiny open-loop trial must complete with zero
+   errors; achieved rps and the per-backend counters (steals, pool stalls,
+   queue depth high-water) are recorded.
+
+It also runs the **work-stealing probe**: interleaved paired trials of
+``fiber`` vs ``fiber-steal`` at ``n_workers=4`` on every app, stopping early
+once fiber-steal's best throughput reaches round-robin fiber's.  Paired,
+adjacent-in-time trials are used because absolute throughput on shared CI
+runners is noisy; the probe result is recorded in the artifact.
+
+The process exits non-zero iff a cell errors or parity is violated — the
+steal probe and the raw numbers are artifact data, not gates.
+
+Usage (what .github/workflows/ci.yml runs):
+    PYTHONPATH=src python -m benchmarks.run --smoke --json smoke.json \
+        [--app socialnetwork]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.apps import APP_NAMES, BENCH_BACKENDS, get_app_def
+from repro.core import run_trial, warmup
+
+BASELINE = "thread"
+
+# smoke scale: small enough for a CI lane, large enough to exercise
+# saturation paths (the pool's bounded queue, the steal path).
+SMOKE_RATE = 300.0
+SMOKE_DURATION = 0.4
+PARITY_REQUESTS = 4
+PROBE_RATE = 4000.0
+PROBE_DURATION = 0.25
+# The probe stops at the first round where fiber-steal's best >= fiber's,
+# so a generous budget only costs wall time when the comparison is losing —
+# and each extra paired round is another chance for the maxima to converge
+# on noisy shared runners.
+PROBE_MAX_ROUNDS = 16
+PROBE_MAX_OUTSTANDING = 128
+
+
+def _fixed_requests(app_name: str, workload: str = "mixed",
+                    n: int = PARITY_REQUESTS) -> List[Any]:
+    factory = get_app_def(app_name).make_request_factory(workload)
+    rng = np.random.default_rng(12)
+    return [factory(rng) for _ in range(n)]
+
+
+def _smoke_cell(app_name: str, backend: str,
+                requests: List[Any]) -> Dict[str, Any]:
+    """One app × backend cell: fixed requests (for parity) + tiny trial."""
+    d = get_app_def(app_name)
+    factory = d.make_request_factory("mixed")
+    with d.build(backend, n_workers=2, frontend_workers=4) as app:
+        results = [app.send(dest, method, payload).wait(timeout=30)
+                   for dest, method, payload in requests]
+        warmup(app, factory)
+        tr = run_trial(app, factory, SMOKE_RATE, SMOKE_DURATION, seed=3)
+    return {
+        "status": "ok",
+        "results": results,
+        "achieved_rps": round(tr.achieved_rps, 1),
+        "completed": tr.completed,
+        "errors": tr.errors,
+        "shed": tr.shed,
+        "backend_stats": {k: round(v, 6) for k, v in
+                          tr.backend_stats.items()},
+    }
+
+
+def _steal_probe(app_name: str,
+                 max_rounds: int = PROBE_MAX_ROUNDS) -> Dict[str, Any]:
+    """Paired fiber vs fiber-steal throughput at n_workers=4.
+
+    Interleaves trials (alternating order each round) so both backends see
+    the same runner weather, and stops as soon as fiber-steal's best reaches
+    fiber's best — peak-vs-peak with a bounded round budget.
+    """
+    d = get_app_def(app_name)
+    factory = d.make_request_factory("mixed")
+    apps = {}
+    best = {"fiber": 0.0, "fiber-steal": 0.0}
+    rounds_used = 0
+    try:
+        for b in best:
+            apps[b] = d.build(b, n_workers=4, frontend_workers=4)
+            apps[b].start()
+            warmup(apps[b], factory)
+        for i in range(max_rounds):
+            rounds_used = i + 1
+            order = (("fiber", "fiber-steal") if i % 2 == 0
+                     else ("fiber-steal", "fiber"))
+            for b in order:
+                tr = run_trial(apps[b], factory, PROBE_RATE, PROBE_DURATION,
+                               seed=20 + i, drain=1.0,
+                               max_outstanding=PROBE_MAX_OUTSTANDING)
+                best[b] = max(best[b], tr.achieved_rps)
+            if best["fiber-steal"] >= best["fiber"]:
+                break
+        steals = apps["fiber-steal"].backend_stats().steals
+    finally:
+        for app in apps.values():
+            app.stop()
+    return {
+        "fiber_peak_rps": round(best["fiber"], 1),
+        "fiber_steal_peak_rps": round(best["fiber-steal"], 1),
+        "steals": steals,
+        "rounds": rounds_used,
+        "ok": best["fiber-steal"] >= best["fiber"],
+    }
+
+
+def run_smoke(apps: Optional[Sequence[str]] = None,
+              json_path: Optional[str] = None,
+              steal_probe: bool = True,
+              quick: bool = False) -> int:
+    """Run the smoke matrix; write the artifact; return the exit code.
+
+    ``quick`` halves the probe's round budget — the per-cell trials are
+    already tiny — for local iteration on the harness itself.
+    """
+    probe_rounds = max(PROBE_MAX_ROUNDS // 2, 2) if quick \
+        else PROBE_MAX_ROUNDS
+    apps = list(apps) if apps else list(APP_NAMES)
+    out: Dict[str, Any] = {
+        "backends": list(BENCH_BACKENDS),
+        "apps": apps,
+        "cells": {},
+        "parity": {},
+        "steal_probe": {},
+        "failures": [],
+    }
+    for app_name in apps:
+        requests = _fixed_requests(app_name)
+        cells: Dict[str, Dict[str, Any]] = {}
+        for backend in BENCH_BACKENDS:
+            key = f"{app_name}/{backend}"
+            try:
+                cell = _smoke_cell(app_name, backend, requests)
+            except Exception as exc:  # noqa: BLE001 - cell isolation
+                cell = {"status": "error", "error": repr(exc)}
+                out["failures"].append(f"{key}: {exc!r}")
+            else:
+                if cell["errors"]:
+                    out["failures"].append(
+                        f"{key}: {cell['errors']} request errors")
+            cells[backend] = cell
+            out["cells"][key] = {k: v for k, v in cell.items()
+                                 if k != "results"}
+            print(f"smoke {key}: {cell.get('status')} "
+                  f"rps={cell.get('achieved_rps')} "
+                  f"errors={cell.get('errors')}", flush=True)
+        # parity: every backend must reproduce the thread baseline bit-for-bit
+        if cells.get(BASELINE, {}).get("status") == "ok":
+            base = cells[BASELINE]["results"]
+            mismatches = [b for b, c in cells.items()
+                          if c.get("status") == "ok"
+                          and c.get("results") != base]
+            out["parity"][app_name] = {"ok": not mismatches,
+                                       "mismatches": mismatches}
+            if mismatches:
+                out["failures"].append(f"{app_name}: parity violated vs "
+                                       f"{BASELINE} by {mismatches}")
+        else:
+            # no healthy baseline to compare against; the thread-cell error
+            # is already a recorded failure — don't pile on spurious ones.
+            out["parity"][app_name] = {"ok": False,
+                                       "mismatches": [],
+                                       "note": f"{BASELINE} cell errored"}
+        if steal_probe:
+            try:
+                probe = _steal_probe(app_name, max_rounds=probe_rounds)
+            except Exception as exc:  # noqa: BLE001 - keep the artifact
+                probe = {"status": "error", "error": repr(exc)}
+                out["failures"].append(f"{app_name}/steal_probe: {exc!r}")
+            out["steal_probe"][app_name] = probe
+            print(f"steal probe {app_name}: "
+                  f"fiber={probe.get('fiber_peak_rps')} "
+                  f"fiber-steal={probe.get('fiber_steal_peak_rps')} "
+                  f"ok={probe.get('ok')} "
+                  f"(rounds={probe.get('rounds')})", flush=True)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}", flush=True)
+    if out["failures"]:
+        print("SMOKE FAILURES:", file=sys.stderr)
+        for fail in out["failures"]:
+            print(f"  {fail}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(run_smoke())

@@ -1,16 +1,18 @@
-"""Microbenchmark: async-call spawn/join cost, thread vs fiber.
+"""Microbenchmark: async-call spawn/join cost, across every backend.
 
 Paper analogue: "the ComposePost service spends 23% of its time in clone and
-exit system calls".  We measure (a) the raw cost of spawning+joining async
-no-op carriers under each backend, and (b) the fraction of a ComposePost
-request's wall time attributable to spawn alone.
+exit system calls".  We measure the raw cost of spawning+joining async no-op
+carriers under each registered backend: thread pays a ``clone()`` per call,
+thread-pool a queue push to pre-spawned carriers, fiber/fiber-steal a heap
+allocation + deque push.
 """
 from __future__ import annotations
 
 import time
 from typing import Dict, List
 
-from repro.core import App, AsyncRpc, Compute, ServiceSpec, WaitAll
+from repro.core import (App, AsyncRpc, BACKEND_NAMES, Compute, ServiceSpec,
+                        WaitAll)
 
 
 def _noop(svc, payload):
@@ -57,14 +59,17 @@ def run(quick: bool = False) -> List[str]:
     rows = []
     iters = 50 if quick else 200
     res = {}
-    for backend in ("thread", "fiber"):
+    for backend in BACKEND_NAMES:
         r = measure_spawn_cost(backend, iters=iters)
         res[backend] = r
         rows.append(f"spawn_overhead/{backend},{r['us_per_async_call']:.2f},"
                     f"req_us={r['us_per_request']:.1f}")
-    ratio = res["thread"]["us_per_async_call"] / max(
-        res["fiber"]["us_per_async_call"], 1e-9)
-    rows.append(f"spawn_overhead/thread_over_fiber,{ratio:.2f},x")
+    base = res["thread"]["us_per_async_call"]
+    for backend in BACKEND_NAMES:
+        if backend == "thread":
+            continue
+        ratio = base / max(res[backend]["us_per_async_call"], 1e-9)
+        rows.append(f"spawn_overhead/thread_over_{backend},{ratio:.2f},x")
     return rows
 
 

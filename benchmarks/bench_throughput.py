@@ -1,21 +1,24 @@
-"""Paper Figure 1: peak throughput per workload, thread vs fiber.
+"""Paper Figure 1: peak throughput per workload, across every backend.
 
 Protocol follows the paper: ramp the open-loop request rate until processed
 requests/s stops increasing; report the best achieved rate.  Runs every app
 in ``repro.apps.REGISTRY`` (SocialNetwork, HotelReservation, MediaService)
-so the headline fiber-vs-thread claim is measured across service-graph
-shapes, not one hand-picked graph.  Worker pools are sized generously for
-the thread backend (DSB's thread-per-connection Thrift servers) so that
-async-call spawn cost — not pool size — is the binding constraint.
+crossed with every registered execution backend (``BENCH_BACKENDS``: thread,
+thread-pool, fiber, fiber-steal), so the headline claim is measured across
+service-graph shapes *and* dispatch mechanisms, not one hand-picked pair.
+Worker pools are sized generously for the thread-family backends (DSB's
+thread-per-connection Thrift servers) so that async-call spawn cost — not
+pool size — is the binding constraint.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence
 
-from repro.apps import APP_NAMES, build_bench_app, get_app_def
+from repro.apps import APP_NAMES, BENCH_BACKENDS, build_bench_app, get_app_def
 from repro.core import find_peak_throughput, warmup
 
-BACKENDS = ("thread", "fiber")
+BACKENDS = BENCH_BACKENDS
+BASELINE = "thread"  # gains are reported relative to the paper's baseline
 
 
 def measure_peak(app_name: str, backend: str, workload: str, *,
@@ -45,10 +48,13 @@ def run(quick: bool = False,
                 peaks[workload][backend] = p
                 rows.append(f"peak_throughput/{app_name}/{workload}/{backend},"
                             f"{1e6 / max(p, 1e-9):.2f},rps={p:.0f}")
-            gain = (peaks[workload]["fiber"]
-                    / max(peaks[workload]["thread"], 1e-9))
-            rows.append(f"peak_throughput/{app_name}/{workload}/fiber_gain,"
-                        f"{gain:.2f},x")
+            base = max(peaks[workload][BASELINE], 1e-9)
+            for backend in BACKENDS:
+                if backend == BASELINE:
+                    continue
+                gain = peaks[workload][backend] / base
+                rows.append(f"peak_throughput/{app_name}/{workload}/"
+                            f"{backend}_gain,{gain:.2f},x")
     return rows
 
 

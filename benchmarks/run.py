@@ -9,12 +9,18 @@ Tables:
   4. serving          — beyond-paper: LLM serving engine, thread vs fiber
   5. roofline         — dry-run roofline terms (reads launch/dryrun results)
 
-The microservice tables (2, 3) sweep every app in ``repro.apps.REGISTRY``;
-restrict with ``--app`` (repeatable / comma-separated).
+The microservice tables (2, 3) sweep every app in ``repro.apps.REGISTRY``
+crossed with every backend in ``repro.apps.BENCH_BACKENDS``; restrict with
+``--app`` (repeatable / comma-separated).
+
+``--smoke`` switches to the CI bench-smoke matrix instead (tiny trials for
+every app × backend cell, parity + steal probe, JSON artifact via
+``--json``; see ``bench_smoke.py``).
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only peak,p99]
       [--app socialnetwork --app hotelreservation]
+  PYTHONPATH=src python -m benchmarks.run --smoke --json smoke.json
 
 Env (equivalent to the flags, kept for CI wrappers):
   BENCH_QUICK=1   shorter trials
@@ -46,6 +52,12 @@ def main(argv=None) -> None:
     ap.add_argument("--app", action="append", default=None,
                     help="apps to sweep in the microservice tables "
                          "(default: all registered)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the CI bench-smoke matrix (app x backend "
+                         "cells, parity + steal probe) instead of the "
+                         "full benchmarks")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="with --smoke: write the JSON artifact here")
     args = ap.parse_args(argv)
 
     quick = args.quick
@@ -60,6 +72,16 @@ def main(argv=None) -> None:
                 get_app_def(a)  # fail fast on typos
         except ValueError as e:
             ap.error(str(e))
+
+    if args.json and not args.smoke:
+        ap.error("--json only applies to --smoke (the full benchmarks "
+                 "emit CSV on stdout)")
+    if args.smoke:
+        if selected:
+            ap.error("--only/BENCH_ONLY does not apply to --smoke "
+                     "(the smoke matrix always runs every backend cell)")
+        from .bench_smoke import run_smoke
+        sys.exit(run_smoke(apps=apps, json_path=args.json, quick=quick))
 
     benches = []
     from . import bench_spawn_overhead, bench_throughput, bench_latency

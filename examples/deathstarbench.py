@@ -1,14 +1,16 @@
-"""DeathStarBench reproduction driver — any registered app, both backends.
+"""DeathStarBench reproduction driver — any registered app, every backend.
 
 Measures peak throughput (paper Fig. 1) and p99-vs-rate (paper Fig. 2)
-for each of the app's request generators under both async backends.
+for each of the app's request generators under every registered async
+backend (thread, thread-pool, fiber, fiber-steal).
 
     PYTHONPATH=src python examples/deathstarbench.py \
-        --app {socialnetwork,hotelreservation,mediaservice} [--quick]
+        --app {socialnetwork,hotelreservation,mediaservice} [--quick] \
+        [--backend fiber --backend fiber-steal]
 """
 import argparse
 
-from repro.apps import APP_NAMES, build_bench_app, get_app_def
+from repro.apps import APP_NAMES, BENCH_BACKENDS, build_bench_app, get_app_def
 from repro.core import find_peak_throughput, latency_sweep, warmup
 
 
@@ -17,8 +19,12 @@ def main(argv=None):
     ap.add_argument("--app", default="socialnetwork", choices=APP_NAMES)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--workloads", nargs="*", default=None)
+    ap.add_argument("--backend", action="append", default=None,
+                    choices=BENCH_BACKENDS,
+                    help="backends to sweep (default: all registered)")
     args = ap.parse_args(argv)
     duration = 0.6 if args.quick else 1.2
+    backends = tuple(args.backend) if args.backend else BENCH_BACKENDS
 
     d = get_app_def(args.app)
     workloads = args.workloads or list(d.workloads)
@@ -28,27 +34,32 @@ def main(argv=None):
     peaks = {}
     for wl in workloads:
         factory = d.make_request_factory(wl)
-        for backend in ("thread", "fiber"):
+        for backend in backends:
             with build_bench_app(d.name, backend) as app:
                 warmup(app, factory)
                 pk = find_peak_throughput(app, factory, start_rate=200,
                                           duration=duration)
             peaks[(wl, backend)] = pk.peak_rps
-            print(f"  {wl:10s} {backend:7s}: {pk.peak_rps:8.0f} rps")
-        gain = peaks[(wl, 'fiber')] / max(peaks[(wl, 'thread')], 1e-9)
-        print(f"  {wl:10s} fiber gain: {gain:.2f}x")
+            print(f"  {wl:10s} {backend:11s}: {pk.peak_rps:8.0f} rps")
+        base = peaks.get((wl, "thread"))
+        if base:
+            for backend in backends:
+                if backend == "thread":
+                    continue
+                gain = peaks[(wl, backend)] / max(base, 1e-9)
+                print(f"  {wl:10s} {backend} gain: {gain:.2f}x")
 
     print("\n=== p99 latency vs offered rate (paper Fig. 2) ===")
     for wl in workloads:
         factory = d.make_request_factory(wl)
-        thread_peak = peaks[(wl, "thread")]
-        rates = [thread_peak * f for f in (0.2, 0.5, 0.8)]
-        for backend in ("thread", "fiber"):
+        ref_peak = peaks[(wl, backends[0])]
+        rates = [ref_peak * f for f in (0.2, 0.5, 0.8)]
+        for backend in backends:
             with build_bench_app(d.name, backend) as app:
                 warmup(app, factory)
                 rows = latency_sweep(app, factory, rates, duration=duration)
             for tr in rows:
-                print(f"  {wl:10s} {backend:7s} @{tr.offered_rps:7.0f} rps: "
+                print(f"  {wl:10s} {backend:11s} @{tr.offered_rps:7.0f} rps: "
                       f"p99={tr.p99 * 1e3:9.2f} ms")
 
 

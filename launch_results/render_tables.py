@@ -5,8 +5,9 @@
         --bench bench.csv [--app hotelreservation]
 
 ``--bench`` consumes the ``name,us_per_call,derived`` CSV emitted by
-``benchmarks/run.py`` and renders one thread-vs-fiber markdown table per
-app (peak throughput per workload + fiber gain, then the p99 sweep).
+``benchmarks/run.py`` and renders one backend-matrix markdown table per app
+(peak throughput per workload for every backend + gains vs the thread
+baseline, then the p99 sweep).
 """
 import argparse
 import json
@@ -15,6 +16,15 @@ import re
 from collections import defaultdict
 
 HERE = os.path.dirname(os.path.abspath(__file__))
+
+# canonical column order for the backend matrix; backends the CSV mentions
+# that are not listed here (future registry entries) are appended sorted.
+BACKEND_ORDER = ["thread", "thread-pool", "fiber", "fiber-steal"]
+
+
+def _order_backends(found):
+    known = [b for b in BACKEND_ORDER if b in found]
+    return known + sorted(set(found) - set(known))
 
 
 def fmt_t(s):
@@ -45,9 +55,9 @@ def _parse_derived(derived):
 
 
 def render_bench(path, app_filter=None):
-    """Render per-app thread-vs-fiber tables from benchmarks/run.py CSV."""
+    """Render per-app backend-matrix tables from benchmarks/run.py CSV."""
     peaks = defaultdict(dict)   # (app, workload) -> backend -> rps
-    gains = {}                  # (app, workload) -> fiber gain
+    gains = defaultdict(dict)   # (app, workload) -> backend -> gain vs thread
     p99s = defaultdict(list)    # app -> (workload, backend, rate, p99, p50)
     with open(path) as f:
         for line in f:
@@ -59,8 +69,9 @@ def render_bench(path, app_filter=None):
             m = re.match(r"peak_throughput/([^/]+)/([^/]+)/([^/,@]+)$", name)
             if m:
                 app, wl, backend = m.groups()
-                if backend == "fiber_gain":
-                    gains[(app, wl)] = float(value)
+                if backend.endswith("_gain"):
+                    # "fiber_gain", "fiber-steal_gain", ... vs thread baseline
+                    gains[(app, wl)][backend[:-len("_gain")]] = float(value)
                 else:
                     peaks[(app, wl)][backend] = d.get("rps", 0.0)
                 continue
@@ -85,13 +96,22 @@ def render_bench(path, app_filter=None):
         print(f"### {app}\n")
         wls = [wl for (a, wl) in peaks if a == app]
         if wls:
-            print("| workload | thread rps | fiber rps | fiber gain |")
-            print("|---|---:|---:|---:|")
+            backends = _order_backends(
+                {b for wl in wls for b in peaks[(app, wl)]})
+            gain_cols = [b for b in backends if b != "thread"]
+            header = ("| workload | "
+                      + " | ".join(f"{b} rps" for b in backends)
+                      + " | "
+                      + " | ".join(f"{b} gain" for b in gain_cols) + " |")
+            print(header)
+            print("|---" + "|---:" * (len(backends) + len(gain_cols)) + "|")
             for wl in wls:
                 row = peaks[(app, wl)]
-                gain = gains.get((app, wl), float("nan"))
-                print(f"| {wl} | {row.get('thread', 0):.0f} "
-                      f"| {row.get('fiber', 0):.0f} | {gain:.2f}x |")
+                g = gains.get((app, wl), {})
+                cells = [f"{row.get(b, 0):.0f}" for b in backends]
+                cells += [f"{g.get(b, float('nan')):.2f}x"
+                          for b in gain_cols]
+                print(f"| {wl} | " + " | ".join(cells) + " |")
             print()
         if p99s.get(app):
             print("| workload | backend | offered rps | p99 | p50 |")

@@ -11,11 +11,12 @@ from .mediaservice import build_mediaservice
 # still imported by older call sites).
 from .socialnetwork import (WORKLOADS, build_socialnetwork,
                             make_request_factory)
-from .registry import (APP_NAMES, REGISTRY, AppDef, build_bench_app,
-                       get_app_def)
+from .registry import (APP_NAMES, BENCH_BACKENDS, REGISTRY, AppDef,
+                       build_bench_app, get_app_def)
 
 __all__ = [
-    "REGISTRY", "APP_NAMES", "AppDef", "get_app_def", "build_bench_app",
+    "REGISTRY", "APP_NAMES", "BENCH_BACKENDS", "AppDef", "get_app_def",
+    "build_bench_app",
     "build_socialnetwork", "build_hotelreservation", "build_mediaservice",
     "make_request_factory", "WORKLOADS",
 ]

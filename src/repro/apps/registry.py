@@ -10,8 +10,13 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Tuple
 
-from ..core import App
+from ..core import App, BACKEND_NAMES
 from . import hotelreservation, mediaservice, socialnetwork
+
+# The benchmark/CI backend matrix: every registered execution backend.
+# Harnesses iterate this instead of hard-coding backend pairs, so a new
+# executor in core.executor.BACKEND_FACTORIES joins every sweep for free.
+BENCH_BACKENDS = BACKEND_NAMES
 
 # build(backend, *, n_workers, frontend_workers, net_latency, overrides)
 BuildFn = Callable[..., App]
@@ -69,8 +74,12 @@ def get_app_def(name: str) -> AppDef:
 def build_bench_app(name: str, backend: str, **overrides: Any) -> App:
     """Build ``name`` with the benchmark pool sizing: generous thread pools
     (DSB's thread-per-connection Thrift servers) so async-call spawn cost —
-    not pool size — is the binding constraint, as in the paper's setup."""
-    sizing = (dict(n_workers=8, frontend_workers=16) if backend == "thread"
+    not pool size — is the binding constraint, as in the paper's setup.
+    Thread-family backends (``thread``, ``thread-pool``) get the wide
+    dispatcher pools; fiber-family backends keep the paper's small scheduler
+    counts."""
+    sizing = (dict(n_workers=8, frontend_workers=16)
+              if backend.startswith("thread")
               else dict(n_workers=2, frontend_workers=2))
     sizing.update(overrides)
     return get_app_def(name).build(backend, **sizing)

@@ -1,20 +1,36 @@
-"""Service executors: the two async-call backends the paper compares.
+"""Service executors: the async-call backends under study.
 
-``ThreadExecutor``
+The paper compares two; this repo grows the comparison into a backend
+design-space study over four (see ``BACKEND_NAMES``):
+
+``thread``  (:class:`ThreadExecutor`)
     Faithful to DeathStarBench's ``std::async`` default launch policy: every
     asynchronous RPC spawns a **fresh kernel thread** whose body performs the
     call and is joined on ``get()``.  Dispatcher threads pull requests from
     the service mailbox.  Thread create/exit + kernel scheduling is the
     bottleneck the paper measures (23% of ComposePost time in clone/exit).
 
-``FiberExecutor``
+``thread-pool``  (:class:`PooledThreadExecutor`)
+    The obvious production alternative to raw ``std::async``: a **bounded,
+    pre-spawned carrier pool** with a shared work queue.  An async call costs
+    a queue push instead of a ``clone()``; saturation shows up as queue depth
+    and pool-full stalls instead of spawn latency.
+
+``fiber``  (:class:`FiberExecutor`)
     The paper's fix: each dispatcher is a :class:`FiberScheduler`; requests
     and async-RPC carriers are **fibers** on that scheduler.  Spawn cost is a
-    function call; waits are overlapped cooperatively.
+    function call; waits are overlapped cooperatively.  New work is placed
+    round-robin (boost's work-*sharing* analogue) and stays pinned.
 
-Both interpret the *same* handler generators (see ``effects.py``) — switching
-a service between backends is a one-word config change, mirroring the paper's
-``std::async`` → ``boost::fiber::async`` search-and-replace.
+``fiber-steal``  (:class:`FiberExecutor` with ``steal=True``)
+    Same fibers, boost's work-*stealing* algorithm analogue: idle schedulers
+    pull parked-ready fibers from loaded siblings instead of sleeping.
+
+All four interpret the *same* handler generators (see ``effects.py``) —
+switching a service between backends is a one-word config change, mirroring
+the paper's ``std::async`` → ``boost::fiber::async`` search-and-replace.
+New backends register in ``BACKEND_FACTORIES`` and every harness (benchmarks,
+CI smoke matrix, parity tests) picks them up from there.
 """
 from __future__ import annotations
 
@@ -22,11 +38,13 @@ import itertools
 import queue
 import threading
 import time
-from typing import Any, Generator, List, Optional
+from collections import deque
+from typing import Any, Callable, Dict, Generator, List, Optional
 
 from .calibrate import burn
 from .effects import AsyncRpc, Compute, Offload, Sleep, SpawnLocal, Wait, WaitAll
-from .fiber import FiberScheduler
+from .fiber import FiberScheduler, StealGroup
+from .metrics import BackendStats
 from .future import Future
 
 _SHUTDOWN = object()
@@ -46,6 +64,10 @@ class Executor:
 
     # instrumentation
     spawns: int = 0
+
+    def stats(self) -> BackendStats:
+        """Cumulative-since-start execution counters (see BackendStats)."""
+        return BackendStats(spawns=self.spawns)
 
 
 class ThreadExecutor(Executor):
@@ -114,17 +136,12 @@ class ThreadExecutor(Executor):
 
     def _interpret(self, eff: Any) -> Any:
         if isinstance(eff, AsyncRpc):
-            # THE paper's baseline operation: a fresh kernel thread per call.
+            # THE paper's baseline operation: spawn a carrier per async call
+            # (a fresh kernel thread here; a pool submission in the
+            # PooledThreadExecutor subclass).
             fut = Future()
-            t0 = time.perf_counter()
-            t = threading.Thread(
-                target=self._carrier_body,
-                args=(eff.dest, eff.method, eff.payload, fut),
-                daemon=True)
-            t.start()
-            with self._lock:
-                self.spawns += 1
-                self.spawn_seconds += time.perf_counter() - t0
+            self._spawn_carrier(
+                self.app.rpc_carrier(eff.dest, eff.method, eff.payload), fut)
             return fut
 
         if isinstance(eff, Wait):
@@ -146,36 +163,311 @@ class ThreadExecutor(Executor):
 
         if isinstance(eff, SpawnLocal):
             fut = Future()
-            t0 = time.perf_counter()
-            t = threading.Thread(target=self._drive,
-                                 args=(eff.genfn(*eff.args), fut),
-                                 daemon=True)
-            t.start()
-            with self._lock:
-                self.spawns += 1
-                self.spawn_seconds += time.perf_counter() - t0
+            self._spawn_carrier(eff.genfn(*eff.args), fut)
             return fut
 
         raise TypeError(f"Unknown effect: {eff!r}")
 
-    def _carrier_body(self, dest: str, method: str, payload: Any,
-                      fut: Future) -> None:
-        """Body of the per-call thread: perform the RPC, block on the reply."""
-        try:
-            self._drive(self.app.rpc_carrier(dest, method, payload), fut)
-        except BaseException as exc:  # pragma: no cover - _drive catches
-            if not fut.done:
+    def _spawn_carrier(self, gen: Generator, fut: Future) -> None:
+        """std::async semantics: one fresh kernel thread per async call."""
+        t0 = time.perf_counter()
+        t = threading.Thread(target=self._drive, args=(gen, fut), daemon=True)
+        t.start()
+        with self._lock:
+            self.spawns += 1
+            self.spawn_seconds += time.perf_counter() - t0
+
+    def stats(self) -> BackendStats:
+        with self._lock:
+            return BackendStats(spawns=self.spawns,
+                                spawn_seconds=self.spawn_seconds)
+
+
+class PooledThreadExecutor(ThreadExecutor):
+    """Bounded pre-spawned carrier pool with a shared work queue.
+
+    Dispatchers behave exactly like :class:`ThreadExecutor`'s; only the
+    async-call spawn path differs: carriers are queued to a fixed set of
+    pre-spawned pool threads, so ``AsyncRpc``/``SpawnLocal`` cost a queue
+    push, never a ``clone()``.  The pool is deliberately *bounded* so that
+    saturation is observable: ``pool_stalls`` counts submissions that found
+    the queue full, ``stall_seconds`` the wall time dispatchers spent blocked
+    on it, and ``queue_depth_hwm`` the queue-depth high-water mark.
+
+    Saturation policy, in order of pressure:
+
+    * a **dispatcher** that finds the queue full blocks with backpressure
+      accounting up to ``stall_timeout``, then degrades to caller-runs;
+    * a **pool thread** about to block on a join instead *work-helps*:
+      it drains queued carriers until its futures resolve.  Helped carriers
+      are run in suspendable mode — a helped carrier that would block is
+      parked on a done-callback and its continuation re-queued — so helping
+      is iterative (flat stack), and a saturated pool can neither deadlock
+      on itself nor recurse without bound;
+    * a **pool thread** that submits while the queue is full runs the new
+      carrier inline, also in suspendable mode.
+
+    Fresh submissions executed by the pool loop block their pool thread on
+    joins (classic bounded-pool semantics — that occupancy *is* the
+    saturation being measured); suspendable mode exists only on the
+    pressure paths above.
+    """
+
+    def __init__(self, app: Any, name: str, n_workers: int = 4, *,
+                 pool_size: Optional[int] = None,
+                 queue_bound: Optional[int] = None,
+                 stall_timeout: float = 0.25) -> None:
+        super().__init__(app, name, n_workers)
+        self.pool_size = pool_size if pool_size is not None \
+            else max(4 * n_workers, 8)
+        self.queue_bound = queue_bound if queue_bound is not None \
+            else 8 * self.pool_size
+        self.stall_timeout = stall_timeout
+        # one lock, two wait-sets: pool threads wait for work, stalled
+        # dispatchers wait for queue space
+        self._qlock = threading.Lock()
+        self._work_cv = threading.Condition(self._qlock)
+        self._space_cv = threading.Condition(self._qlock)
+        self._carriers: "deque" = deque()   # fresh submissions (bounded)
+        self._resumes: "deque" = deque()    # suspended-carrier continuations
+        self._shutdown = False
+        self._pool: List[threading.Thread] = []
+        self._pool_ids: "set[int]" = set()
+        self.pool_stalls = 0
+        self.stall_seconds = 0.0
+        self.queue_depth_hwm = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        super().start()  # dispatchers
+        self._shutdown = False
+        for i in range(self.pool_size):
+            t = threading.Thread(target=self._pool_loop,
+                                 name=f"{self.name}-pool{i}", daemon=True)
+            t.start()
+            self._pool.append(t)
+            self._pool_ids.add(t.ident)
+
+    def stop(self) -> None:
+        super().stop()  # dispatchers first: no new submissions
+        with self._qlock:
+            self._shutdown = True
+            self._work_cv.notify_all()
+            self._space_cv.notify_all()
+        for t in self._pool:
+            t.join(timeout=5.0)
+        self._pool.clear()
+        self._pool_ids.clear()
+
+    def _pool_loop(self) -> None:
+        while True:
+            with self._qlock:
+                while not self._resumes and not self._carriers:
+                    if self._shutdown:
+                        return
+                    self._work_cv.wait()
+                if self._resumes:
+                    # continuations first: they unblock waiting carriers
+                    gen, fut, resume = self._resumes.popleft()
+                else:
+                    (gen, fut), resume = self._carriers.popleft(), None
+                    self._space_cv.notify()
+            if resume is None:
+                self._drive(gen, fut)          # classic blocking carrier
+            else:
+                self._run_suspendable(gen, fut, resume)
+
+    def _take_work_nowait(self):
+        with self._qlock:
+            if self._resumes:
+                return self._resumes.popleft()
+            if self._carriers:
+                gen, fut = self._carriers.popleft()
+                self._space_cv.notify()
+                return (gen, fut, None)
+        return None
+
+    # ----------------------------------------------------------- wait path
+    def _interpret(self, eff: Any) -> Any:
+        # Work-helping: a pool thread about to block on a join first drains
+        # queued work until the awaited futures resolve.  Without this a
+        # saturated pool deadlocks on itself — every pool thread parked on a
+        # future whose carrier is still sitting in the queue.
+        if isinstance(eff, (Wait, WaitAll)) \
+                and threading.get_ident() in self._pool_ids:
+            futs = [eff.future] if isinstance(eff, Wait) else list(eff.futures)
+            self._help_until(futs)
+        return super()._interpret(eff)
+
+    def _help_until(self, futs: List[Future]) -> None:
+        while not all(f.done for f in futs):
+            item = self._take_work_nowait()
+            if item is None:
+                # nothing to help with; progress is on other threads.  The
+                # short timeout also bounds the window in which a freshly
+                # queued continuation (that may be what resolves our future)
+                # waits for a helper to notice it.
+                for f in futs:
+                    if not f.done:
+                        f.wait_done(timeout=0.005)
+                        break
+                continue
+            gen, fut, resume = item
+            self._run_suspendable(gen, fut, resume)
+
+    def _run_suspendable(self, gen: Generator, fut: Future,
+                         resume: Optional[Any] = None) -> None:
+        """Drive a carrier without ever blocking this thread on a join: an
+        unresolved Wait/WaitAll parks the generator on a done-callback that
+        re-queues its continuation.  This is what keeps work-helping and
+        saturated fan-out flat-stacked."""
+        send_value: Any = None
+        throw_exc: Optional[BaseException] = None
+        if resume is not None:
+            kind, payload = resume
+            if kind == "throw":
+                throw_exc = payload
+            else:
+                send_value = payload
+        while True:
+            try:
+                if throw_exc is not None:
+                    exc, throw_exc = throw_exc, None
+                    eff = gen.throw(exc)
+                else:
+                    eff = gen.send(send_value)
+            except StopIteration as stop:
+                fut.set_result(stop.value)
+                return
+            except BaseException as exc:
                 fut.set_exception(exc)
+                return
+            if isinstance(eff, (Wait, WaitAll)):
+                waits = ([eff.future] if isinstance(eff, Wait)
+                         else list(eff.futures))
+                if all(w.done for w in waits):
+                    try:
+                        send_value = (waits[0].result()
+                                      if isinstance(eff, Wait)
+                                      else [w.result() for w in waits])
+                        throw_exc = None
+                    except BaseException as exc:
+                        send_value, throw_exc = None, exc
+                    continue
+                self._suspend_on(gen, fut, eff, waits)
+                return
+            try:
+                send_value = super()._interpret(eff)  # non-join effects only
+                throw_exc = None
+            except BaseException as exc:
+                throw_exc = exc
+
+    def _suspend_on(self, gen: Generator, fut: Future, eff: Any,
+                    waits: List[Future]) -> None:
+        if isinstance(eff, Wait):
+            def _resume_one(w: Future) -> None:
+                try:
+                    resume = ("send", w.result())
+                except BaseException as exc:
+                    resume = ("throw", exc)
+                self._enqueue_resume(gen, fut, resume)
+            waits[0].add_done_callback(_resume_one)
+            return
+        remaining = [len(waits)]
+        rlock = threading.Lock()
+
+        def _resume_all(_w: Future) -> None:
+            with rlock:
+                remaining[0] -= 1
+                if remaining[0]:
+                    return
+            try:
+                resume = ("send", [w.result() for w in waits])
+            except BaseException as exc:
+                resume = ("throw", exc)
+            self._enqueue_resume(gen, fut, resume)
+        for w in waits:
+            w.add_done_callback(_resume_all)
+
+    def _enqueue_resume(self, gen: Generator, fut: Future,
+                        resume: Any) -> None:
+        # unbounded on purpose: continuations are not new admissions (the
+        # carrier was counted and bounded at submission), and refusing them
+        # could deadlock the very join they resolve
+        with self._qlock:
+            self._resumes.append((gen, fut, resume))
+            self._work_cv.notify()
+
+    # ----------------------------------------------------------- spawn path
+    def _spawn_carrier(self, gen: Generator, fut: Future) -> None:
+        on_pool = threading.get_ident() in self._pool_ids
+        queued = False
+        stalled = False
+        t0 = time.perf_counter()
+        with self._qlock:
+            if len(self._carriers) >= self.queue_bound:
+                stalled = True
+                if not on_pool:
+                    # dispatcher: block with backpressure accounting, then —
+                    # on pathological saturation — degrade to caller-runs so
+                    # the service makes progress instead of wedging
+                    deadline = t0 + self.stall_timeout
+                    while len(self._carriers) >= self.queue_bound \
+                            and not self._shutdown:
+                        left = deadline - time.perf_counter()
+                        if left <= 0:
+                            break
+                        self._space_cv.wait(timeout=left)
+                # pool thread: fall through to caller-runs immediately — its
+                # queue slot may only free when *it* helps, so waiting here
+                # could deadlock
+            if len(self._carriers) < self.queue_bound:
+                self._carriers.append((gen, fut))
+                queued = True
+                self._work_cv.notify()
+                depth = len(self._carriers) + len(self._resumes)
+            else:
+                depth = None
+        with self._lock:
+            self.spawns += 1  # every carrier counts, queued or caller-run
+            if stalled:
+                self.pool_stalls += 1
+                if not on_pool:
+                    self.stall_seconds += time.perf_counter() - t0
+            if depth is not None and depth > self.queue_depth_hwm:
+                self.queue_depth_hwm = depth
+        if not queued:
+            if on_pool:
+                self._run_suspendable(gen, fut)
+            else:
+                self._drive(gen, fut)
+
+    def stats(self) -> BackendStats:
+        with self._lock:
+            return BackendStats(spawns=self.spawns,
+                                spawn_seconds=self.spawn_seconds,
+                                pool_stalls=self.pool_stalls,
+                                stall_seconds=self.stall_seconds,
+                                queue_depth_hwm=self.queue_depth_hwm)
 
 
 class FiberExecutor(Executor):
-    """Fiber-per-async-call backend (the paper's technique)."""
+    """Fiber-per-async-call backend (the paper's technique).
 
-    def __init__(self, app: Any, name: str, n_workers: int = 1) -> None:
+    ``steal=False``: round-robin placement, fibers pinned (work-sharing).
+    ``steal=True``: same placement, but idle schedulers steal parked-ready
+    fibers from loaded siblings (work-stealing; see ``fiber.py``).
+    """
+
+    def __init__(self, app: Any, name: str, n_workers: int = 1, *,
+                 steal: bool = False) -> None:
         self.app = app
         self.name = name
+        self.steal = steal
+        group = StealGroup() if steal and n_workers > 1 else None
         self._scheds: List[FiberScheduler] = [
-            FiberScheduler(app, name=f"{name}-fib{i}") for i in range(n_workers)
+            FiberScheduler(app, name=f"{name}-fib{i}", steal_group=group)
+            for i in range(n_workers)
         ]
         # atomic round-robin ticket; a plain `self._rr += 1` is a lost-update
         # race when many dispatcher threads deliver concurrently, which
@@ -190,6 +482,10 @@ class FiberExecutor(Executor):
     def switches(self) -> int:
         return sum(s.switches for s in self._scheds)
 
+    @property
+    def steals(self) -> int:
+        return sum(s.steals for s in self._scheds)
+
     def start(self) -> None:
         for s in self._scheds:
             s.start()
@@ -199,16 +495,40 @@ class FiberExecutor(Executor):
             s.stop()
 
     def deliver(self, gen: Generator, reply: Future) -> None:
-        # round-robin across schedulers (boost work-sharing analogue);
-        # each fiber stays pinned to its scheduler thereafter.
+        # Round-robin placement in both modes (as in boost, whose
+        # work_stealing algorithm also keeps naive local placement and lets
+        # the steal path fix imbalance).  A least-loaded placement variant
+        # was measured and *lost* to rr+steal on the widest-fan-out app:
+        # concurrent delivers all read the same stale queue lengths and herd
+        # onto one scheduler, while rr spreads bursts by construction.
         s = self._scheds[next(self._rr) % len(self._scheds)]
         s.spawn_external(gen, reply)
+
+    def stats(self) -> BackendStats:
+        return BackendStats(spawns=self.spawns, switches=self.switches,
+                            steals=self.steals)
+
+
+# --------------------------------------------------------------- registry
+# The backend set is *data*: benchmarks, the CI smoke matrix, parity tests
+# and the app builders all iterate BACKEND_NAMES, so a future backend
+# (asyncio, io_uring-style batching, ...) is one entry here.
+BACKEND_FACTORIES: Dict[str, Callable[[Any, str, int], Executor]] = {
+    "thread": ThreadExecutor,
+    "thread-pool": PooledThreadExecutor,
+    "fiber": FiberExecutor,
+    "fiber-steal": lambda app, name, n_workers: FiberExecutor(
+        app, name, n_workers, steal=True),
+}
+
+BACKEND_NAMES = tuple(BACKEND_FACTORIES)
 
 
 def make_executor(backend: str, app: Any, name: str,
                   n_workers: int) -> Executor:
-    if backend == "thread":
-        return ThreadExecutor(app, name, n_workers)
-    if backend == "fiber":
-        return FiberExecutor(app, name, n_workers)
-    raise ValueError(f"unknown backend {backend!r} (want 'thread'|'fiber')")
+    try:
+        factory = BACKEND_FACTORIES[backend]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r} "
+                         f"(want one of {BACKEND_NAMES})") from None
+    return factory(app, name, n_workers)

@@ -15,6 +15,20 @@
 External events (future resolutions from other schedulers/threads, new
 requests, timer expiries) are *injected* through a mutex-protected queue and
 wake the scheduler via its condition variable.
+
+Two placement algorithms, mirroring boost.fiber's stock schedulers:
+
+* **work-sharing** (default): the executor round-robins new work across
+  schedulers and each fiber stays pinned to the scheduler that received it —
+  the ``boost::fibers::algo::shared_work`` analogue.  The ready deque is
+  owner-thread-only, so switches are lock-free.
+* **work-stealing** (``steal=True``): schedulers form a :class:`StealGroup`;
+  an idle scheduler pulls parked-ready fibers from the back of a loaded
+  sibling's deque instead of sleeping — the
+  ``boost::fibers::algo::work_stealing`` analogue.  Ready-deque accesses are
+  then guarded by the scheduler's condition-variable lock (owner pops the
+  front, thieves pop the back), and a scheduler that accumulates surplus
+  ready work nudges one idle sibling awake.
 """
 from __future__ import annotations
 
@@ -45,10 +59,54 @@ class Fiber:
         self.name = name or f"fiber-{next(Fiber._count)}"
 
 
+class StealGroup:
+    """Shared state for a set of sibling schedulers in work-stealing mode:
+    the membership list plus the set of members currently idle-parked, so a
+    loaded scheduler can wake exactly one sleeper instead of broadcasting."""
+
+    def __init__(self) -> None:
+        self.members: List["FiberScheduler"] = []
+        self._lock = threading.Lock()
+        self._idle: "set[FiberScheduler]" = set()
+
+    def attach(self, sched: "FiberScheduler") -> None:
+        self.members.append(sched)
+
+    def register_idle(self, sched: "FiberScheduler") -> None:
+        with self._lock:
+            self._idle.add(sched)
+
+    def unregister_idle(self, sched: "FiberScheduler") -> None:
+        with self._lock:
+            self._idle.discard(sched)
+
+    def pick_idle(self, exclude: "FiberScheduler") -> Optional["FiberScheduler"]:
+        """Claim one idle sibling (removing it so two pushers never both
+        target the same sleeper); None when everyone is busy."""
+        if not self._idle:      # racy fast path: skip the lock when nobody
+            return None         # is parked (the common under-load case)
+        with self._lock:
+            for s in self._idle:
+                if s is not exclude:
+                    self._idle.discard(s)
+                    return s
+        return None
+
+
 class FiberScheduler:
     """One OS thread running many fibers cooperatively."""
 
-    def __init__(self, app: "Any", name: str = "sched") -> None:
+    # Safety-net poll while idle in steal mode.  Wake-on-surplus notifies are
+    # the primary signal; the only miss window is a waker reading the idle
+    # set just before this scheduler registers, which the surplus re-check
+    # right before parking (see run()) shrinks to a few instructions.  The
+    # poll backstops that sliver and exotic schedules; it is kept long
+    # because frequent polls across many schedulers turn into a GIL-handoff
+    # storm that starves Compute-heavy fibers.
+    _IDLE_STEAL_POLL = 0.05
+
+    def __init__(self, app: "Any", name: str = "sched",
+                 steal_group: Optional[StealGroup] = None) -> None:
         self.app = app
         self.name = name
         self._ready: deque[Tuple[Fiber, Any]] = deque()
@@ -58,9 +116,14 @@ class FiberScheduler:
         self._injected: deque[Tuple[Fiber, Any]] = deque()
         self._stop = False
         self._thread: Optional[threading.Thread] = None
+        self._group = steal_group
+        self._steal = steal_group is not None
+        if steal_group is not None:
+            steal_group.attach(self)
         # --- instrumentation (read by benchmarks) -----------------------
         self.fibers_spawned = 0
         self.switches = 0
+        self.steals = 0
 
     # ------------------------------------------------------------ external
     def spawn_external(self, gen: Generator, future: Optional[Future] = None,
@@ -96,26 +159,110 @@ class FiberScheduler:
             with self._cond:
                 while self._injected:
                     self._ready.append(self._injected.popleft())
-                if not self._ready:
-                    if self._stop:
-                        return
-                    timeout = None
-                    if self._timers:
-                        timeout = max(self._timers[0][0] - time.monotonic(), 0.0)
-                    if timeout is None or timeout > 0:
-                        self._cond.wait(timeout=timeout)
+                have_ready = bool(self._ready)
+                surplus = self._steal and len(self._ready) > 1
+                stopping = self._stop
+            if surplus:
+                # round-robin delivery / resumptions piled up here while a
+                # sibling may be parked: hand it a chance to steal.
+                self._wake_idle_peer()
+            if not have_ready and self._steal and not stopping:
+                have_ready = self._try_steal()
+            if not have_ready:
+                with self._cond:
                     while self._injected:
                         self._ready.append(self._injected.popleft())
-            # 2. fire due timers (owner thread only — no lock needed)
+                    if not self._ready:
+                        if self._stop:
+                            return
+                        timeout = None
+                        if self._timers:
+                            timeout = max(
+                                self._timers[0][0] - time.monotonic(), 0.0)
+                        if self._steal:
+                            timeout = (self._IDLE_STEAL_POLL if timeout is None
+                                       else min(timeout, self._IDLE_STEAL_POLL))
+                        if timeout is None or timeout > 0:
+                            if self._group is not None:
+                                self._group.register_idle(self)
+                            try:
+                                # surplus re-check after registering: a waker
+                                # that read the idle set as empty just before
+                                # we registered will not notify, so don't
+                                # park if a sibling visibly has spare work
+                                if self._group is None or not any(
+                                        len(s._ready) > 1
+                                        for s in self._group.members
+                                        if s is not self):
+                                    self._cond.wait(timeout=timeout)
+                            finally:
+                                if self._group is not None:
+                                    self._group.unregister_idle(self)
+                        while self._injected:
+                            self._ready.append(self._injected.popleft())
+            # 2. fire due timers (the timer heap is owner-thread-only; the
+            #    resumed fibers go through _push_ready so thieves see them)
             now = time.monotonic()
             while self._timers and self._timers[0][0] <= now:
                 _, _, fib, value = heapq.heappop(self._timers)
-                self._ready.append((fib, value))
+                self._push_ready((fib, value))
             # 3. run one ready fiber to its next suspension point
-            if self._ready:
-                fib, value = self._ready.popleft()
+            item = self._pop_ready()
+            if item is not None:
+                fib, value = item
                 self.switches += 1
                 self._run_fiber(fib, value)
+
+    # ------------------------------------------------ ready deque + stealing
+    # Work-sharing mode: the ready deque is touched only by the owner thread,
+    # so access is lock-free.  Steal mode: owner and thieves synchronize on
+    # self._cond's lock — owner pushes/pops the front, thieves pop the back.
+    def _push_ready(self, item: Tuple[Fiber, Any]) -> None:
+        if not self._steal:
+            self._ready.append(item)
+            return
+        with self._cond:
+            self._ready.append(item)
+            surplus = len(self._ready) > 1
+        if surplus:
+            self._wake_idle_peer()
+
+    def _pop_ready(self) -> Optional[Tuple[Fiber, Any]]:
+        if not self._steal:
+            return self._ready.popleft() if self._ready else None
+        with self._cond:
+            return self._ready.popleft() if self._ready else None
+
+    def _try_steal(self) -> bool:
+        """Pull ready fibers from the most loaded sibling.  Takes up to half
+        of the victim's deque (at least 1, at most 4) from the back; returns
+        True if anything was stolen."""
+        victim = None
+        depth = 0
+        for s in self._group.members:   # racy peek: just a victim heuristic
+            if s is not self and len(s._ready) > depth:
+                victim, depth = s, len(s._ready)
+        if victim is None:
+            return False
+        with victim._cond:
+            n = len(victim._ready)
+            take = min(max(n // 2, 1), 4) if n else 0
+            grabbed = [victim._ready.pop() for _ in range(take)]
+        if not grabbed:
+            return False
+        grabbed.reverse()               # preserve the victim's FIFO order
+        with self._cond:
+            self._ready.extend(grabbed)
+        self.steals += len(grabbed)
+        return True
+
+    def _wake_idle_peer(self) -> None:
+        if self._group is None:
+            return
+        peer = self._group.pick_idle(self)
+        if peer is not None:
+            with peer._cond:
+                peer._cond.notify()
 
     # ------------------------------------------------------- fiber driving
     def _run_fiber(self, fib: Fiber, send_value: Any) -> None:
@@ -151,7 +298,7 @@ class FiberScheduler:
                                                  eff.payload),
                             name=f"carrier->{eff.dest}")
             self.fibers_spawned += 1
-            self._ready.append((carrier, None))
+            self._push_ready((carrier, None))
             return carrier.future, False
 
         if isinstance(eff, Wait):
@@ -195,7 +342,7 @@ class FiberScheduler:
         if isinstance(eff, SpawnLocal):
             sub = Fiber(eff.genfn(*eff.args), name="local")
             self.fibers_spawned += 1
-            self._ready.append((sub, None))
+            self._push_ready((sub, None))
             return sub.future, False
 
         raise TypeError(f"Unknown effect: {eff!r}")

@@ -74,6 +74,14 @@ class Future:
                 raise self._exc
             return self._value
 
+    def wait_done(self, timeout: Optional[float] = None) -> bool:
+        """Block until resolved or timeout; returns done-ness and never
+        (re-)raises the stored exception — for waiters that only need the
+        completion *event* (e.g. a pool thread deciding whether it can stop
+        work-helping), not the value."""
+        with self._cond:
+            return self._cond.wait_for(lambda: self._done, timeout=timeout)
+
     def result(self) -> Any:
         """Non-blocking get; raises if not done."""
         with self._cond:

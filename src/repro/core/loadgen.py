@@ -19,7 +19,7 @@ from typing import Any, Callable, List, Optional, Tuple
 
 import numpy as np
 
-from .metrics import LatencyRecorder, PeakResult, TrialResult
+from .metrics import BackendStats, LatencyRecorder, PeakResult, TrialResult
 from .service import App
 
 # (method, payload) chooser — called per arrival with the trial RNG
@@ -35,6 +35,7 @@ def run_trial(app: App, make_request: RequestFactory, rate: float,
     outstanding = [0]
     shed = [0]
     lock = threading.Lock()
+    stats_before = app.backend_stats()
 
     t_start = time.perf_counter()
     t_end = t_start + duration
@@ -86,6 +87,8 @@ def run_trial(app: App, make_request: RequestFactory, rate: float,
         duration=elapsed,
         p50=s["p50"], p99=s["p99"], mean=s["mean"],
         completed=rec.completed, shed=shed[0], errors=rec.errors,
+        backend_stats=BackendStats.delta(stats_before,
+                                        app.backend_stats()).as_dict(),
     )
 
 

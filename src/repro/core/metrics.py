@@ -2,10 +2,61 @@
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 from typing import Dict, List
 
 import numpy as np
+
+
+@dataclass
+class BackendStats:
+    """Per-backend execution counters, aggregated app-wide.
+
+    Monotonic counters (everything except ``queue_depth_hwm``) support
+    per-trial deltas via :meth:`delta`; ``queue_depth_hwm`` is a gauge — a
+    high-water mark since executor start — and a delta keeps the ``after``
+    value.
+
+    ``spawns``/``spawn_seconds``: async-call carriers created (thread clones,
+    pool submissions, or fibers) and the wall time spent creating them.
+    ``switches``: fiber context switches.  ``steals``: ready fibers pulled by
+    an idle scheduler from a loaded sibling (``fiber-steal`` only).
+    ``pool_stalls``/``stall_seconds``: submissions that found the carrier
+    queue full, and the wall time dispatchers spent blocked on it
+    (``thread-pool`` only).  ``queue_depth_hwm``: carrier-queue high water.
+    """
+    spawns: int = 0
+    spawn_seconds: float = 0.0
+    switches: int = 0
+    steals: int = 0
+    pool_stalls: int = 0
+    stall_seconds: float = 0.0
+    queue_depth_hwm: int = 0
+
+    _GAUGES = ("queue_depth_hwm",)
+
+    def add(self, other: "BackendStats") -> "BackendStats":
+        """In-place aggregation across executors (gauges take the max)."""
+        for f in fields(self):
+            if f.name in self._GAUGES:
+                setattr(self, f.name,
+                        max(getattr(self, f.name), getattr(other, f.name)))
+            else:
+                setattr(self, f.name,
+                        getattr(self, f.name) + getattr(other, f.name))
+        return self
+
+    @staticmethod
+    def delta(before: "BackendStats", after: "BackendStats") -> "BackendStats":
+        """Counters: after - before.  Gauges: after (high-water survives)."""
+        out = BackendStats()
+        for f in fields(out):
+            a, b = getattr(after, f.name), getattr(before, f.name)
+            setattr(out, f.name, a if f.name in out._GAUGES else a - b)
+        return out
+
+    def as_dict(self) -> Dict[str, float]:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
 
 
 class LatencyRecorder:
@@ -56,11 +107,22 @@ class TrialResult:
     completed: int
     shed: int
     errors: int
+    # per-trial executor-counter delta (see BackendStats), aggregated over
+    # every service in the app; empty when the caller did not supply an app
+    # snapshot.
+    backend_stats: Dict[str, float] = field(default_factory=dict)
 
     def row(self) -> str:
-        return (f"offered={self.offered_rps:9.1f} achieved={self.achieved_rps:9.1f} "
-                f"p50={self.p50 * 1e3:8.2f}ms p99={self.p99 * 1e3:8.2f}ms "
-                f"n={self.completed} shed={self.shed}")
+        s = (f"offered={self.offered_rps:9.1f} achieved={self.achieved_rps:9.1f} "
+             f"p50={self.p50 * 1e3:8.2f}ms p99={self.p99 * 1e3:8.2f}ms "
+             f"n={self.completed} shed={self.shed}")
+        bs = self.backend_stats
+        if bs.get("steals"):
+            s += f" steals={bs['steals']:.0f}"
+        if bs.get("pool_stalls"):
+            s += (f" stalls={bs['pool_stalls']:.0f}"
+                  f" qhwm={bs.get('queue_depth_hwm', 0):.0f}")
+        return s
 
 
 @dataclass

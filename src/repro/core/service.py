@@ -96,9 +96,12 @@ class App:
     Parameters
     ----------
     backend:
-        Default async-call backend for every service: ``"thread"`` (paper
-        baseline, std::async semantics) or ``"fiber"`` (paper technique).
-        Individual :class:`ServiceSpec`s may override.
+        Default async-call backend for every service — any name in
+        ``executor.BACKEND_NAMES``: ``"thread"`` (paper baseline, std::async
+        semantics), ``"thread-pool"`` (bounded pre-spawned carrier pool),
+        ``"fiber"`` (paper technique, work-sharing placement) or
+        ``"fiber-steal"`` (work-stealing placement).  Individual
+        :class:`ServiceSpec`s may override.
     net_latency:
         Simulated one-way network latency the carrier pays before the send
         (the container has one host; spawn/scheduling costs are real).
@@ -170,3 +173,12 @@ class App:
     # ------------------------------------------------------ instrumentation
     def total_spawns(self) -> int:
         return sum(s.executor.spawns for s in self.services.values())
+
+    def backend_stats(self) -> "BackendStats":
+        """App-wide executor counters: sums across services, except gauges
+        (queue-depth high-water) which take the max."""
+        from .metrics import BackendStats
+        agg = BackendStats()
+        for s in self.services.values():
+            agg.add(s.executor.stats())
+        return agg

@@ -1,18 +1,19 @@
 """Cross-backend parity: every (app x workload) request must produce the
-same result on the thread and fiber backends.
+same result on every registered backend.
 
 This is the contract the paper's migration story rests on: switching
-``std::async`` -> ``boost::fiber::async`` changes scheduling, never
-semantics.  Handlers are deterministic functions of their payload, so the
-full response bodies must match bit-for-bit across backends.
+``std::async`` -> ``boost::fiber::async`` (or to a pooled/work-stealing
+variant) changes scheduling, never semantics.  Handlers are deterministic
+functions of their payload, so the full response bodies must match
+bit-for-bit across the whole backend matrix.
 """
 import numpy as np
 import pytest
 
-from repro.apps import APP_NAMES, REGISTRY, get_app_def
+from repro.apps import APP_NAMES, BENCH_BACKENDS, REGISTRY, get_app_def
 from repro.core import run_trial
 
-BACKENDS = ("thread", "fiber")
+BACKENDS = BENCH_BACKENDS
 CASES = [(name, wl) for name in APP_NAMES
          for wl in REGISTRY[name].workloads]
 
@@ -25,15 +26,16 @@ def _run_requests(app_name, requests, backend):
 
 
 @pytest.mark.parametrize("app_name,workload", CASES)
-def test_thread_fiber_parity(app_name, workload):
-    """Identical request sequence (same factory, same seed) on both
-    backends -> identical results."""
+def test_backend_parity(app_name, workload):
+    """Identical request sequence (same factory, same seed) on every
+    backend -> identical results."""
     factory = get_app_def(app_name).make_request_factory(workload)
     rng = np.random.default_rng(12)
     requests = [factory(rng) for _ in range(3)]
     got = {b: _run_requests(app_name, requests, b) for b in BACKENDS}
-    assert got["thread"] == got["fiber"]
-    assert len(got["thread"]) == len(requests)
+    for b in BACKENDS:
+        assert got[b] == got["thread"], f"{b} diverged from thread"
+        assert len(got[b]) == len(requests)
 
 
 # --------------------------------------------------------------- registry
@@ -65,13 +67,20 @@ def test_registry_protocol(app_name):
 @pytest.mark.parametrize("app_name", APP_NAMES)
 def test_incremental_migration(app_name):
     """Paper: services can migrate backends one at a time; a mixed-backend
-    app must serve every workload's request unchanged."""
+    app (one override per registered backend) must serve every workload's
+    request unchanged."""
     d = get_app_def(app_name)
     factory = d.make_request_factory("mixed")
     rng = np.random.default_rng(5)
     requests = [factory(rng) for _ in range(3)]
     expected = _run_requests(app_name, requests, "fiber")
-    app = d.build("thread", overrides={d.frontend: "fiber"})
+    overrides = {d.frontend: "fiber"}
+    # spread the remaining backends over the first services of the graph
+    others = [n for n in REGISTRY[app_name].build("fiber").services
+              if n != d.frontend]
+    for name, backend in zip(others, ("thread-pool", "fiber-steal")):
+        overrides[name] = backend
+    app = d.build("thread", overrides=overrides)
     with app:
         got = [app.send(dest, m, p).wait(timeout=15)
                for dest, m, p in requests]

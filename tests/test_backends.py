@@ -1,0 +1,178 @@
+"""PooledThreadExecutor + backend-registry unit tests.
+
+Drives executors directly (deliver(gen, reply), no App transport) so pool
+sizing, saturation accounting and the caller-runs fallback are exact.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import (App, BACKEND_NAMES, Compute, ServiceSpec, SpawnLocal,
+                        Wait, WaitAll, make_executor, run_trial)
+from repro.core.executor import (FiberExecutor, PooledThreadExecutor,
+                                 ThreadExecutor)
+from repro.core.future import Future
+
+
+# --------------------------------------------------------------- registry
+def test_backend_names_is_the_four_backend_matrix():
+    assert BACKEND_NAMES == ("thread", "thread-pool", "fiber", "fiber-steal")
+
+
+def test_make_executor_resolves_every_registered_backend():
+    types = {"thread": ThreadExecutor, "thread-pool": PooledThreadExecutor,
+             "fiber": FiberExecutor, "fiber-steal": FiberExecutor}
+    for backend in BACKEND_NAMES:
+        ex = make_executor(backend, app=None, name="t", n_workers=2)
+        assert isinstance(ex, types[backend]), backend
+    assert make_executor("fiber-steal", None, "t", 2).steal
+    assert not make_executor("fiber", None, "t", 2).steal
+
+
+def test_make_executor_unknown_backend_lists_registry():
+    with pytest.raises(ValueError, match="thread-pool"):
+        make_executor("asyncio", app=None, name="t", n_workers=2)
+
+
+# ------------------------------------------------------------ pooled pool
+def _spawner(n, gate=None):
+    """Handler: fan out n local async carriers, join them all."""
+    def _child(i):
+        if gate is not None:
+            yield Wait(gate)
+        return i
+
+    def _parent(payload=None):
+        futs = []
+        for i in range(n):
+            f = yield SpawnLocal(_child, (i,))
+            futs.append(f)
+        vals = yield WaitAll(futs)
+        return vals
+    return _parent
+
+
+def test_pool_is_pre_spawned_and_bounded():
+    ex = PooledThreadExecutor(app=None, name="p", n_workers=2, pool_size=3)
+    ex.start()
+    try:
+        assert len(ex._pool) == 3
+        assert all(t.is_alive() for t in ex._pool)
+        pool_idents = {t.ident for t in ex._pool}
+        reply = Future()
+        ex.deliver(_spawner(10)(), reply)
+        assert reply.wait(timeout=10) == list(range(10))
+        # all 10 carriers ran on the pre-spawned pool, no thread per call
+        assert ex.spawns == 10
+        assert {t.ident for t in ex._pool} == pool_idents
+    finally:
+        ex.stop()
+    assert not any(t.is_alive() for t in ex._pool)
+
+
+def test_pool_saturation_counts_stalls_and_queue_depth():
+    """pool_size=1 + queue_bound=1: the second queued carrier fills the
+    queue, further submissions stall (and fall back to caller-runs), and
+    everything still completes once the gate opens."""
+    gate = Future()
+    ex = PooledThreadExecutor(app=None, name="p", n_workers=1, pool_size=1,
+                              queue_bound=1, stall_timeout=0.05)
+    ex.start()
+    try:
+        opener = threading.Timer(0.4, gate.set_result, args=(None,))
+        opener.start()
+        reply = Future()
+        ex.deliver(_spawner(4, gate)(), reply)
+        assert reply.wait(timeout=10) == list(range(4))
+        opener.join()
+        st = ex.stats()
+        assert st.pool_stalls >= 1
+        assert st.queue_depth_hwm >= 1
+        assert st.spawns >= 1
+    finally:
+        ex.stop()
+
+
+def test_pool_nested_fanout_does_not_deadlock():
+    """A pool thread that fans out while the pool is saturated must run the
+    carrier inline (caller-runs) instead of wedging the single pool slot."""
+    def _leaf(i):
+        return i
+        yield  # pragma: no cover - marks this as a generator
+
+    def _mid(payload=None):
+        futs = []
+        for i in range(3):
+            f = yield SpawnLocal(_leaf, (i,))
+            futs.append(f)
+        vals = yield WaitAll(futs)
+        return vals
+
+    def _top(payload=None):
+        futs = []
+        for _ in range(3):
+            f = yield SpawnLocal(_mid, ())
+            futs.append(f)
+        vals = yield WaitAll(futs)
+        return vals
+
+    ex = PooledThreadExecutor(app=None, name="p", n_workers=1, pool_size=1,
+                              queue_bound=1, stall_timeout=0.05)
+    ex.start()
+    try:
+        reply = Future()
+        ex.deliver(_top(), reply)
+        assert reply.wait(timeout=10) == [[0, 1, 2]] * 3
+    finally:
+        ex.stop()
+
+
+def test_pool_wide_blocked_fanout_completes_without_recursion():
+    """Regression: work-helping used to recurse one stack level per helped
+    carrier that blocked, so a wide gate-blocked fan-out crashed with
+    RecursionError; helped carriers now suspend instead."""
+    gate = Future()
+    ex = PooledThreadExecutor(app=None, name="p", n_workers=1, pool_size=1,
+                              queue_bound=4096, stall_timeout=0.05)
+    ex.start()
+    try:
+        opener = threading.Timer(0.5, gate.set_result, args=(None,))
+        opener.start()
+        reply = Future()
+        ex.deliver(_spawner(1500, gate)(), reply)
+        assert reply.wait(timeout=30) == list(range(1500))
+        opener.join()
+    finally:
+        ex.stop()
+
+
+# ----------------------------------------------------- stats aggregation
+def test_app_backend_stats_aggregates_across_services():
+    def _noop(svc, payload):
+        yield Compute(0.0)
+        return payload
+
+    app = App(backend="thread-pool")
+    app.add_service(ServiceSpec("a", {"go": _noop}, n_workers=1))
+    app.add_service(ServiceSpec("b", {"go": _noop}, n_workers=1))
+    with app:
+        tr = run_trial(app, lambda rng: ("a", "go", 1), rate=100,
+                       duration=0.2, seed=0)
+    assert tr.errors == 0
+    # TrialResult carries the per-trial delta of the aggregate counters
+    for key in ("spawns", "pool_stalls", "queue_depth_hwm", "steals",
+                "switches", "spawn_seconds", "stall_seconds"):
+        assert key in tr.backend_stats
+    agg = app.backend_stats()
+    assert agg.spawns == app.total_spawns()
+
+
+def test_trial_row_mentions_saturation_counters():
+    from repro.core import TrialResult
+    tr = TrialResult(offered_rps=1, achieved_rps=1, duration=1, p50=0.0,
+                     p99=0.0, mean=0.0, completed=1, shed=0, errors=0,
+                     backend_stats={"pool_stalls": 3, "queue_depth_hwm": 9,
+                                    "steals": 2})
+    row = tr.row()
+    assert "stalls=3" in row and "qhwm=9" in row and "steals=2" in row

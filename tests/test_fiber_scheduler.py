@@ -10,7 +10,7 @@ import pytest
 
 from repro.core import Future, Sleep, Wait, WaitAll
 from repro.core.executor import FiberExecutor
-from repro.core.fiber import FiberScheduler
+from repro.core.fiber import Fiber, FiberScheduler, StealGroup
 
 
 @pytest.fixture
@@ -179,3 +179,90 @@ def test_deliver_round_robin_is_balanced_under_concurrency():
     # itertools.count() hands out each ticket exactly once, so every
     # scheduler gets exactly total / n_sched deliveries.
     assert counts == [total // n_sched] * n_sched
+
+
+# ------------------------------------------------------------ work stealing
+def test_idle_scheduler_steals_from_loaded_sibling():
+    """Pre-load one scheduler of a steal group with many ready fibers whose
+    bodies occupy its thread; the idle sibling must steal and run some."""
+    group = StealGroup()
+    a = FiberScheduler(app=None, name="steal-a", steal_group=group)
+    b = FiberScheduler(app=None, name="steal-b", steal_group=group)
+    ran_on = []
+    lock = threading.Lock()
+
+    def body(i):
+        time.sleep(0.004)  # occupy the carrying thread, non-cooperatively
+        with lock:
+            ran_on.append((i, threading.current_thread().name))
+        return i
+        yield  # pragma: no cover - marks this as a generator
+
+    fibs = [Fiber(body(i)) for i in range(40)]
+    for fib in fibs:  # scheduler not started yet: safe to touch the deque
+        a._ready.append((fib, None))
+    a.start()
+    b.start()
+    try:
+        results = [fib.future.wait(timeout=20) for fib in fibs]
+    finally:
+        a.stop()
+        b.stop()
+    assert results == list(range(40))
+    threads = {t for _, t in ran_on}
+    assert "steal-b" in threads, "idle sibling never stole"
+    assert b.steals > 0
+    assert a.steals + b.steals <= 40
+
+
+def test_steal_mode_preserves_exception_propagation():
+    group = StealGroup()
+    scheds = [FiberScheduler(app=None, name=f"exc-{i}", steal_group=group)
+              for i in range(2)]
+    for s in scheds:
+        s.start()
+
+    def boom():
+        yield Sleep(0.001)
+        raise ValueError("steal-mode boom")
+
+    try:
+        futs = [scheds[i % 2].spawn_external(boom()) for i in range(8)]
+        for f in futs:
+            with pytest.raises(ValueError, match="steal-mode boom"):
+                f.wait(timeout=10)
+    finally:
+        for s in scheds:
+            s.stop()
+
+
+def test_steal_executor_keeps_round_robin_placement():
+    """Steal mode keeps boost-style naive rr placement (a least-loaded
+    variant measurably herded bursts onto one scheduler); imbalance is
+    corrected by stealing, not placement."""
+    ex = FiberExecutor(app=None, name="rr-steal", n_workers=2, steal=True)
+    counts = [0, 0]
+    for i, s in enumerate(ex._scheds):
+        def spy(gen, reply=None, name="", i=i):
+            counts[i] += 1
+        s.spawn_external = spy
+    for _ in range(6):
+        ex.deliver(iter(()), Future())
+    assert counts == [3, 3]
+
+
+def test_single_scheduler_steal_executor_degenerates_cleanly():
+    """n_workers=1 + steal: no group is formed, nothing to steal from."""
+    ex = FiberExecutor(app=None, name="solo", n_workers=1, steal=True)
+    assert ex._scheds[0]._group is None
+    ex.start()
+    try:
+        def one():
+            yield Sleep(0.001)
+            return "ok"
+        fut = Future()
+        ex.deliver(one(), fut)
+        assert fut.wait(timeout=5) == "ok"
+        assert ex.steals == 0
+    finally:
+        ex.stop()
