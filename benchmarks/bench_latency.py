@@ -3,8 +3,8 @@
 Rates are swept from low load up to just beneath the *thread* backend's peak
 throughput (the paper's protocol), for each workload of each registered app,
 under every backend in the matrix (``BACKENDS`` — thread, thread-pool,
-fiber, fiber-steal), so the latency cliffs of all four dispatch mechanisms
-line up on a common x-axis.
+fiber, fiber-steal, fiber-batch, event-loop), so the latency cliffs of all
+six dispatch mechanisms line up on a common x-axis.
 """
 from __future__ import annotations
 

@@ -6,9 +6,19 @@ CI.  Per cell it checks:
 
 1. **semantic parity** — a fixed, seeded request sequence must return results
    identical to the ``thread`` baseline (the paper's migration invariant);
-2. **liveness under load** — a tiny open-loop trial must complete with zero
-   errors; achieved rps and the per-backend counters (steals, pool stalls,
-   queue depth high-water) are recorded.
+2. **liveness under load** — ``SMOKE_TRIALS`` tiny open-loop trials must
+   complete with zero errors; per-trial achieved rps and the per-backend
+   counters (steals, pool stalls, queue depth, batch flushes, ring
+   occupancy) are recorded.  The repeated trials exist for the **trend
+   gate**: their spread is the per-cell noise estimate ``benchmarks/
+   trend.py`` uses to size the regression band when diffing this artifact
+   against a previous run's (the same idea as the steal probe's interleaved
+   paired trials — never compare one noisy number to another without a
+   same-run noise measurement).
+
+The artifact carries a ``schema_version`` and a normalized ``records`` list
+(one record per app x backend cell) so cross-run comparison does not depend
+on the human-oriented ``cells`` layout staying stable.
 
 It also runs the **work-stealing probe**: interleaved paired trials of
 ``fiber`` vs ``fiber-steal`` at ``n_workers=4`` on every app, stopping early
@@ -32,14 +42,20 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.apps import APP_NAMES, BENCH_BACKENDS, get_app_def
-from repro.core import run_trial, warmup
+from repro.core import BackendStats, run_trial, warmup
 
 BASELINE = "thread"
 
+# Artifact schema: bump when the *records* shape changes incompatibly.
+# benchmarks/trend.py refuses to diff artifacts with a different major.
+SCHEMA_VERSION = 2
+
 # smoke scale: small enough for a CI lane, large enough to exercise
-# saturation paths (the pool's bounded queue, the steal path).
+# saturation paths (the pool's bounded queue, the steal path, batch rings).
 SMOKE_RATE = 300.0
 SMOKE_DURATION = 0.4
+SMOKE_TRIALS = 2    # repeated per cell: best-of is the headline, the spread
+                    # is the trend gate's per-cell noise estimate
 PARITY_REQUESTS = 4
 PROBE_RATE = 4000.0
 PROBE_DURATION = 0.25
@@ -60,23 +76,35 @@ def _fixed_requests(app_name: str, workload: str = "mixed",
 
 def _smoke_cell(app_name: str, backend: str,
                 requests: List[Any]) -> Dict[str, Any]:
-    """One app × backend cell: fixed requests (for parity) + tiny trial."""
+    """One app × backend cell: fixed requests (for parity) + repeated tiny
+    trials (best-of for the headline, spread for the trend noise band)."""
     d = get_app_def(app_name)
     factory = d.make_request_factory("mixed")
     with d.build(backend, n_workers=2, frontend_workers=4) as app:
         results = [app.send(dest, method, payload).wait(timeout=30)
                    for dest, method, payload in requests]
         warmup(app, factory)
-        tr = run_trial(app, factory, SMOKE_RATE, SMOKE_DURATION, seed=3)
+        # monotonic counters are the delta across exactly the measured
+        # trials — parity requests and warmup traffic excluded — so
+        # counter-per-second rates line up with the rps reported next to
+        # them.  Gauges (queue_depth_hwm, ring_hwm) are executor-lifetime
+        # high-waters by definition (BackendStats.delta keeps `after`), so
+        # they may still reflect the warmup burst.
+        stats_before = app.backend_stats()
+        trials = [run_trial(app, factory, SMOKE_RATE, SMOKE_DURATION,
+                            seed=3 + i) for i in range(SMOKE_TRIALS)]
+        stats = BackendStats.delta(stats_before, app.backend_stats())
+    best = max(trials, key=lambda t: t.achieved_rps)
     return {
         "status": "ok",
         "results": results,
-        "achieved_rps": round(tr.achieved_rps, 1),
-        "completed": tr.completed,
-        "errors": tr.errors,
-        "shed": tr.shed,
+        "achieved_rps": round(best.achieved_rps, 1),
+        "trial_rps": [round(t.achieved_rps, 1) for t in trials],
+        "completed": sum(t.completed for t in trials),
+        "errors": sum(t.errors for t in trials),
+        "shed": sum(t.shed for t in trials),
         "backend_stats": {k: round(v, 6) for k, v in
-                          tr.backend_stats.items()},
+                          stats.as_dict().items()},
     }
 
 
@@ -125,19 +153,25 @@ def _steal_probe(app_name: str,
 def run_smoke(apps: Optional[Sequence[str]] = None,
               json_path: Optional[str] = None,
               steal_probe: bool = True,
-              quick: bool = False) -> int:
+              quick: bool = False,
+              baseline_path: Optional[str] = None) -> int:
     """Run the smoke matrix; write the artifact; return the exit code.
 
     ``quick`` halves the probe's round budget — the per-cell trials are
     already tiny — for local iteration on the harness itself.
+    ``baseline_path`` additionally writes the artifact there on a fully
+    green run (the ``run.py --smoke --update-baseline`` path, so refreshing
+    the committed trend baseline is one reviewed command).
     """
     probe_rounds = max(PROBE_MAX_ROUNDS // 2, 2) if quick \
         else PROBE_MAX_ROUNDS
     apps = list(apps) if apps else list(APP_NAMES)
     out: Dict[str, Any] = {
+        "schema_version": SCHEMA_VERSION,
         "backends": list(BENCH_BACKENDS),
         "apps": apps,
         "cells": {},
+        "records": [],
         "parity": {},
         "steal_probe": {},
         "failures": [],
@@ -159,8 +193,21 @@ def run_smoke(apps: Optional[Sequence[str]] = None,
             cells[backend] = cell
             out["cells"][key] = {k: v for k, v in cell.items()
                                  if k != "results"}
+            if cell.get("status") == "ok":
+                # normalized cross-run record: what benchmarks/trend.py diffs
+                out["records"].append({
+                    "key": key,
+                    "app": app_name,
+                    "backend": backend,
+                    "metric": "achieved_rps",
+                    "unit": "rps",
+                    "value": cell["achieved_rps"],
+                    "trials": cell["trial_rps"],
+                    "errors": cell["errors"],
+                })
             print(f"smoke {key}: {cell.get('status')} "
                   f"rps={cell.get('achieved_rps')} "
+                  f"trials={cell.get('trial_rps')} "
                   f"errors={cell.get('errors')}", flush=True)
         # parity: every backend must reproduce the thread baseline bit-for-bit
         if cells.get(BASELINE, {}).get("status") == "ok":
@@ -199,7 +246,14 @@ def run_smoke(apps: Optional[Sequence[str]] = None,
         print("SMOKE FAILURES:", file=sys.stderr)
         for fail in out["failures"]:
             print(f"  {fail}", file=sys.stderr)
+        if baseline_path:
+            print(f"NOT updating baseline {baseline_path}: run not green",
+                  file=sys.stderr)
         return 1
+    if baseline_path:
+        with open(baseline_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        print(f"updated trend baseline {baseline_path}", flush=True)
     return 0
 
 

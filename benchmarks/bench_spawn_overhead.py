@@ -4,15 +4,15 @@ Paper analogue: "the ComposePost service spends 23% of its time in clone and
 exit system calls".  We measure the raw cost of spawning+joining async no-op
 carriers under each registered backend: thread pays a ``clone()`` per call,
 thread-pool a queue push to pre-spawned carriers, fiber/fiber-steal a heap
-allocation + deque push.
+allocation + deque push, fiber-batch a ring append (one carrier per flushed
+batch), event-loop a bare run-queue append on its single loop thread.
 """
 from __future__ import annotations
 
 import time
 from typing import Dict, List
 
-from repro.core import (App, AsyncRpc, BACKEND_NAMES, Compute, ServiceSpec,
-                        WaitAll)
+from repro.core import (App, AsyncRpc, BACKEND_NAMES, ServiceSpec, WaitAll)
 
 
 def _noop(svc, payload):

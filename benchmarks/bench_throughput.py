@@ -4,8 +4,9 @@ Protocol follows the paper: ramp the open-loop request rate until processed
 requests/s stops increasing; report the best achieved rate.  Runs every app
 in ``repro.apps.REGISTRY`` (SocialNetwork, HotelReservation, MediaService)
 crossed with every registered execution backend (``BENCH_BACKENDS``: thread,
-thread-pool, fiber, fiber-steal), so the headline claim is measured across
-service-graph shapes *and* dispatch mechanisms, not one hand-picked pair.
+thread-pool, fiber, fiber-steal, fiber-batch, event-loop), so the headline
+claim is measured across service-graph shapes *and* dispatch mechanisms,
+not one hand-picked pair.
 Worker pools are sized generously for the thread-family backends (DSB's
 thread-per-connection Thrift servers) so that async-call spawn cost — not
 pool size — is the binding constraint.

@@ -15,12 +15,17 @@ crossed with every backend in ``repro.apps.BENCH_BACKENDS``; restrict with
 
 ``--smoke`` switches to the CI bench-smoke matrix instead (tiny trials for
 every app × backend cell, parity + steal probe, JSON artifact via
-``--json``; see ``bench_smoke.py``).
+``--json``; see ``bench_smoke.py``).  ``--smoke --update-baseline``
+additionally rewrites the committed trend baseline
+(``launch_results/baseline_smoke.json``) when the run is fully green, so
+refreshing the CI trend gate's fallback baseline is one reviewed command
+instead of hand-edited JSON.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only peak,p99]
       [--app socialnetwork --app hotelreservation]
   PYTHONPATH=src python -m benchmarks.run --smoke --json smoke.json
+  PYTHONPATH=src python -m benchmarks.run --smoke --update-baseline
 
 Env (equivalent to the flags, kept for CI wrappers):
   BENCH_QUICK=1   shorter trials
@@ -58,6 +63,10 @@ def main(argv=None) -> None:
                          "full benchmarks")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="with --smoke: write the JSON artifact here")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="with --smoke: on a green run, rewrite the "
+                         "committed trend baseline "
+                         "(launch_results/baseline_smoke.json)")
     args = ap.parse_args(argv)
 
     quick = args.quick
@@ -76,12 +85,26 @@ def main(argv=None) -> None:
     if args.json and not args.smoke:
         ap.error("--json only applies to --smoke (the full benchmarks "
                  "emit CSV on stdout)")
+    if args.update_baseline and not args.smoke:
+        ap.error("--update-baseline only applies to --smoke (the baseline "
+                 "is a smoke artifact)")
+    if args.update_baseline and apps:
+        ap.error("--update-baseline requires the full app matrix: a "
+                 "partial artifact would leave the omitted apps' cells "
+                 "without baseline records, silently disabling their "
+                 "committed-baseline trend gate (drop --app/BENCH_APPS)")
     if args.smoke:
         if selected:
             ap.error("--only/BENCH_ONLY does not apply to --smoke "
                      "(the smoke matrix always runs every backend cell)")
+        baseline_path = None
+        if args.update_baseline:
+            baseline_path = os.path.join(
+                os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                "launch_results", "baseline_smoke.json")
         from .bench_smoke import run_smoke
-        sys.exit(run_smoke(apps=apps, json_path=args.json, quick=quick))
+        sys.exit(run_smoke(apps=apps, json_path=args.json, quick=quick,
+                           baseline_path=baseline_path))
 
     benches = []
     from . import bench_spawn_overhead, bench_throughput, bench_latency

@@ -1,0 +1,238 @@
+"""Trend gate: diff a bench-smoke artifact against a baseline artifact.
+
+``bench_smoke.py`` gates each run on *internal* invariants (errors, parity
+vs the thread baseline).  This comparator adds the *cross-run* axis: per
+app x backend cell, has throughput regressed since the previous successful
+run on this branch (or, failing that, the committed
+``launch_results/baseline_smoke.json``)?
+
+    python benchmarks/trend.py current.json baseline.json... [--md trend.md]
+
+Several baselines may be given; the gate fails if *any* of them shows a
+regression.  CI passes both the previous run's artifact **and** the
+committed baseline: previous-run-only comparison would let a slowdown
+ratchet — each push loses 30%, each diff stays inside the noise band, every
+run goes green and becomes the next baseline.  The committed baseline only
+moves via the reviewed ``run.py --smoke --update-baseline`` command, so
+compounding drift eventually trips it.
+
+Noise band
+----------
+Smoke trials on shared CI runners are wall-clock noisy, so a raw
+``current < baseline`` check would flap.  The band follows the repo's
+paired-trial protocol (see the steal probe in ``bench_smoke.py``): never
+compare two noisy numbers without a same-run noise measurement.  Each
+artifact records ``SMOKE_TRIALS`` repeated trials per cell; the per-cell
+relative spread ``(max - min) / max`` of each run estimates that run's
+noise, and the band is::
+
+    band = clamp(spread_current + spread_baseline, NOISE_FLOOR, MAX_BAND)
+
+* ``NOISE_FLOOR`` absorbs runner-weather variance the short trials cannot
+  see (two quiet trials on a machine that is 25% slower than yesterday's).
+* ``MAX_BAND`` caps the band so a genuinely unstable cell cannot talk its
+  way out of gating — a 2x regression (ratio 0.5) always fails.
+
+A cell **fails** when ``current_best < baseline_best * (1 - band)``; a cell
+below baseline but inside the band only **warns**.  The exit code is
+non-zero iff some cell fails, which is what turns the CI bench-smoke job
+from a parity check into a regression trend gate.
+
+Stdlib-only on purpose: the CI bench lane installs nothing but numpy, and
+the script must also run standalone (``python benchmarks/trend.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional, Sequence
+
+# Must match bench_smoke.SCHEMA_VERSION (not imported: this script runs
+# standalone, without PYTHONPATH=src or the benchmarks package).
+SCHEMA_VERSION = 2
+
+NOISE_FLOOR = 0.35
+MAX_BAND = 0.45
+
+
+class TrendError(ValueError):
+    """Malformed *current* artifact — a usage error, not a regression."""
+
+
+def _records_by_key(artifact: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
+    return {r["key"]: r for r in artifact.get("records", [])}
+
+
+def rel_spread(trials: Optional[Sequence[float]]) -> float:
+    """(max - min) / max of a cell's repeated trials; 0 when degenerate."""
+    if not trials:
+        return 0.0
+    hi = max(trials)
+    if hi <= 0:
+        return 0.0
+    return (hi - min(trials)) / hi
+
+
+def noise_band(cur_rec: Dict[str, Any], base_rec: Dict[str, Any], *,
+               floor: float = NOISE_FLOOR, cap: float = MAX_BAND) -> float:
+    """Relative regression tolerance for one cell (see module docstring)."""
+    spread = rel_spread(cur_rec.get("trials")) \
+        + rel_spread(base_rec.get("trials"))
+    return min(cap, max(floor, spread))
+
+
+def compare(current: Dict[str, Any], baseline: Dict[str, Any], *,
+            floor: float = NOISE_FLOOR) -> Dict[str, Any]:
+    """Diff two smoke artifacts; returns a report dict (never exits).
+
+    Report keys: ``rows`` (per-cell dicts with status ok/warn/regression/
+    new), ``regressions``, ``warnings``, ``notes``, ``comparable`` (False
+    when the baseline cannot be diffed — schema drift or a pre-records
+    artifact — in which case the gate passes vacuously and says why).
+    """
+    report: Dict[str, Any] = {"rows": [], "regressions": [], "warnings": [],
+                              "notes": [], "comparable": True}
+    if current.get("schema_version") != SCHEMA_VERSION \
+            or not current.get("records"):
+        raise TrendError(
+            f"current artifact has schema_version="
+            f"{current.get('schema_version')!r} and "
+            f"{len(current.get('records', []))} records; expected "
+            f"schema_version={SCHEMA_VERSION} with records — was it written "
+            f"by this tree's bench_smoke.py?")
+    if baseline.get("schema_version") != SCHEMA_VERSION \
+            or not baseline.get("records"):
+        report["comparable"] = False
+        report["notes"].append(
+            f"baseline not comparable (schema_version="
+            f"{baseline.get('schema_version')!r}, "
+            f"{len(baseline.get('records', []))} records) — trend gate "
+            f"passes vacuously; it will engage on the next run")
+        return report
+
+    cur_recs = _records_by_key(current)
+    base_recs = _records_by_key(baseline)
+    cur_apps = set(current.get("apps", []))
+
+    for key in sorted(cur_recs):
+        cur = cur_recs[key]
+        base = base_recs.get(key)
+        if base is None:
+            report["rows"].append({"key": key, "status": "new",
+                                   "current": cur["value"]})
+            report["notes"].append(f"{key}: new cell (no baseline)")
+            continue
+        band = noise_band(cur, base, floor=floor)
+        base_v = float(base["value"])
+        cur_v = float(cur["value"])
+        ratio = cur_v / base_v if base_v > 0 else float("inf")
+        row = {"key": key, "status": "ok", "current": cur_v,
+               "baseline": base_v, "ratio": round(ratio, 3),
+               "band": round(band, 3)}
+        if ratio < 1.0 - band:
+            row["status"] = "regression"
+            report["regressions"].append(
+                f"{key}: {cur_v:.1f} rps vs baseline {base_v:.1f} rps "
+                f"(ratio {ratio:.2f} < 1 - band {band:.2f})")
+        elif ratio < 1.0:
+            row["status"] = "warn"
+            report["warnings"].append(
+                f"{key}: {cur_v:.1f} rps vs baseline {base_v:.1f} rps "
+                f"(ratio {ratio:.2f}, inside noise band {band:.2f})")
+        report["rows"].append(row)
+
+    # baseline cells this run should have produced but did not
+    for key in sorted(base_recs):
+        if key in cur_recs:
+            continue
+        if base_recs[key].get("app") in cur_apps:
+            report["warnings"].append(
+                f"{key}: present in baseline but missing from current run")
+    return report
+
+
+def render_markdown(report: Dict[str, Any], *, current_name: str = "current",
+                    baseline_name: str = "baseline") -> str:
+    """Human summary for the CI artifact (``trend-<app>.md``)."""
+    lines = [f"# Bench-smoke trend: `{current_name}` vs `{baseline_name}`",
+             ""]
+    badge = {"ok": "✅", "warn": "⚠️", "regression": "❌", "new": "🆕"}
+    if report["rows"]:
+        lines += ["| cell | baseline rps | current rps | ratio | band | "
+                  "status |",
+                  "|---|---:|---:|---:|---:|---|"]
+        for row in report["rows"]:
+            lines.append(
+                f"| {row['key']} "
+                f"| {row.get('baseline', float('nan')):.1f} "
+                f"| {row['current']:.1f} "
+                f"| {row.get('ratio', float('nan')):.2f} "
+                f"| {row.get('band', float('nan')):.2f} "
+                f"| {badge.get(row['status'], '')} {row['status']} |")
+        lines.append("")
+    for title, key in (("Regressions", "regressions"),
+                       ("Warnings", "warnings"), ("Notes", "notes")):
+        if report[key]:
+            lines.append(f"## {title}")
+            lines += [f"- {item}" for item in report[key]]
+            lines.append("")
+    if not report["regressions"]:
+        lines.append("No regressions outside the noise band.")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("current", help="smoke JSON from this run")
+    ap.add_argument("baselines", nargs="+", metavar="baseline",
+                    help="smoke JSON(s) to gate against — typically the "
+                         "previous run's artifact AND the committed "
+                         "baseline; a regression vs any of them fails")
+    ap.add_argument("--md", default=None, metavar="PATH",
+                    help="write a markdown summary here")
+    ap.add_argument("--noise-floor", type=float, default=NOISE_FLOOR,
+                    help=f"minimum relative band (default {NOISE_FLOOR})")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    # a path given twice (prev-run lookup fell back to the committed file)
+    # is compared once
+    seen = set()
+    baselines = [b for b in args.baselines
+                 if not (b in seen or seen.add(b))]
+
+    failed = False
+    md_parts: List[str] = []
+    for bpath in baselines:
+        with open(bpath) as f:
+            baseline = json.load(f)
+        try:
+            report = compare(current, baseline, floor=args.noise_floor)
+        except TrendError as exc:
+            print(f"trend: {exc}", file=sys.stderr)
+            return 2
+        tag = f"[vs {bpath}]"
+        md_parts.append(render_markdown(report, current_name=args.current,
+                                        baseline_name=bpath))
+        for note in report["notes"]:
+            print(f"trend NOTE {tag}: {note}")
+        for warn in report["warnings"]:
+            print(f"trend WARN {tag}: {warn}")
+        for reg in report["regressions"]:
+            print(f"trend REGRESSION {tag}: {reg}", file=sys.stderr)
+        n_ok = sum(1 for r in report["rows"] if r["status"] == "ok")
+        print(f"trend {tag}: {len(report['rows'])} cells compared, "
+              f"{n_ok} ok, {len(report['warnings'])} warn, "
+              f"{len(report['regressions'])} regression(s)")
+        failed = failed or bool(report["regressions"])
+
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write("\n---\n\n".join(md_parts))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

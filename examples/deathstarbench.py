@@ -2,11 +2,11 @@
 
 Measures peak throughput (paper Fig. 1) and p99-vs-rate (paper Fig. 2)
 for each of the app's request generators under every registered async
-backend (thread, thread-pool, fiber, fiber-steal).
+backend (thread, thread-pool, fiber, fiber-steal, fiber-batch, event-loop).
 
     PYTHONPATH=src python examples/deathstarbench.py \
         --app {socialnetwork,hotelreservation,mediaservice} [--quick] \
-        [--backend fiber --backend fiber-steal]
+        [--backend fiber --backend fiber-batch]
 """
 import argparse
 

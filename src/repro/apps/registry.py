@@ -76,10 +76,15 @@ def build_bench_app(name: str, backend: str, **overrides: Any) -> App:
     (DSB's thread-per-connection Thrift servers) so async-call spawn cost —
     not pool size — is the binding constraint, as in the paper's setup.
     Thread-family backends (``thread``, ``thread-pool``) get the wide
-    dispatcher pools; fiber-family backends keep the paper's small scheduler
-    counts."""
-    sizing = (dict(n_workers=8, frontend_workers=16)
-              if backend.startswith("thread")
-              else dict(n_workers=2, frontend_workers=2))
+    dispatcher pools; fiber-family backends (``fiber``, ``fiber-steal``,
+    ``fiber-batch``) keep the paper's small scheduler counts; ``event-loop``
+    is pinned to one worker per service — the executor is single-carrier by
+    design, so extra workers would only be ignored."""
+    if backend.startswith("thread"):
+        sizing = dict(n_workers=8, frontend_workers=16)
+    elif backend == "event-loop":
+        sizing = dict(n_workers=1, frontend_workers=1)
+    else:
+        sizing = dict(n_workers=2, frontend_workers=2)
     sizing.update(overrides)
     return get_app_def(name).build(backend, **sizing)

@@ -1,0 +1,236 @@
+"""Single-carrier event-loop backend: async calls as run-queue continuations.
+
+The fourth point in the dispatch design space.  ``thread`` pays a ``clone()``
+per async call, ``thread-pool`` a queue push to a carrier pool, ``fiber`` a
+fiber spawn plus a scheduler handoff.  The event loop removes the carrier
+concept entirely: **one OS thread** per service executor drives every
+handler, and an async call is just another continuation appended to the run
+queue — no clone, no pool, no carrier handoff, no cross-scheduler placement.
+This is the asyncio/libuv design point, expressed on the same effect
+vocabulary as every other backend so the parity suite and benchmark matrix
+cover it unchanged.
+
+Mechanics
+---------
+* A **continuation** is ``(generator, reply_future, resume)``; the loop runs
+  one until it parks (unresolved ``Wait``/``WaitAll``, ``Sleep``) or
+  finishes.
+* ``AsyncRpc``/``SpawnLocal`` push the carrier generator straight onto the
+  owner-thread run queue and resume the caller immediately — the cheapest
+  possible spawn path in this repo.
+* Parked joins register a done-callback that re-injects the continuation
+  through a mutex-protected inbox (resolutions arrive from other services'
+  executor threads).
+* Timed parks live on the shared :class:`repro.core.timers.TimerWheel` —
+  the same wheel, with the same ordering guarantees, that
+  :class:`repro.core.fiber.FiberScheduler` uses.
+
+The trade is the classic one: zero dispatch overhead and perfect locality,
+but zero intra-service parallelism — ``Compute`` effects serialize on the
+loop.  The paper's wait-dominated DeathStarBench service models are exactly
+the regime where that trade can win.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Any, Generator, List, Optional, Tuple
+
+from .calibrate import burn
+from .effects import (AsyncRpc, Compute, Offload, Sleep, SpawnLocal, Wait,
+                      WaitAll)
+from .future import Future
+from .metrics import BackendStats
+from .timers import TimerWheel
+
+# a parked continuation resumes with ("send", value) or ("throw", exc)
+Resume = Optional[Tuple[str, Any]]
+
+
+class EventLoopExecutor:
+    """Single-threaded cooperative executor (duck-typed ``Executor``).
+
+    ``n_workers`` is accepted for registry-signature parity and ignored: a
+    second loop thread would reintroduce the carrier-placement problem this
+    backend exists to delete.
+    """
+
+    def __init__(self, app: Any, name: str, n_workers: int = 1) -> None:
+        self.app = app
+        self.name = name
+        self._cond = threading.Condition()
+        self._inbox: deque = deque()   # cross-thread injections (locked)
+        self._run: deque = deque()     # owner-thread-only run queue
+        self._timers = TimerWheel()    # owner-thread-only
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+        # --- instrumentation (see metrics.BackendStats) ------------------
+        self.spawns = 0            # async-call continuations created
+        self.switches = 0          # continuations resumed by the loop
+        self.queue_depth_hwm = 0   # run queue + inbox high-water
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        self._stop = False
+        self._thread = threading.Thread(target=self._loop,
+                                        name=f"{self.name}-loop", daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        with self._cond:
+            self._stop = True
+            self._cond.notify()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+
+    def deliver(self, gen: Generator, reply: Future) -> None:
+        self._inject(gen, reply, None)
+
+    # ------------------------------------------------------------ injection
+    def _inject(self, gen: Generator, fut: Future, resume: Resume) -> None:
+        with self._cond:
+            self._inbox.append((gen, fut, resume))
+            depth = len(self._inbox) + len(self._run)
+            if depth > self.queue_depth_hwm:
+                self.queue_depth_hwm = depth
+            self._cond.notify()
+
+    def _push_local(self, gen: Generator, fut: Future) -> None:
+        """Owner thread only: no lock, no wakeup — the loop is already awake."""
+        self._run.append((gen, fut, None))
+        depth = len(self._run) + len(self._inbox)
+        if depth > self.queue_depth_hwm:
+            self.queue_depth_hwm = depth
+
+    # ------------------------------------------------------------ main loop
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while self._inbox:
+                    self._run.append(self._inbox.popleft())
+                if not self._run:
+                    if self._stop:
+                        return
+                    timeout = self._timers.seconds_until_next(time.monotonic())
+                    if timeout is None or timeout > 0:
+                        self._cond.wait(timeout=timeout)
+                    while self._inbox:
+                        self._run.append(self._inbox.popleft())
+            for cont in self._timers.pop_due(time.monotonic()):
+                self._run.append(cont)
+            if self._run:
+                gen, fut, resume = self._run.popleft()
+                self.switches += 1
+                self._step(gen, fut, resume)
+
+    # ---------------------------------------------------- continuation step
+    def _step(self, gen: Generator, fut: Future, resume: Resume) -> None:
+        """Drive one continuation until it parks or finishes."""
+        send_value: Any = None
+        throw_exc: Optional[BaseException] = None
+        if resume is not None:
+            kind, payload = resume
+            if kind == "throw":
+                throw_exc = payload
+            else:
+                send_value = payload
+        while True:
+            try:
+                if throw_exc is not None:
+                    exc, throw_exc = throw_exc, None
+                    eff = gen.throw(exc)
+                else:
+                    eff = gen.send(send_value)
+            except StopIteration as stop:
+                fut.set_result(stop.value)
+                return
+            except BaseException as exc:
+                fut.set_exception(exc)
+                return
+
+            if isinstance(eff, (Wait, WaitAll)):
+                waits = ([eff.future] if isinstance(eff, Wait)
+                         else list(eff.futures))
+                if all(w.done for w in waits):
+                    try:
+                        send_value = (waits[0].result()
+                                      if isinstance(eff, Wait)
+                                      else [w.result() for w in waits])
+                        throw_exc = None
+                    except BaseException as exc:
+                        send_value, throw_exc = None, exc
+                    continue
+                self._park(gen, fut, eff, waits)
+                return
+
+            if isinstance(eff, Sleep):
+                self._timers.push(
+                    time.monotonic() + max(eff.seconds, 0.0),
+                    (gen, fut, ("send", None)))
+                return
+
+            try:
+                send_value = self._interpret(eff)
+                throw_exc = None
+            except BaseException as exc:
+                throw_exc = exc
+
+    def _interpret(self, eff: Any) -> Any:
+        if isinstance(eff, AsyncRpc):
+            fut = Future()
+            self.spawns += 1
+            self._push_local(
+                self.app.rpc_carrier(eff.dest, eff.method, eff.payload), fut)
+            return fut
+
+        if isinstance(eff, Compute):
+            burn(eff.seconds)  # serializes on the loop — the backend's trade
+            return None
+
+        if isinstance(eff, Offload):
+            return self.app.offload(eff.fn, *eff.args)
+
+        if isinstance(eff, SpawnLocal):
+            fut = Future()
+            self.spawns += 1
+            self._push_local(eff.genfn(*eff.args), fut)
+            return fut
+
+        raise TypeError(f"Unknown effect: {eff!r}")
+
+    # -------------------------------------------------------------- parking
+    def _park(self, gen: Generator, fut: Future, eff: Any,
+              waits: List[Future]) -> None:
+        if isinstance(eff, Wait):
+            def _resume_one(w: Future) -> None:
+                try:
+                    resume: Tuple[str, Any] = ("send", w.result())
+                except BaseException as exc:
+                    resume = ("throw", exc)
+                self._inject(gen, fut, resume)
+            waits[0].add_done_callback(_resume_one)
+            return
+
+        remaining = [len(waits)]
+        rlock = threading.Lock()
+
+        def _resume_all(_w: Future) -> None:
+            with rlock:
+                remaining[0] -= 1
+                if remaining[0]:
+                    return
+            try:
+                resume: Tuple[str, Any] = ("send",
+                                           [w.result() for w in waits])
+            except BaseException as exc:
+                resume = ("throw", exc)
+            self._inject(gen, fut, resume)
+
+        for w in waits:
+            w.add_done_callback(_resume_all)
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> BackendStats:
+        return BackendStats(spawns=self.spawns, switches=self.switches,
+                            queue_depth_hwm=self.queue_depth_hwm)

@@ -1,7 +1,7 @@
 """Service executors: the async-call backends under study.
 
 The paper compares two; this repo grows the comparison into a backend
-design-space study over four (see ``BACKEND_NAMES``):
+design-space study over six (see ``BACKEND_NAMES``):
 
 ``thread``  (:class:`ThreadExecutor`)
     Faithful to DeathStarBench's ``std::async`` default launch policy: every
@@ -26,7 +26,18 @@ design-space study over four (see ``BACKEND_NAMES``):
     Same fibers, boost's work-*stealing* algorithm analogue: idle schedulers
     pull parked-ready fibers from loaded siblings instead of sleeping.
 
-All four interpret the *same* handler generators (see ``effects.py``) —
+``fiber-batch``  (:class:`FiberExecutor` with ``batch=True``)
+    Fibers with **io_uring-style batched submission**: same-tick async calls
+    buffer in a per-scheduler submission ring and flush (on size, join or
+    timeout) as *one* batch carrier fiber, amortizing per-call dispatch
+    across a whole fan-out (see :class:`fiber.BatchFiberScheduler`).
+
+``event-loop``  (:class:`eventloop.EventLoopExecutor`)
+    The asyncio/libuv design point: a **single-carrier** cooperative loop
+    where async calls are continuations on a run queue — no clone, no
+    carrier pool, no handoff; ``Compute`` serializes on the loop.
+
+All six interpret the *same* handler generators (see ``effects.py``) —
 switching a service between backends is a one-word config change, mirroring
 the paper's ``std::async`` → ``boost::fiber::async`` search-and-replace.
 New backends register in ``BACKEND_FACTORIES`` and every harness (benchmarks,
@@ -43,7 +54,8 @@ from typing import Any, Callable, Dict, Generator, List, Optional
 
 from .calibrate import burn
 from .effects import AsyncRpc, Compute, Offload, Sleep, SpawnLocal, Wait, WaitAll
-from .fiber import FiberScheduler, StealGroup
+from .eventloop import EventLoopExecutor
+from .fiber import BatchFiberScheduler, FiberScheduler, StealGroup
 from .metrics import BackendStats
 from .future import Future
 
@@ -457,18 +469,34 @@ class FiberExecutor(Executor):
     ``steal=False``: round-robin placement, fibers pinned (work-sharing).
     ``steal=True``: same placement, but idle schedulers steal parked-ready
     fibers from loaded siblings (work-stealing; see ``fiber.py``).
+    ``batch=True``: per-scheduler submission rings flush same-tick async
+    calls as one batch carrier (io_uring-style; see ``fiber.py``).  Batch
+    rings are owner-thread-only, so ``batch`` excludes ``steal``.
     """
 
     def __init__(self, app: Any, name: str, n_workers: int = 1, *,
-                 steal: bool = False) -> None:
+                 steal: bool = False, batch: bool = False,
+                 batch_size: int = 32, flush_after: float = 0.0005) -> None:
+        if steal and batch:
+            raise ValueError("batch submission rings are owner-thread-only "
+                             "state; steal=True cannot see them")
         self.app = app
         self.name = name
         self.steal = steal
+        self.batch = batch
         group = StealGroup() if steal and n_workers > 1 else None
-        self._scheds: List[FiberScheduler] = [
-            FiberScheduler(app, name=f"{name}-fib{i}", steal_group=group)
-            for i in range(n_workers)
-        ]
+        if batch:
+            self._scheds: List[FiberScheduler] = [
+                BatchFiberScheduler(app, name=f"{name}-fib{i}",
+                                    batch_size=batch_size,
+                                    flush_after=flush_after)
+                for i in range(n_workers)
+            ]
+        else:
+            self._scheds = [
+                FiberScheduler(app, name=f"{name}-fib{i}", steal_group=group)
+                for i in range(n_workers)
+            ]
         # atomic round-robin ticket; a plain `self._rr += 1` is a lost-update
         # race when many dispatcher threads deliver concurrently, which
         # silently unbalances the schedulers.
@@ -505,20 +533,34 @@ class FiberExecutor(Executor):
         s.spawn_external(gen, reply)
 
     def stats(self) -> BackendStats:
+        # batch-ring counters exist only on BatchFiberScheduler; getattr
+        # keeps one aggregation path for all three fiber variants.
+        def agg(field: str) -> int:
+            return sum(getattr(s, field, 0) for s in self._scheds)
         return BackendStats(spawns=self.spawns, switches=self.switches,
-                            steals=self.steals)
+                            steals=self.steals,
+                            batched_calls=agg("batched_calls"),
+                            flushes_size=agg("flushes_size"),
+                            flushes_join=agg("flushes_join"),
+                            flushes_timeout=agg("flushes_timeout"),
+                            ring_hwm=max((getattr(s, "ring_hwm", 0)
+                                          for s in self._scheds), default=0))
 
 
 # --------------------------------------------------------------- registry
 # The backend set is *data*: benchmarks, the CI smoke matrix, parity tests
-# and the app builders all iterate BACKEND_NAMES, so a future backend
-# (asyncio, io_uring-style batching, ...) is one entry here.
+# and the app builders all iterate BACKEND_NAMES, so a future backend is
+# one entry here (plus a sizing rule in repro.apps.registry.build_bench_app
+# if the default pool sizing does not fit it).
 BACKEND_FACTORIES: Dict[str, Callable[[Any, str, int], Executor]] = {
     "thread": ThreadExecutor,
     "thread-pool": PooledThreadExecutor,
     "fiber": FiberExecutor,
     "fiber-steal": lambda app, name, n_workers: FiberExecutor(
         app, name, n_workers, steal=True),
+    "fiber-batch": lambda app, name, n_workers: FiberExecutor(
+        app, name, n_workers, batch=True),
+    "event-loop": EventLoopExecutor,
 }
 
 BACKEND_NAMES = tuple(BACKEND_FACTORIES)

@@ -29,21 +29,29 @@ Two placement algorithms, mirroring boost.fiber's stock schedulers:
   then guarded by the scheduler's condition-variable lock (owner pops the
   front, thieves pop the back), and a scheduler that accumulates surplus
   ready work nudges one idle sibling awake.
+
+A third variant, :class:`BatchFiberScheduler` (the ``fiber-batch`` backend),
+keeps work-sharing placement but buffers same-tick ``AsyncRpc`` submissions
+in a per-scheduler ring and flushes them as one batch carrier fiber —
+io_uring-style submission/completion — amortizing per-call dispatch across a
+whole fan-out.  Timed parks for all variants (``Sleep`` effects, batch flush
+deadlines) share the :class:`repro.core.timers.TimerWheel`.
 """
 from __future__ import annotations
 
-import heapq
 import itertools
 import threading
 import time
 from collections import deque
-from typing import Any, Callable, Generator, List, Optional, Tuple
+from typing import Any, Generator, List, Optional, Tuple
 
 from .calibrate import burn
 from .effects import AsyncRpc, Compute, Effect, Offload, Sleep, SpawnLocal, Wait, WaitAll
 from .future import Future
+from .timers import TimerWheel
 
 _RAISE = object()  # sentinel: send value is an exception to throw into the fiber
+_FLUSH = object()  # timer payload: a batch scheduler's ring flush deadline
 
 
 class Fiber:
@@ -110,8 +118,9 @@ class FiberScheduler:
         self.app = app
         self.name = name
         self._ready: deque[Tuple[Fiber, Any]] = deque()
-        self._timers: List[Tuple[float, int, Fiber, Any]] = []
-        self._timer_seq = itertools.count()
+        # Timed parks (Sleep effects, subclass flush deadlines) live on the
+        # shared TimerWheel (repro.core.timers) — owner-thread-only.
+        self._timers = TimerWheel()
         self._cond = threading.Condition()
         self._injected: deque[Tuple[Fiber, Any]] = deque()
         self._stop = False
@@ -175,10 +184,8 @@ class FiberScheduler:
                     if not self._ready:
                         if self._stop:
                             return
-                        timeout = None
-                        if self._timers:
-                            timeout = max(
-                                self._timers[0][0] - time.monotonic(), 0.0)
+                        timeout = self._timers.seconds_until_next(
+                            time.monotonic())
                         if self._steal:
                             timeout = (self._IDLE_STEAL_POLL if timeout is None
                                        else min(timeout, self._IDLE_STEAL_POLL))
@@ -200,18 +207,21 @@ class FiberScheduler:
                                     self._group.unregister_idle(self)
                         while self._injected:
                             self._ready.append(self._injected.popleft())
-            # 2. fire due timers (the timer heap is owner-thread-only; the
+            # 2. fire due timers (the timer wheel is owner-thread-only; the
             #    resumed fibers go through _push_ready so thieves see them)
-            now = time.monotonic()
-            while self._timers and self._timers[0][0] <= now:
-                _, _, fib, value = heapq.heappop(self._timers)
-                self._push_ready((fib, value))
+            for item in self._timers.pop_due(time.monotonic()):
+                self._on_timer(item)
             # 3. run one ready fiber to its next suspension point
             item = self._pop_ready()
             if item is not None:
                 fib, value = item
                 self.switches += 1
                 self._run_fiber(fib, value)
+
+    def _on_timer(self, item: Any) -> None:
+        """A wheel entry came due.  Base schedulers only park fibers on the
+        wheel; :class:`BatchFiberScheduler` also parks flush deadlines."""
+        self._push_ready(item)
 
     # ------------------------------------------------ ready deque + stealing
     # Work-sharing mode: the ready deque is touched only by the owner thread,
@@ -327,8 +337,7 @@ class FiberScheduler:
 
         if isinstance(eff, Sleep):
             deadline = time.monotonic() + max(eff.seconds, 0.0)
-            heapq.heappush(self._timers,
-                           (deadline, next(self._timer_seq), fib, None))
+            self._timers.push(deadline, (fib, None))
             return None, True
 
         if isinstance(eff, Compute):
@@ -377,3 +386,115 @@ class _CountdownLatch:
         with self._lock:
             self._n -= 1
             return self._n == 0
+
+
+def _chain_reply(reply: Future, fut: Future) -> None:
+    """Copy a resolved transport reply onto the future handed to the
+    submitting fiber at AsyncRpc time (the batch backend decouples the two)."""
+    try:
+        fut.set_result(reply.result())
+    except BaseException as exc:
+        fut.set_exception(exc)
+
+
+class BatchFiberScheduler(FiberScheduler):
+    """Fiber scheduler with io_uring-style batched async-call submission.
+
+    A plain :class:`FiberScheduler` spawns one carrier fiber per ``AsyncRpc``
+    — cheap, but still a ready-queue push, a context switch and a transport
+    send *per call*.  This subclass gives each scheduler a **submission
+    ring**: ``AsyncRpc`` effects buffer ``(dest, method, payload, future)``
+    entries and resume the caller immediately; the ring is flushed as **one
+    batch carrier fiber** that performs every transport send back-to-back
+    (and pays any simulated network latency once per batch, the io_uring
+    amortization).  Completions flow back through per-call reply futures —
+    the completion ring — so callers observe identical semantics.
+
+    Flush triggers, mirroring io_uring's submit conditions:
+
+    * **size** — the ring reached ``batch_size`` entries;
+    * **join** — the running fiber is about to wait (``Wait``/``WaitAll``);
+      buffered submissions must reach the wire first, both for correctness
+      (the awaited future may *be* a buffered call's reply) and because a
+      blocking caller is exactly when io_uring applications submit;
+    * **timeout** — ``flush_after`` seconds elapsed since the ring became
+      non-empty (bounds the latency of fire-and-forget calls), tracked on
+      the shared :class:`~repro.core.timers.TimerWheel`.
+
+    Ring state is owner-thread-only, so this scheduler never joins a
+    :class:`StealGroup` (a thief cannot see the victim's unflushed ring).
+    """
+
+    def __init__(self, app: "Any", name: str = "sched", *,
+                 batch_size: int = 32, flush_after: float = 0.0005) -> None:
+        super().__init__(app, name)
+        self.batch_size = batch_size
+        self.flush_after = flush_after
+        self._ring: List[Tuple[str, str, Any, Future]] = []
+        # Each flush advances the ring generation; flush deadlines are
+        # tagged with the generation that armed them so a stale timer from
+        # a size/join-flushed ring cannot truncate its successor (which
+        # would systematically shrink batches under sustained load).
+        self._ring_gen = 0
+        # --- instrumentation (see metrics.BackendStats) ------------------
+        self.batched_calls = 0      # submissions that went through the ring
+        self.flushes_size = 0
+        self.flushes_join = 0
+        self.flushes_timeout = 0
+        self.ring_hwm = 0           # ring occupancy high-water
+
+    # ----------------------------------------------------------- submission
+    def _interpret(self, fib: Fiber, eff: Effect) -> Tuple[Any, bool]:
+        if isinstance(eff, AsyncRpc):
+            fut = Future()
+            if not self._ring:
+                # arm the flush deadline when the ring goes non-empty
+                self._timers.push(time.monotonic() + self.flush_after,
+                                  (_FLUSH, self._ring_gen))
+            self._ring.append((eff.dest, eff.method, eff.payload, fut))
+            if len(self._ring) > self.ring_hwm:
+                self.ring_hwm = len(self._ring)
+            if len(self._ring) >= self.batch_size:
+                self._flush("size")
+            return fut, False
+
+        if isinstance(eff, (Wait, WaitAll)) and self._ring:
+            self._flush("join")
+        return super()._interpret(fib, eff)
+
+    # ---------------------------------------------------------------- flush
+    def _on_timer(self, item: Any) -> None:
+        if isinstance(item, tuple) and item and item[0] is _FLUSH:
+            if item[1] == self._ring_gen:
+                self._flush("timeout")
+            return  # stale generation: its ring already flushed
+        super()._on_timer(item)
+
+    def _flush(self, reason: str) -> None:
+        if not self._ring:
+            return  # already flushed by a tighter trigger
+        batch, self._ring = self._ring, []
+        self._ring_gen += 1  # invalidates this ring's pending flush timer
+        self.batched_calls += len(batch)
+        if reason == "size":
+            self.flushes_size += 1
+        elif reason == "join":
+            self.flushes_join += 1
+        else:
+            self.flushes_timeout += 1
+        carrier = Fiber(self._batch_carrier(batch),
+                        name=f"batch-carrier[{len(batch)}]")
+        self.fibers_spawned += 1  # one carrier per *batch*, not per call
+        self._push_ready((carrier, None))
+
+    def _batch_carrier(self, batch: List[Tuple[str, str, Any, Future]]
+                       ) -> Generator:
+        """One fiber submits the whole ring: the per-call dispatch cost the
+        plain fiber backend pays N times is paid once here."""
+        if self.app.net_latency > 0:
+            yield Sleep(self.app.net_latency)  # client-side hop, amortized
+        for dest, method, payload, fut in batch:
+            reply = self.app.send(dest, method, payload)
+            reply.add_done_callback(
+                lambda r, fut=fut: _chain_reply(r, fut))
+        return len(batch)

@@ -18,12 +18,18 @@ class BackendStats:
     value.
 
     ``spawns``/``spawn_seconds``: async-call carriers created (thread clones,
-    pool submissions, or fibers) and the wall time spent creating them.
-    ``switches``: fiber context switches.  ``steals``: ready fibers pulled by
-    an idle scheduler from a loaded sibling (``fiber-steal`` only).
+    pool submissions, fibers, or event-loop continuations) and the wall time
+    spent creating them.  ``switches``: fiber context switches / event-loop
+    continuation resumptions.  ``steals``: ready fibers pulled by an idle
+    scheduler from a loaded sibling (``fiber-steal`` only).
     ``pool_stalls``/``stall_seconds``: submissions that found the carrier
     queue full, and the wall time dispatchers spent blocked on it
-    (``thread-pool`` only).  ``queue_depth_hwm``: carrier-queue high water.
+    (``thread-pool`` only).  ``queue_depth_hwm``: carrier-queue (or event-loop
+    run-queue) high water.  ``batched_calls``: async calls that went through
+    a submission ring; ``flushes_size``/``flushes_join``/``flushes_timeout``:
+    ring flushes by trigger; ``ring_hwm``: ring occupancy high-water
+    (``fiber-batch`` only — mean batch size is
+    ``batched_calls / sum(flushes_*)``).
     """
     spawns: int = 0
     spawn_seconds: float = 0.0
@@ -32,8 +38,13 @@ class BackendStats:
     pool_stalls: int = 0
     stall_seconds: float = 0.0
     queue_depth_hwm: int = 0
+    batched_calls: int = 0
+    flushes_size: int = 0
+    flushes_join: int = 0
+    flushes_timeout: int = 0
+    ring_hwm: int = 0
 
-    _GAUGES = ("queue_depth_hwm",)
+    _GAUGES = ("queue_depth_hwm", "ring_hwm")
 
     def add(self, other: "BackendStats") -> "BackendStats":
         """In-place aggregation across executors (gauges take the max)."""
@@ -122,6 +133,12 @@ class TrialResult:
         if bs.get("pool_stalls"):
             s += (f" stalls={bs['pool_stalls']:.0f}"
                   f" qhwm={bs.get('queue_depth_hwm', 0):.0f}")
+        if bs.get("batched_calls"):
+            flushes = (bs.get("flushes_size", 0) + bs.get("flushes_join", 0)
+                       + bs.get("flushes_timeout", 0))
+            s += (f" batched={bs['batched_calls']:.0f}"
+                  f"/{flushes:.0f}fl"
+                  f" ringhwm={bs.get('ring_hwm', 0):.0f}")
         return s
 
 

@@ -99,8 +99,10 @@ class App:
         Default async-call backend for every service — any name in
         ``executor.BACKEND_NAMES``: ``"thread"`` (paper baseline, std::async
         semantics), ``"thread-pool"`` (bounded pre-spawned carrier pool),
-        ``"fiber"`` (paper technique, work-sharing placement) or
-        ``"fiber-steal"`` (work-stealing placement).  Individual
+        ``"fiber"`` (paper technique, work-sharing placement),
+        ``"fiber-steal"`` (work-stealing placement), ``"fiber-batch"``
+        (io_uring-style batched submission rings) or ``"event-loop"``
+        (single-carrier cooperative loop).  Individual
         :class:`ServiceSpec`s may override.
     net_latency:
         Simulated one-way network latency the carrier pays before the send

@@ -1,0 +1,61 @@
+"""Shared timer wheel for the cooperative schedulers.
+
+Both single-threaded scheduler families — :class:`~repro.core.fiber.
+FiberScheduler` (fibers on a ready deque) and :class:`~repro.core.eventloop.
+EventLoopExecutor` (continuations on a run queue) — park timed waits
+(``Sleep`` effects, batched-submission flush deadlines) on the same
+structure: a monotonic-deadline min-heap with FIFO tie-breaking.  It was
+originally embedded in ``fiber.py``; it lives here so every cooperative
+backend shares one implementation and one set of ordering guarantees:
+
+* entries pop in deadline order;
+* entries with *identical* deadlines pop in push order (without the
+  sequence field, ``heapq`` would fall through to comparing payloads,
+  which are unorderable scheduler internals);
+* the wheel is **owner-thread-only** — exactly one scheduler thread pushes
+  and pops; cross-thread wakeups go through the scheduler's own injection
+  queue, never through the wheel.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Any, List, Optional, Tuple
+
+
+class TimerWheel:
+    """Deadline-ordered queue of opaque payloads (min-heap + FIFO ties)."""
+
+    __slots__ = ("_heap", "_seq")
+
+    def __init__(self) -> None:
+        self._heap: List[Tuple[float, int, Any]] = []
+        self._seq = itertools.count()
+
+    def push(self, deadline: float, item: Any) -> None:
+        """Schedule ``item`` to become due at monotonic time ``deadline``."""
+        heapq.heappush(self._heap, (deadline, next(self._seq), item))
+
+    def pop_due(self, now: float) -> List[Any]:
+        """Remove and return every item whose deadline has passed, in
+        deadline order (FIFO among equal deadlines)."""
+        due: List[Any] = []
+        while self._heap and self._heap[0][0] <= now:
+            due.append(heapq.heappop(self._heap)[2])
+        return due
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest pending deadline; None when the wheel is empty."""
+        return self._heap[0][0] if self._heap else None
+
+    def seconds_until_next(self, now: float) -> Optional[float]:
+        """Non-negative sleep budget until the next deadline; None if empty."""
+        if not self._heap:
+            return None
+        return max(self._heap[0][0] - now, 0.0)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

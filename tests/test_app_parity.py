@@ -67,8 +67,8 @@ def test_registry_protocol(app_name):
 @pytest.mark.parametrize("app_name", APP_NAMES)
 def test_incremental_migration(app_name):
     """Paper: services can migrate backends one at a time; a mixed-backend
-    app (one override per registered backend) must serve every workload's
-    request unchanged."""
+    app (one override per registered backend, so all six coexist) must
+    serve every workload's request unchanged."""
     d = get_app_def(app_name)
     factory = d.make_request_factory("mixed")
     rng = np.random.default_rng(5)
@@ -78,8 +78,11 @@ def test_incremental_migration(app_name):
     # spread the remaining backends over the first services of the graph
     others = [n for n in REGISTRY[app_name].build("fiber").services
               if n != d.frontend]
-    for name, backend in zip(others, ("thread-pool", "fiber-steal")):
+    migrated = [b for b in BACKENDS if b not in ("thread", "fiber")]
+    for name, backend in zip(others, migrated):
         overrides[name] = backend
+    assert len(others) >= len(migrated), \
+        "app graph too small to host every backend at once"
     app = d.build("thread", overrides=overrides)
     with app:
         got = [app.send(dest, m, p).wait(timeout=15)

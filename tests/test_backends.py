@@ -10,24 +10,34 @@ import pytest
 
 from repro.core import (App, BACKEND_NAMES, Compute, ServiceSpec, SpawnLocal,
                         Wait, WaitAll, make_executor, run_trial)
+from repro.core.eventloop import EventLoopExecutor
 from repro.core.executor import (FiberExecutor, PooledThreadExecutor,
                                  ThreadExecutor)
+from repro.core.fiber import BatchFiberScheduler, FiberScheduler
 from repro.core.future import Future
 
 
 # --------------------------------------------------------------- registry
-def test_backend_names_is_the_four_backend_matrix():
-    assert BACKEND_NAMES == ("thread", "thread-pool", "fiber", "fiber-steal")
+def test_backend_names_is_the_six_backend_matrix():
+    assert BACKEND_NAMES == ("thread", "thread-pool", "fiber", "fiber-steal",
+                             "fiber-batch", "event-loop")
 
 
 def test_make_executor_resolves_every_registered_backend():
     types = {"thread": ThreadExecutor, "thread-pool": PooledThreadExecutor,
-             "fiber": FiberExecutor, "fiber-steal": FiberExecutor}
+             "fiber": FiberExecutor, "fiber-steal": FiberExecutor,
+             "fiber-batch": FiberExecutor, "event-loop": EventLoopExecutor}
     for backend in BACKEND_NAMES:
         ex = make_executor(backend, app=None, name="t", n_workers=2)
         assert isinstance(ex, types[backend]), backend
     assert make_executor("fiber-steal", None, "t", 2).steal
     assert not make_executor("fiber", None, "t", 2).steal
+    batch = make_executor("fiber-batch", None, "t", 2)
+    assert batch.batch and not batch.steal
+    assert all(isinstance(s, BatchFiberScheduler) for s in batch._scheds)
+    plain = make_executor("fiber", None, "t", 2)
+    assert not any(isinstance(s, BatchFiberScheduler) for s in plain._scheds)
+    assert all(isinstance(s, FiberScheduler) for s in plain._scheds)
 
 
 def test_make_executor_unknown_backend_lists_registry():
@@ -162,7 +172,9 @@ def test_app_backend_stats_aggregates_across_services():
     assert tr.errors == 0
     # TrialResult carries the per-trial delta of the aggregate counters
     for key in ("spawns", "pool_stalls", "queue_depth_hwm", "steals",
-                "switches", "spawn_seconds", "stall_seconds"):
+                "switches", "spawn_seconds", "stall_seconds",
+                "batched_calls", "flushes_size", "flushes_join",
+                "flushes_timeout", "ring_hwm"):
         assert key in tr.backend_stats
     agg = app.backend_stats()
     assert agg.spawns == app.total_spawns()
@@ -176,3 +188,25 @@ def test_trial_row_mentions_saturation_counters():
                                     "steals": 2})
     row = tr.row()
     assert "stalls=3" in row and "qhwm=9" in row and "steals=2" in row
+
+
+def test_trial_row_mentions_batch_counters():
+    from repro.core import TrialResult
+    tr = TrialResult(offered_rps=1, achieved_rps=1, duration=1, p50=0.0,
+                     p99=0.0, mean=0.0, completed=1, shed=0, errors=0,
+                     backend_stats={"batched_calls": 12, "flushes_size": 1,
+                                    "flushes_join": 2, "flushes_timeout": 1,
+                                    "ring_hwm": 6})
+    row = tr.row()
+    assert "batched=12/4fl" in row and "ringhwm=6" in row
+
+
+def test_backend_stats_ring_hwm_is_a_gauge():
+    from repro.core import BackendStats
+    before = BackendStats(batched_calls=10, ring_hwm=7)
+    after = BackendStats(batched_calls=25, ring_hwm=7)
+    d = BackendStats.delta(before, after)
+    assert d.batched_calls == 15   # counter: per-trial delta
+    assert d.ring_hwm == 7         # gauge: high-water survives the delta
+    agg = BackendStats(ring_hwm=3).add(BackendStats(ring_hwm=9))
+    assert agg.ring_hwm == 9       # aggregation takes the max

@@ -40,12 +40,11 @@ def test_timers_fire_in_deadline_order(sched):
 
 
 def test_equal_deadline_timers_fire_fifo():
-    """The timer heap tie-breaks *identical* deadlines by push sequence
-    (without the seq field, heapq would compare Fiber objects and raise).
-    Entries are injected directly so the deadlines are exactly equal —
-    Sleep-computed deadlines are always strictly increasing."""
-    import heapq
-
+    """The shared TimerWheel (repro.core.timers) tie-breaks *identical*
+    deadlines by push sequence (without it, heapq would compare Fiber
+    payloads and raise).  Entries are injected directly so the deadlines
+    are exactly equal — Sleep-computed deadlines are always strictly
+    increasing."""
     from repro.core.fiber import Fiber
 
     s = FiberScheduler(app=None, name="tie-test")
@@ -58,8 +57,8 @@ def test_equal_deadline_timers_fire_fifo():
 
     deadline = time.monotonic() + 0.01
     fibs = [Fiber(body(i)) for i in range(5)]
-    for fib in fibs:  # scheduler not started yet: safe to touch the heap
-        heapq.heappush(s._timers, (deadline, next(s._timer_seq), fib, None))
+    for fib in fibs:  # scheduler not started yet: safe to touch the wheel
+        s._timers.push(deadline, (fib, None))
     s.start()
     try:
         for fib in fibs:

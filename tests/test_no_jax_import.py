@@ -1,0 +1,62 @@
+"""The CI bench-smoke lane installs *only numpy* — no jax.
+
+Everything on the smoke path (repro.core, repro.apps, the smoke harness and
+the trend comparator) must therefore import cleanly when jax does not exist
+at all.  This test runs that import in a subprocess with a meta-path finder
+that makes any ``import jax`` raise, which is stronger than checking the
+current environment (where jax IS installed and a stray import would pass
+silently).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+_PROBE = r"""
+import importlib.abc
+import sys
+
+
+class _JaxBlocker(importlib.abc.MetaPathFinder):
+    def find_spec(self, fullname, path=None, target=None):
+        if fullname == "jax" or fullname.startswith(("jax.", "jaxlib")):
+            raise ImportError(f"jax is not installed in the smoke lane "
+                              f"(blocked import of {fullname!r})")
+        return None
+
+
+sys.meta_path.insert(0, _JaxBlocker())
+
+# the full smoke-lane import surface
+import repro.core            # noqa: E402,F401
+import repro.apps            # noqa: E402,F401
+import benchmarks.run        # noqa: E402,F401
+import benchmarks.bench_smoke  # noqa: E402,F401
+import benchmarks.trend      # noqa: E402,F401
+from repro.apps import build_bench_app  # noqa: E402
+
+# belt and braces: nothing smuggled jax in before the blocker either
+leaked = [m for m in sys.modules
+          if m == "jax" or m.startswith(("jax.", "jaxlib"))]
+assert not leaked, f"jax modules leaked into the smoke path: {leaked}"
+
+# and the matrix is actually buildable without jax (wiring only, no start)
+app = build_bench_app("socialnetwork", "event-loop")
+assert app.services
+print("smoke path is jax-free")
+"""
+
+
+def test_smoke_path_imports_without_jax():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _PROBE], cwd=str(REPO),
+                          env=env, capture_output=True, text=True,
+                          timeout=120)
+    assert proc.returncode == 0, (
+        f"smoke-path import pulled in jax (or failed outright):\n"
+        f"stdout: {proc.stdout}\nstderr: {proc.stderr}")
+    assert "smoke path is jax-free" in proc.stdout

@@ -1,0 +1,429 @@
+"""Shared-timer-wheel contract + deterministic new-backend scheduling tests.
+
+The TimerWheel (repro.core.timers) is the one timed-park structure for every
+cooperative backend: FiberScheduler (fiber/fiber-steal), BatchFiberScheduler
+(fiber-batch flush deadlines) and EventLoopExecutor.  These tests pin its
+ordering guarantees directly, then assert the *backends* inherit them: the
+event loop must resume sleepers in exactly the order a FiberScheduler does,
+and the batch scheduler's three flush triggers (size / join / timeout) must
+each fire deterministically.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import (App, AsyncRpc, Future, ServiceSpec, Sleep, SpawnLocal,
+                        Wait, WaitAll)
+from repro.core.eventloop import EventLoopExecutor
+from repro.core.executor import FiberExecutor
+from repro.core.fiber import BatchFiberScheduler, FiberScheduler
+from repro.core.timers import TimerWheel
+
+
+# ---------------------------------------------------------------- TimerWheel
+def test_wheel_pops_in_deadline_order():
+    w = TimerWheel()
+    w.push(3.0, "c")
+    w.push(1.0, "a")
+    w.push(2.0, "b")
+    assert w.pop_due(2.5) == ["a", "b"]
+    assert len(w) == 1
+    assert w.pop_due(10.0) == ["c"]
+    assert not w
+
+
+def test_wheel_equal_deadlines_pop_fifo():
+    """Identical deadlines tie-break by push order; without the internal
+    sequence field heapq would compare the (unorderable) payloads."""
+    w = TimerWheel()
+    for i in range(5):
+        w.push(1.0, ("payload", i))  # tuples of equal prefix would compare
+    assert w.pop_due(1.0) == [("payload", i) for i in range(5)]
+
+
+def test_wheel_next_deadline_and_sleep_budget():
+    w = TimerWheel()
+    assert w.next_deadline() is None
+    assert w.seconds_until_next(0.0) is None
+    w.push(5.0, "x")
+    assert w.next_deadline() == 5.0
+    assert w.seconds_until_next(3.0) == 2.0
+    assert w.seconds_until_next(7.0) == 0.0  # overdue clamps, never negative
+
+
+def test_wheel_pop_due_leaves_future_entries():
+    w = TimerWheel()
+    w.push(1.0, "due")
+    w.push(9.0, "later")
+    assert w.pop_due(1.0) == ["due"]
+    assert w.next_deadline() == 9.0
+
+
+# ----------------------------------------- event-loop vs fiber timer parity
+def _napper(order, tag, seconds):
+    yield Sleep(seconds)
+    order.append(tag)
+
+
+NAP_PLAN = [("slow", 0.06), ("fast", 0.01), ("mid", 0.03)]
+NAP_ORDER = ["fast", "mid", "slow"]  # deadline order, not spawn order
+
+
+def test_event_loop_timers_fire_in_deadline_order():
+    ex = EventLoopExecutor(app=None, name="el")
+    ex.start()
+    order = []
+    try:
+        futs = []
+        for tag, seconds in NAP_PLAN:
+            fut = Future()
+            ex.deliver(_napper(order, tag, seconds), fut)
+            futs.append(fut)
+        for f in futs:
+            f.wait(timeout=5)
+    finally:
+        ex.stop()
+    assert order == NAP_ORDER
+
+
+def test_fiber_and_event_loop_agree_on_timer_order():
+    """Same sleep program, both cooperative backends, identical resume
+    order — the contract the shared TimerWheel exists to guarantee."""
+    orders = {}
+
+    sched = FiberScheduler(app=None, name="tw-fib")
+    sched.start()
+    try:
+        orders["fiber"] = []
+        for f in [sched.spawn_external(_napper(orders["fiber"], tag, s))
+                  for tag, s in NAP_PLAN]:
+            f.wait(timeout=5)
+    finally:
+        sched.stop()
+
+    ex = EventLoopExecutor(app=None, name="tw-el")
+    ex.start()
+    try:
+        orders["event-loop"] = []
+        futs = []
+        for tag, s in NAP_PLAN:
+            fut = Future()
+            ex.deliver(_napper(orders["event-loop"], tag, s), fut)
+            futs.append(fut)
+        for f in futs:
+            f.wait(timeout=5)
+    finally:
+        ex.stop()
+
+    assert orders["fiber"] == orders["event-loop"] == NAP_ORDER
+
+
+# ------------------------------------------------------- event-loop basics
+def test_event_loop_is_single_carrier():
+    """Every continuation — handlers and their async spawns — runs on the
+    one loop thread; n_workers is accepted and ignored."""
+    ex = EventLoopExecutor(app=None, name="solo", n_workers=8)
+    ex.start()
+    ran_on = []
+    lock = threading.Lock()
+
+    def _leaf(i):
+        with lock:
+            ran_on.append(threading.current_thread().name)
+        return i
+        yield  # pragma: no cover - marks this as a generator
+
+    def _fan(n):
+        futs = []
+        for i in range(n):
+            f = yield SpawnLocal(_leaf, (i,))
+            futs.append(f)
+        vals = yield WaitAll(futs)
+        with lock:
+            ran_on.append(threading.current_thread().name)
+        return vals
+
+    try:
+        reply = Future()
+        ex.deliver(_fan(10), reply)
+        assert reply.wait(timeout=10) == list(range(10))
+    finally:
+        ex.stop()
+    assert set(ran_on) == {"solo-loop"}
+    st = ex.stats()
+    assert st.spawns == 10          # one continuation per async call
+    assert st.switches >= 11        # the handler + each leaf ran
+    assert st.queue_depth_hwm >= 2  # the fan-out piled up on the run queue
+
+
+def test_event_loop_exception_propagates():
+    ex = EventLoopExecutor(app=None, name="boom")
+    ex.start()
+
+    def _boom():
+        yield Sleep(0.001)
+        raise ValueError("event-loop boom")
+
+    try:
+        fut = Future()
+        ex.deliver(_boom(), fut)
+        with pytest.raises(ValueError, match="event-loop boom"):
+            fut.wait(timeout=5)
+    finally:
+        ex.stop()
+
+
+def test_event_loop_parks_on_external_future():
+    """A Wait on a future resolved from another thread goes through the
+    inbox injection path, not a blocking join."""
+    ex = EventLoopExecutor(app=None, name="park")
+    ex.start()
+    gate = Future()
+    parked = threading.Event()
+
+    def _waiter():
+        parked.set()
+        val = yield Wait(gate)
+        return val + 1
+
+    try:
+        fut = Future()
+        ex.deliver(_waiter(), fut)
+        assert parked.wait(timeout=5)
+        gate.set_result(41)
+        assert fut.wait(timeout=5) == 42
+    finally:
+        ex.stop()
+
+
+def test_event_loop_stop_with_parked_continuation_returns_promptly():
+    ex = EventLoopExecutor(app=None, name="stop")
+    ex.start()
+    parked = threading.Event()
+
+    def _waiter():
+        parked.set()
+        yield Wait(Future())  # never resolves
+
+    ex.deliver(_waiter(), Future())
+    assert parked.wait(timeout=5)
+    t0 = time.perf_counter()
+    ex.stop()
+    assert time.perf_counter() - t0 < 2.0
+    assert not ex._thread.is_alive()
+
+
+# -------------------------------------------------------- batch flush paths
+def _echo(svc, payload):
+    return payload
+    yield  # pragma: no cover - marks this as a generator
+
+
+@pytest.fixture
+def echo_app():
+    """Minimal transport target for AsyncRpc effects; the executors under
+    test are driven directly, so the service backend is irrelevant."""
+    app = App(backend="thread")
+    app.add_service(ServiceSpec("echo", {"go": _echo}, n_workers=2))
+    with app:
+        yield app
+
+
+def _batch_exec(app, **kw):
+    return FiberExecutor(app, "batch-test", n_workers=1, batch=True, **kw)
+
+
+def test_batch_flushes_on_size(echo_app):
+    ex = _batch_exec(echo_app, batch_size=4, flush_after=60.0)
+
+    def _fan():
+        futs = []
+        for i in range(4):
+            f = yield AsyncRpc("echo", "go", i)
+            futs.append(f)
+        vals = yield WaitAll(futs)
+        return vals
+
+    ex.start()
+    try:
+        reply = Future()
+        ex.deliver(_fan(), reply)
+        assert reply.wait(timeout=10) == list(range(4))
+    finally:
+        ex.stop()
+    st = ex.stats()
+    assert st.flushes_size == 1        # ring hit batch_size exactly
+    assert st.flushes_join == 0        # nothing left for the join to flush
+    assert st.flushes_timeout == 0     # deadline set far in the future
+    assert st.batched_calls == 4
+    assert st.ring_hwm == 4
+    assert ex.spawns == 1              # ONE batch carrier for 4 calls
+
+
+def test_batch_flushes_on_join(echo_app):
+    ex = _batch_exec(echo_app, batch_size=1000, flush_after=60.0)
+
+    def _fan():
+        futs = []
+        for i in range(3):
+            f = yield AsyncRpc("echo", "go", i)
+            futs.append(f)
+        vals = yield WaitAll(futs)  # ring below size: the join must flush
+        return vals
+
+    ex.start()
+    try:
+        reply = Future()
+        ex.deliver(_fan(), reply)
+        assert reply.wait(timeout=10) == [0, 1, 2]
+    finally:
+        ex.stop()
+    st = ex.stats()
+    assert st.flushes_join == 1
+    assert st.flushes_size == 0
+    assert st.batched_calls == 3
+    assert st.ring_hwm == 3
+
+
+def test_batch_flushes_on_timeout(echo_app):
+    """Fire-and-forget: the handler finishes without ever joining, so only
+    the flush deadline (on the shared TimerWheel) gets the call out."""
+    ex = _batch_exec(echo_app, batch_size=1000, flush_after=0.02)
+
+    def _fire():
+        f = yield AsyncRpc("echo", "go", 7)
+        return f  # hand the reply future out without waiting on it
+
+    ex.start()
+    try:
+        reply = Future()
+        ex.deliver(_fire(), reply)
+        inner = reply.wait(timeout=10)
+        assert inner.wait(timeout=10) == 7  # resolves only after the flush
+        st = ex.stats()
+        assert st.flushes_timeout == 1
+        assert st.flushes_size == 0
+        assert st.flushes_join == 0
+        assert st.batched_calls == 1
+    finally:
+        ex.stop()
+
+
+def test_batch_wait_on_buffered_reply_does_not_deadlock(echo_app):
+    """The awaited future IS a buffered submission's reply: the join-flush
+    must put it on the wire before the fiber parks."""
+    ex = _batch_exec(echo_app, batch_size=1000, flush_after=60.0)
+
+    def _call():
+        f = yield AsyncRpc("echo", "go", "ping")
+        val = yield Wait(f)
+        return val
+
+    ex.start()
+    try:
+        reply = Future()
+        ex.deliver(_call(), reply)
+        assert reply.wait(timeout=10) == "ping"
+    finally:
+        ex.stop()
+    assert ex.stats().flushes_join == 1
+
+
+def test_batch_exception_propagates_through_ring(echo_app):
+    """A reply that resolves exceptionally must surface through the chained
+    per-call future exactly as it does on the unbatched backends."""
+    ex = _batch_exec(echo_app, batch_size=1000, flush_after=60.0)
+
+    def _call():
+        f = yield AsyncRpc("echo", "nope", None)  # no such method
+        val = yield Wait(f)
+        return val
+
+    ex.start()
+    try:
+        reply = Future()
+        ex.deliver(_call(), reply)
+        with pytest.raises(KeyError):
+            reply.wait(timeout=10)
+    finally:
+        ex.stop()
+
+
+def test_batch_scheduler_rejects_steal_group():
+    with pytest.raises(ValueError, match="owner-thread-only"):
+        FiberExecutor(None, "bad", n_workers=2, steal=True, batch=True)
+
+
+def test_batch_scheduler_amortizes_nested_fanout(echo_app):
+    """A two-level fan-out: every level's same-tick submissions share one
+    carrier, so total carriers ~= number of flushes, not number of calls."""
+    sched_calls = 6
+
+    def _mid(i):
+        futs = []
+        for j in range(2):
+            f = yield AsyncRpc("echo", "go", (i, j))
+            futs.append(f)
+        vals = yield WaitAll(futs)
+        return vals
+
+    def _top():
+        futs = []
+        for i in range(3):
+            f = yield SpawnLocal(_mid, (i,))
+            futs.append(f)
+        vals = yield WaitAll(futs)
+        return vals
+
+    ex = _batch_exec(echo_app, batch_size=1000, flush_after=60.0)
+    ex.start()
+    try:
+        reply = Future()
+        ex.deliver(_top(), reply)
+        assert reply.wait(timeout=10) == [[(i, 0), (i, 1)] for i in range(3)]
+    finally:
+        ex.stop()
+    st = ex.stats()
+    assert st.batched_calls == sched_calls
+    # 3 _mid fibers each join-flushed their 2-call ring... unless several
+    # rings coalesced in one tick; either way: strictly fewer carriers than
+    # batched async calls is the amortization being bought.
+    total_flushes = st.flushes_size + st.flushes_join + st.flushes_timeout
+    assert 1 <= total_flushes <= 3
+    assert st.ring_hwm == 2
+
+
+def test_batch_scheduler_direct_flush_counters():
+    """Unit-level: drive a BatchFiberScheduler without transport and watch
+    the ring counters (no App: AsyncRpc is not used here)."""
+    s = BatchFiberScheduler(app=None, name="unit", batch_size=2,
+                            flush_after=60.0)
+    assert s.batch_size == 2
+    assert s.flush_after == 60.0
+    # an empty flush is a no-op and counts nothing
+    s._flush("timeout")
+    assert (s.flushes_timeout, s.batched_calls, s.ring_hwm) == (0, 0, 0)
+
+
+def test_batch_stale_flush_timer_does_not_truncate_next_ring():
+    """Regression: a flush deadline armed by ring generation N must be a
+    no-op once N has size/join-flushed — otherwise every generation's
+    leftover timer prematurely flushes its successor and batch sizes
+    collapse under sustained load.  Scheduler not started: ring and timer
+    plumbing are driven directly."""
+    from repro.core.fiber import Fiber, _FLUSH
+
+    s = BatchFiberScheduler(app=None, name="gen", batch_size=10,
+                            flush_after=60.0)
+    fib = Fiber(iter(()))
+    s._interpret(fib, AsyncRpc("svc", "m", 1))   # gen-0 ring, timer armed
+    s._flush("size")                             # gen-0 flushed early
+    s._interpret(fib, AsyncRpc("svc", "m", 2))   # gen-1 ring
+    s._on_timer((_FLUSH, 0))                     # gen-0's stale deadline
+    assert len(s._ring) == 1, "stale timer flushed the successor ring"
+    assert s.flushes_timeout == 0
+    s._on_timer((_FLUSH, 1))                     # gen-1's own deadline
+    assert s._ring == []
+    assert s.flushes_timeout == 1
+    assert s.batched_calls == 2

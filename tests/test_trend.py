@@ -1,0 +1,233 @@
+"""benchmarks/trend.py unit tests — the CI trend gate's comparator.
+
+The acceptance contract: identical artifacts pass, a synthetic 2x-slower
+cell fails regardless of how noisy its trials claim to be, dips inside the
+paired-trial noise band only warn, and un-diffable baselines (schema drift,
+pre-records artifacts) pass vacuously instead of blocking CI.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from benchmarks import trend
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _artifact(values, schema=trend.SCHEMA_VERSION, trials=None):
+    """values: {'app/backend': rps}; trials optionally overrides per key."""
+    records = []
+    for key, v in values.items():
+        app, backend = key.split("/")
+        records.append({
+            "key": key, "app": app, "backend": backend,
+            "metric": "achieved_rps", "unit": "rps", "value": v,
+            "trials": (trials or {}).get(key, [v, v]), "errors": 0,
+        })
+    return {
+        "schema_version": schema,
+        "apps": sorted({k.split("/")[0] for k in values}),
+        "records": records,
+    }
+
+
+BASE = {"socialnetwork/thread": 290.0, "socialnetwork/fiber": 290.0,
+        "mediaservice/event-loop": 285.0}
+
+
+def test_identical_artifacts_pass_clean():
+    report = trend.compare(_artifact(BASE), _artifact(BASE))
+    assert report["comparable"]
+    assert report["regressions"] == []
+    assert report["warnings"] == []
+    assert all(r["status"] == "ok" for r in report["rows"])
+
+
+def test_synthetic_2x_slower_cell_fails():
+    """The acceptance criterion: halving one cell's throughput must gate."""
+    cur = dict(BASE)
+    cur["socialnetwork/fiber"] = BASE["socialnetwork/fiber"] / 2
+    report = trend.compare(_artifact(cur), _artifact(BASE))
+    assert len(report["regressions"]) == 1
+    assert "socialnetwork/fiber" in report["regressions"][0]
+    (row,) = [r for r in report["rows"] if r["key"] == "socialnetwork/fiber"]
+    assert row["status"] == "regression"
+    assert row["ratio"] == pytest.approx(0.5)
+
+
+def test_dip_inside_noise_band_only_warns():
+    cur = dict(BASE)
+    cur["socialnetwork/fiber"] = BASE["socialnetwork/fiber"] * 0.8
+    report = trend.compare(_artifact(cur), _artifact(BASE))
+    assert report["regressions"] == []
+    assert len(report["warnings"]) == 1
+    (row,) = [r for r in report["rows"] if r["key"] == "socialnetwork/fiber"]
+    assert row["status"] == "warn"
+
+
+def test_band_widens_with_observed_trial_spread():
+    """A cell whose repeated trials disagree by 30% in *both* runs earns a
+    wider band (capped), so a 0.55 ratio that would fail a quiet cell passes
+    a noisy one as a warning."""
+    key = "socialnetwork/thread"
+    noisy = {key: [290.0, 203.0]}  # 30% relative spread
+    base = _artifact(BASE, trials=noisy)
+    cur_vals = dict(BASE)
+    cur_vals[key] = BASE[key] * 0.56  # below quiet band, above capped band
+    cur = _artifact(cur_vals, trials={key: [cur_vals[key],
+                                            cur_vals[key] * 0.7]})
+    report = trend.compare(cur, base)
+    (row,) = [r for r in report["rows"] if r["key"] == key]
+    assert row["band"] == trend.MAX_BAND  # spread sum clipped at the cap
+    assert row["status"] == "warn"
+
+
+def test_cap_means_2x_always_fails_even_with_wild_trials():
+    """MAX_BAND < 0.5: no amount of claimed noise lets a halving through."""
+    key = "socialnetwork/fiber"
+    wild = {key: [290.0, 1.0]}  # ~100% spread in both runs
+    cur_vals = dict(BASE)
+    cur_vals[key] = BASE[key] / 2
+    report = trend.compare(_artifact(cur_vals, trials=wild),
+                           _artifact(BASE, trials=wild))
+    assert len(report["regressions"]) == 1
+
+
+def test_improvements_never_flag():
+    cur = {k: v * 3 for k, v in BASE.items()}
+    report = trend.compare(_artifact(cur), _artifact(BASE))
+    assert report["regressions"] == [] and report["warnings"] == []
+
+
+def test_new_cell_is_informational():
+    cur = dict(BASE)
+    cur["socialnetwork/fiber-batch"] = 300.0
+    report = trend.compare(_artifact(cur), _artifact(BASE))
+    assert report["regressions"] == []
+    (row,) = [r for r in report["rows"]
+              if r["key"] == "socialnetwork/fiber-batch"]
+    assert row["status"] == "new"
+
+
+def test_cell_missing_from_current_warns():
+    cur = dict(BASE)
+    cur.pop("socialnetwork/fiber")
+    report = trend.compare(_artifact(cur), _artifact(BASE))
+    assert report["regressions"] == []
+    assert any("missing from current" in w for w in report["warnings"])
+
+
+def test_legacy_baseline_passes_vacuously():
+    """First run after a schema bump: the previous artifact cannot be
+    compared, and the gate must not block CI for that."""
+    legacy = {"backends": [], "cells": {}}  # pre-records artifact
+    report = trend.compare(_artifact(BASE), legacy)
+    assert not report["comparable"]
+    assert report["regressions"] == []
+    assert any("not comparable" in n for n in report["notes"])
+
+
+def test_malformed_current_is_a_usage_error():
+    with pytest.raises(trend.TrendError):
+        trend.compare({"schema_version": 1}, _artifact(BASE))
+
+
+def test_rel_spread_and_band_edges():
+    assert trend.rel_spread(None) == 0.0
+    assert trend.rel_spread([100.0]) == 0.0
+    assert trend.rel_spread([100.0, 50.0]) == pytest.approx(0.5)
+    assert trend.rel_spread([0.0, 0.0]) == 0.0  # degenerate, not a crash
+    quiet = {"trials": [100.0, 100.0]}
+    assert trend.noise_band(quiet, quiet) == trend.NOISE_FLOOR
+
+
+def test_render_markdown_mentions_every_cell_and_verdict():
+    cur = dict(BASE)
+    cur["socialnetwork/fiber"] = BASE["socialnetwork/fiber"] / 2
+    report = trend.compare(_artifact(cur), _artifact(BASE))
+    md = trend.render_markdown(report)
+    for key in cur:
+        assert key in md
+    assert "regression" in md
+    assert "| cell |" in md
+
+
+def test_cli_end_to_end(tmp_path):
+    """The exact invocation CI makes, against real files, both verdicts."""
+    cur_ok = tmp_path / "cur.json"
+    base = tmp_path / "base.json"
+    cur_bad = tmp_path / "bad.json"
+    md = tmp_path / "trend.md"
+    base.write_text(json.dumps(_artifact(BASE)))
+    cur_ok.write_text(json.dumps(_artifact(BASE)))
+    slow = dict(BASE)
+    slow["socialnetwork/fiber"] = BASE["socialnetwork/fiber"] / 2
+    cur_bad.write_text(json.dumps(_artifact(slow)))
+
+    script = str(REPO / "benchmarks" / "trend.py")
+    ok = subprocess.run([sys.executable, script, str(cur_ok), str(base),
+                         "--md", str(md)], capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stderr
+    assert md.exists() and "No regressions" in md.read_text()
+
+    bad = subprocess.run([sys.executable, script, str(cur_bad), str(base)],
+                         capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "REGRESSION" in bad.stderr
+
+
+def test_cli_multi_baseline_gates_on_worst(tmp_path):
+    """CI passes the previous run AND the committed baseline: a current run
+    that matches a freshly ratcheted-down previous run must still fail
+    against the stricter committed baseline (and a duplicated path — the
+    fallback case — is deduped, not double-reported)."""
+    committed = tmp_path / "committed.json"
+    prev = tmp_path / "prev.json"
+    cur = tmp_path / "cur.json"
+    md = tmp_path / "trend.md"
+    committed.write_text(json.dumps(_artifact(BASE)))
+    ratcheted = {k: v / 2 for k, v in BASE.items()}  # drifted down over runs
+    prev.write_text(json.dumps(_artifact(ratcheted)))
+    cur.write_text(json.dumps(_artifact(ratcheted)))  # flat vs prev
+
+    script = str(REPO / "benchmarks" / "trend.py")
+    out = subprocess.run([sys.executable, script, str(cur), str(prev),
+                          str(committed), "--md", str(md)],
+                         capture_output=True, text=True)
+    assert out.returncode == 1  # prev-run diff is clean; committed catches it
+    assert "committed.json" in out.stderr
+
+    # duplicated baseline path (prev-run lookup fell back to committed)
+    dup = subprocess.run([sys.executable, script, str(cur), str(prev),
+                          str(prev)], capture_output=True, text=True)
+    assert dup.returncode == 0
+    assert dup.stdout.count("cells compared") == 1
+
+
+def test_update_baseline_rejects_partial_app_matrix():
+    """run.py must refuse to rewrite the committed baseline from an --app
+    subset: the omitted apps' cells would lose their baseline records and
+    silently stop gating."""
+    from benchmarks import run as bench_run
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main(["--smoke", "--app", "socialnetwork",
+                        "--update-baseline"])
+    assert exc.value.code == 2  # argparse usage error, nothing ran
+
+
+def test_committed_baseline_is_current_schema():
+    """The fallback artifact CI ships with must itself be diffable."""
+    path = REPO / "launch_results" / "baseline_smoke.json"
+    baseline = json.loads(path.read_text())
+    assert baseline["schema_version"] == trend.SCHEMA_VERSION
+    assert baseline["records"], "committed baseline has no records"
+    keys = {r["key"] for r in baseline["records"]}
+    # full matrix: every registered app x backend cell
+    from repro.apps import APP_NAMES, BENCH_BACKENDS
+    assert keys == {f"{a}/{b}" for a in APP_NAMES for b in BENCH_BACKENDS}
+    # self-diff passes trivially
+    report = trend.compare(baseline, baseline)
+    assert report["regressions"] == []
