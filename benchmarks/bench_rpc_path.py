@@ -1,0 +1,112 @@
+"""Microbenchmark: per-RPC cost of the zero-handoff fast path.
+
+Isolates the cost of ONE synchronous RPC (``AsyncRpc`` + ``Wait``) between
+two services, with no service-time model attached — the pure dispatch
+constant the paper's 6x fiber win comes from shrinking.  Per backend it
+reports ns/call for the default configuration (fast path on for the
+cooperative backends) and, for every cooperative backend, a second
+``+noinline`` row with ``App.inline_budget = 0`` — the PR 3 carrier path —
+so the fast-path win is quoted against the repo's own previous design, not
+just against threads.
+
+CSV rows (``name,us_per_call,derived``):
+
+    rpc_path/fiber,1.85,ns=1850 inline=20480 spawns=0
+    rpc_path/fiber+noinline,31.40,ns=31398 inline=0 spawns=20480
+    rpc_path/fiber_fastpath_speedup,16.97,x_vs_noinline
+
+The ``*_fastpath_speedup`` rows are the acceptance metric for PR 4:
+inlined cooperative calls must come in >= 2x cheaper than the same
+backend's carrier path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from repro.core import (App, AsyncRpc, BACKEND_NAMES, ServiceSpec, Wait)
+
+# backends whose AsyncRpc path the fast path accelerates.  Thread-family
+# backends keep the full carrier path by design; fiber-batch is excluded
+# because its submission ring intercepts AsyncRpc before the inline path,
+# so an inline-on/off comparison there measures nothing but noise.
+INLINE_BACKENDS = ("fiber", "fiber-steal", "event-loop")
+
+
+def _leaf(svc, payload):
+    return payload
+    yield  # pragma: no cover - marks this as a generator
+
+
+def _chain(svc, payload):
+    """The measured loop: `payload` back-to-back synchronous RPCs."""
+    acc = 0
+    for i in range(payload):
+        f = yield AsyncRpc("leaf", "echo", i)
+        acc += yield Wait(f)
+    return acc
+
+
+def _build(backend: str, inline: bool) -> App:
+    app = App(backend=backend)
+    if not inline:
+        app.inline_budget = 0  # PR 3 carrier path
+    app.add_service(ServiceSpec("leaf", {"echo": _leaf}, n_workers=1))
+    app.add_service(ServiceSpec("driver", {"run": _chain}, n_workers=1))
+    return app
+
+
+def measure_rpc_cost(backend: str, *, inline: bool = True,
+                     calls_per_req: int = 64, iters: int = 20,
+                     warmup_iters: int = 3) -> Dict[str, float]:
+    """Wall time per synchronous leaf RPC issued from inside a handler."""
+    with _build(backend, inline) as app:
+        for _ in range(warmup_iters):
+            app.send("driver", "run", calls_per_req).wait(timeout=30)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            app.send("driver", "run", calls_per_req).wait(timeout=30)
+        dt = time.perf_counter() - t0
+        stats = app.backend_stats()
+    return {
+        "ns_per_call": dt / (iters * calls_per_req) * 1e9,
+        "inline_calls": stats.inline_calls,
+        "spawns": stats.spawns,
+        "fast_futures": stats.fast_futures,
+        "slow_futures": stats.slow_futures,
+    }
+
+
+def run(quick: bool = False,
+        backends: Optional[List[str]] = None) -> List[str]:
+    iters = 6 if quick else 20
+    rows: List[str] = []
+    res: Dict[str, Dict[str, float]] = {}
+    backends = list(backends) if backends else list(BACKEND_NAMES)
+    for backend in backends:
+        r = measure_rpc_cost(backend, iters=iters)
+        res[backend] = r
+        rows.append(f"rpc_path/{backend},{r['ns_per_call'] / 1e3:.2f},"
+                    f"ns={r['ns_per_call']:.0f}"
+                    f" inline={r['inline_calls']:.0f}"
+                    f" spawns={r['spawns']:.0f}")
+    for backend in backends:
+        if backend not in INLINE_BACKENDS:
+            continue
+        r = measure_rpc_cost(backend, inline=False, iters=iters)
+        res[backend + "+noinline"] = r
+        rows.append(f"rpc_path/{backend}+noinline,"
+                    f"{r['ns_per_call'] / 1e3:.2f},"
+                    f"ns={r['ns_per_call']:.0f}"
+                    f" inline={r['inline_calls']:.0f}"
+                    f" spawns={r['spawns']:.0f}")
+        speedup = r["ns_per_call"] / max(
+            res[backend]["ns_per_call"], 1e-9)
+        rows.append(f"rpc_path/{backend}_fastpath_speedup,"
+                    f"{speedup:.2f},x_vs_noinline")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

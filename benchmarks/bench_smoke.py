@@ -17,8 +17,17 @@ CI.  Per cell it checks:
    same-run noise measurement).
 
 The artifact carries a ``schema_version`` and a normalized ``records`` list
-(one record per app x backend cell) so cross-run comparison does not depend
-on the human-oriented ``cells`` layout staying stable.
+so cross-run comparison does not depend on the human-oriented ``cells``
+layout staying stable.  Each app x backend cell contributes TWO records —
+``achieved_rps`` (direction ``higher``, hard-gated) and ``p99_ms``
+(direction ``lower``, **warn-only**: a smoke-scale tail is ~a hundred
+samples and swings several-x run-over-run on identical code, so an
+out-of-band move is surfaced loudly in the trend output rather than
+failing the run; hard p99 gating lives in ``trend.py --from-csv`` over
+full-bench CSVs) — and the ``rpc_path`` microbenchmark (see
+``bench_rpc_path.py``) contributes one hard-gated ``ns_per_call`` record
+per backend (best-of-3 cheap trials, wide cross-hardware clamps), giving
+every future PR a per-RPC-cost trend line.
 
 It also runs the **work-stealing probe**: interleaved paired trials of
 ``fiber`` vs ``fiber-steal`` at ``n_workers=4`` on every app, stopping early
@@ -95,11 +104,17 @@ def _smoke_cell(app_name: str, backend: str,
                             seed=3 + i) for i in range(SMOKE_TRIALS)]
         stats = BackendStats.delta(stats_before, app.backend_stats())
     best = max(trials, key=lambda t: t.achieved_rps)
+    # p99 "best" is the *lowest* tail across trials, mirroring best-of rps:
+    # both ask "what did this cell do on its best run", and the trial spread
+    # still feeds the trend gate's noise band.
+    p99s = [t.p99 * 1e3 for t in trials if np.isfinite(t.p99)]
     return {
         "status": "ok",
         "results": results,
         "achieved_rps": round(best.achieved_rps, 1),
         "trial_rps": [round(t.achieved_rps, 1) for t in trials],
+        "p99_ms": round(min(p99s), 3) if p99s else None,
+        "trial_p99_ms": [round(p, 3) for p in p99s],
         "completed": sum(t.completed for t in trials),
         "errors": sum(t.errors for t in trials),
         "shed": sum(t.shed for t in trials),
@@ -150,6 +165,46 @@ def _steal_probe(app_name: str,
     }
 
 
+def _rpc_path_records(out: Dict[str, Any]) -> None:
+    """Per-RPC dispatch cost trend line: one cheap paired micro trial per
+    backend (see bench_rpc_path.py), recorded like any other cell so
+    benchmarks/trend.py inherits a ns/call regression gate.  Errors are
+    smoke failures — the microbenchmark exercising the fast path must not
+    rot silently."""
+    from .bench_rpc_path import measure_rpc_cost
+    out["rpc_path"] = {}
+    for backend in BENCH_BACKENDS:
+        try:
+            # best-of-3 (vs SMOKE_TRIALS=2 elsewhere): the micro is cheap
+            # (~tens of ms per trial) and min-of-3 stabilizes the
+            # machine-absolute ns figure considerably
+            trials = [round(measure_rpc_cost(
+                backend, iters=4, calls_per_req=32)["ns_per_call"], 1)
+                for _ in range(max(SMOKE_TRIALS, 3))]
+        except Exception as exc:  # noqa: BLE001 - cell isolation
+            out["rpc_path"][backend] = {"status": "error",
+                                        "error": repr(exc)}
+            out["failures"].append(f"rpc_path/{backend}: {exc!r}")
+            continue
+        best = min(trials)  # lower is better: best-of mirrors the rps cells
+        out["rpc_path"][backend] = {"status": "ok", "ns_per_call": best,
+                                    "trials": trials}
+        out["records"].append({
+            "key": f"rpc_path/{backend}",
+            "app": "_rpc_path",   # not a registry app: micro, app-agnostic
+            "backend": backend,
+            "metric": "ns_per_call",
+            "unit": "ns",
+            "direction": "lower",
+            "noise": "micro",     # machine-absolute: wide clamps in trend
+            "value": best,
+            "trials": trials,
+            "errors": 0,
+        })
+        print(f"rpc_path {backend}: ns/call={best} trials={trials}",
+              flush=True)
+
+
 def run_smoke(apps: Optional[Sequence[str]] = None,
               json_path: Optional[str] = None,
               steal_probe: bool = True,
@@ -194,17 +249,39 @@ def run_smoke(apps: Optional[Sequence[str]] = None,
             out["cells"][key] = {k: v for k, v in cell.items()
                                  if k != "results"}
             if cell.get("status") == "ok":
-                # normalized cross-run record: what benchmarks/trend.py diffs
+                # normalized cross-run records: what benchmarks/trend.py
+                # diffs.  "direction" tells the gate which way is worse.
                 out["records"].append({
                     "key": key,
                     "app": app_name,
                     "backend": backend,
                     "metric": "achieved_rps",
                     "unit": "rps",
+                    "direction": "higher",
                     "value": cell["achieved_rps"],
                     "trials": cell["trial_rps"],
                     "errors": cell["errors"],
                 })
+                if cell.get("p99_ms") is not None:
+                    # warn-only: a smoke-scale p99 is the tail of ~a hundred
+                    # samples and swings several-x run-over-run on identical
+                    # code, so it cannot support a hard gate — it is
+                    # recorded and loudly warned on (trend surfaces any
+                    # out-of-band move in the job log and trend-<app>.md);
+                    # hard p99 gating belongs to the full bench via
+                    # `trend.py --from-csv`, where tails have support.
+                    out["records"].append({
+                        "key": f"{key}/p99",
+                        "app": app_name,
+                        "backend": backend,
+                        "metric": "p99_ms",
+                        "unit": "ms",
+                        "direction": "lower",
+                        "gate": "warn-only",
+                        "value": cell["p99_ms"],
+                        "trials": cell["trial_p99_ms"],
+                        "errors": cell["errors"],
+                    })
             print(f"smoke {key}: {cell.get('status')} "
                   f"rps={cell.get('achieved_rps')} "
                   f"trials={cell.get('trial_rps')} "
@@ -238,6 +315,7 @@ def run_smoke(apps: Optional[Sequence[str]] = None,
                   f"fiber-steal={probe.get('fiber_steal_peak_rps')} "
                   f"ok={probe.get('ok')} "
                   f"(rounds={probe.get('rounds')})", flush=True)
+    _rpc_path_records(out)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)

@@ -4,10 +4,11 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
 Tables:
   1. spawn_overhead   — paper's "23% of time in clone/exit" analogue
-  2. peak_throughput  — paper Figure 1 (peak rps, app x workload x backend)
-  3. p99_latency      — paper Figure 2 (p99 vs offered rate)
-  4. serving          — beyond-paper: LLM serving engine, thread vs fiber
-  5. roofline         — dry-run roofline terms (reads launch/dryrun results)
+  2. rpc_path         — per-RPC dispatch cost, zero-handoff fast path on/off
+  3. peak_throughput  — paper Figure 1 (peak rps, app x workload x backend)
+  4. p99_latency      — paper Figure 2 (p99 vs offered rate)
+  5. serving          — beyond-paper: LLM serving engine, thread vs fiber
+  6. roofline         — dry-run roofline terms (reads launch/dryrun results)
 
 The microservice tables (2, 3) sweep every app in ``repro.apps.REGISTRY``
 crossed with every backend in ``repro.apps.BENCH_BACKENDS``; restrict with
@@ -107,9 +108,12 @@ def main(argv=None) -> None:
                            baseline_path=baseline_path))
 
     benches = []
-    from . import bench_spawn_overhead, bench_throughput, bench_latency
+    from . import (bench_latency, bench_rpc_path, bench_spawn_overhead,
+                   bench_throughput)
     benches.append(("spawn_overhead",
                     lambda quick: bench_spawn_overhead.run(quick=quick)))
+    benches.append(("rpc_path",
+                    lambda quick: bench_rpc_path.run(quick=quick)))
     benches.append(("peak_throughput",
                     lambda quick: bench_throughput.run(quick=quick,
                                                        apps=apps)))

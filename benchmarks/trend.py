@@ -33,10 +33,32 @@ noise, and the band is::
 * ``MAX_BAND`` caps the band so a genuinely unstable cell cannot talk its
   way out of gating — a 2x regression (ratio 0.5) always fails.
 
-A cell **fails** when ``current_best < baseline_best * (1 - band)``; a cell
-below baseline but inside the band only **warns**.  The exit code is
-non-zero iff some cell fails, which is what turns the CI bench-smoke job
-from a parity check into a regression trend gate.
+Records carry a ``direction`` (``higher`` is better — throughput — or
+``lower`` is better — p99 latency, ns/call).  A higher-better cell
+**fails** when ``current_best < baseline_best * (1 - band)``; a
+lower-better cell fails when ``current_best > baseline_best * (1 + band)``.
+Either way, a cell on the wrong side of baseline but inside the band only
+**warns**.  Lower-better cells use wider floor/cap constants
+(``LOWER_NOISE_FLOOR``/``LOWER_MAX_BAND``): tail latency on shared runners
+is far noisier than throughput at a fixed offered rate, and a cap of 1.0
+still guarantees that a worse-than-2x latency regression always fails.
+Machine-absolute ns/call micro cells (unit ``ns`` or ``noise: micro``) get
+the widest clamps (``MICRO_*``, fail beyond 2.5x): they do not transfer
+across hardware, while the regression they exist to catch — losing the
+inline fast path — is a ~40x move.  Records tagged ``gate: warn-only``
+(the smoke-scale p99 cells, whose ~hundred-sample tails swing several-x
+run-over-run on identical code) surface out-of-band moves as warnings but
+never fail the run.
+The exit code is non-zero iff some cell fails, which is what turns the CI
+bench-smoke job from a parity check into a regression trend gate.
+
+``--from-csv`` switches the inputs from smoke artifacts to full-benchmark
+CSVs (the ``name,us_per_call,derived`` rows ``benchmarks/run.py`` prints):
+``p99_latency``/``peak_throughput``/``rpc_path``/``spawn_overhead`` rows
+become lower-is-better records (the value column is microseconds for all
+of them) and are diffed with the same noise-band protocol — this is how a
+full-bench run on one machine is compared against a previous full-bench
+run, catching the tail-latency regressions the smoke rps gate misses.
 
 Stdlib-only on purpose: the CI bench lane installs nothing but numpy, and
 the script must also run standalone (``python benchmarks/trend.py``).
@@ -54,6 +76,22 @@ SCHEMA_VERSION = 2
 
 NOISE_FLOOR = 0.35
 MAX_BAND = 0.45
+# lower-is-better cells (latency tails) breathe much more than throughput
+# at a fixed offered rate on shared runners
+LOWER_NOISE_FLOOR = 0.50
+LOWER_MAX_BAND = 1.00
+# ns/call micro cells (unit "ns") are *absolute CPU-speed* numbers: unlike
+# rps-at-fixed-rate or sleep-dominated p99, they do not transfer across
+# machines, and the committed baseline may come from different hardware
+# than the CI runner.  Gate only beyond 2.5x — a genuine fast-path
+# regression (losing inline execution) is a 40x move, far outside it.
+MICRO_NOISE_FLOOR = 1.00
+MICRO_MAX_BAND = 1.50
+
+# full-bench CSV prefixes ingested by --from-csv; ratio rows (derived "x",
+# "x_vs_noinline") and error rows are skipped
+_CSV_PREFIXES = ("p99_latency/", "peak_throughput/", "rpc_path/",
+                 "spawn_overhead/")
 
 
 class TrendError(ValueError):
@@ -123,22 +161,47 @@ def compare(current: Dict[str, Any], baseline: Dict[str, Any], *,
                                    "current": cur["value"]})
             report["notes"].append(f"{key}: new cell (no baseline)")
             continue
-        band = noise_band(cur, base, floor=floor)
+        direction = cur.get("direction", "higher")
+        unit = cur.get("unit", "rps")
+        micro = cur.get("noise") == "micro" or unit == "ns"
+        if direction == "lower":
+            lo, cap = ((MICRO_NOISE_FLOOR, MICRO_MAX_BAND) if micro
+                       else (LOWER_NOISE_FLOOR, LOWER_MAX_BAND))
+            band = noise_band(cur, base, floor=max(floor, lo), cap=cap)
+        else:
+            band = noise_band(cur, base, floor=floor)
         base_v = float(base["value"])
         cur_v = float(cur["value"])
         ratio = cur_v / base_v if base_v > 0 else float("inf")
+        if direction == "lower":
+            regressed = base_v > 0 and cur_v > base_v * (1.0 + band)
+            worse = cur_v > base_v
+            why = f"ratio {ratio:.2f} > 1 + band {band:.2f}"
+        else:
+            regressed = ratio < 1.0 - band
+            worse = ratio < 1.0
+            why = f"ratio {ratio:.2f} < 1 - band {band:.2f}"
         row = {"key": key, "status": "ok", "current": cur_v,
                "baseline": base_v, "ratio": round(ratio, 3),
-               "band": round(band, 3)}
-        if ratio < 1.0 - band:
-            row["status"] = "regression"
-            report["regressions"].append(
-                f"{key}: {cur_v:.1f} rps vs baseline {base_v:.1f} rps "
-                f"(ratio {ratio:.2f} < 1 - band {band:.2f})")
-        elif ratio < 1.0:
+               "band": round(band, 3), "direction": direction}
+        if regressed and cur.get("gate") == "warn-only":
+            # cells whose metric cannot support a hard cross-run gate
+            # (smoke-scale p99: ~hundred-sample tails swing several-x
+            # run-over-run even on identical code) are surfaced loudly
+            # but never fail the run
             row["status"] = "warn"
             report["warnings"].append(
-                f"{key}: {cur_v:.1f} rps vs baseline {base_v:.1f} rps "
+                f"{key}: {cur_v:.1f} {unit} vs baseline {base_v:.1f} {unit} "
+                f"({why}; warn-only cell)")
+        elif regressed:
+            row["status"] = "regression"
+            report["regressions"].append(
+                f"{key}: {cur_v:.1f} {unit} vs baseline {base_v:.1f} {unit} "
+                f"({why})")
+        elif worse:
+            row["status"] = "warn"
+            report["warnings"].append(
+                f"{key}: {cur_v:.1f} {unit} vs baseline {base_v:.1f} {unit} "
                 f"(ratio {ratio:.2f}, inside noise band {band:.2f})")
         report["rows"].append(row)
 
@@ -152,6 +215,66 @@ def compare(current: Dict[str, Any], baseline: Dict[str, Any], *,
     return report
 
 
+def artifact_from_csv(path: str) -> Dict[str, Any]:
+    """Turn a full-benchmark CSV (``name,us_per_call,derived`` rows from
+    ``benchmarks/run.py``) into a records artifact :func:`compare` accepts.
+
+    Only the measurement rows under ``_CSV_PREFIXES`` are ingested — the
+    value column is microseconds for all of them, so every record is
+    direction ``lower``.  Ratio rows (``derived`` of ``x...``), error rows
+    and the header are skipped.  CSV rows carry no repeated trials, so the
+    per-cell spread is 0 and the lower-better noise floor does the gating;
+    the machine-absolute micro rows (``rpc_path``/``spawn_overhead``) are
+    tagged ``noise: micro`` so they get the wide cross-hardware clamps.
+
+    ``apps`` is populated from the ingested rows (per-app segment for the
+    app-parameterized benches, a ``_<bench>`` pseudo-app for the micros) so
+    :func:`compare`'s missing-cell warning fires when a bench that produced
+    a baseline row errors out of the current run.
+    """
+    records: List[Dict[str, Any]] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#") \
+                    or line.startswith("name,"):
+                continue
+            parts = line.split(",")
+            if len(parts) < 2:
+                continue
+            name, value = parts[0], parts[1]
+            derived = parts[2] if len(parts) > 2 else ""
+            if not name.startswith(_CSV_PREFIXES):
+                continue
+            if "/ERROR" in name or derived == "x" \
+                    or derived.startswith("x_vs_"):
+                continue
+            try:
+                val = float(value)
+            except ValueError:
+                continue
+            segments = name.split("/")
+            if name.startswith(("p99_latency/", "peak_throughput/")) \
+                    and len(segments) >= 3:
+                app = segments[1]        # p99_latency/<app>/<workload>/...
+            else:
+                app = "_" + segments[0]  # micro rows: pseudo-app per bench
+            rec = {
+                "key": name,
+                "app": app,
+                "metric": "us_per_call",
+                "unit": "us",
+                "direction": "lower",
+                "value": val,
+                "trials": [val],
+            }
+            if name.startswith(("rpc_path/", "spawn_overhead/")):
+                rec["noise"] = "micro"   # machine-absolute: wide clamps
+            records.append(rec)
+    return {"schema_version": SCHEMA_VERSION, "records": records,
+            "apps": sorted({r["app"] for r in records}), "from_csv": path}
+
+
 def render_markdown(report: Dict[str, Any], *, current_name: str = "current",
                     baseline_name: str = "baseline") -> str:
     """Human summary for the CI artifact (``trend-<app>.md``)."""
@@ -159,12 +282,14 @@ def render_markdown(report: Dict[str, Any], *, current_name: str = "current",
              ""]
     badge = {"ok": "✅", "warn": "⚠️", "regression": "❌", "new": "🆕"}
     if report["rows"]:
-        lines += ["| cell | baseline rps | current rps | ratio | band | "
+        lines += ["| cell | dir | baseline | current | ratio | band | "
                   "status |",
-                  "|---|---:|---:|---:|---:|---|"]
+                  "|---|---|---:|---:|---:|---:|---|"]
         for row in report["rows"]:
+            arrow = "↓" if row.get("direction") == "lower" else "↑"
             lines.append(
                 f"| {row['key']} "
+                f"| {arrow} "
                 f"| {row.get('baseline', float('nan')):.1f} "
                 f"| {row['current']:.1f} "
                 f"| {row.get('ratio', float('nan')):.2f} "
@@ -193,10 +318,18 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="write a markdown summary here")
     ap.add_argument("--noise-floor", type=float, default=NOISE_FLOOR,
                     help=f"minimum relative band (default {NOISE_FLOOR})")
+    ap.add_argument("--from-csv", action="store_true",
+                    help="inputs are full-benchmark CSVs "
+                         "(name,us_per_call,derived) instead of smoke "
+                         "artifacts; p99/peak/rpc-path/spawn rows are "
+                         "diffed lower-is-better")
     args = ap.parse_args(argv)
 
-    with open(args.current) as f:
-        current = json.load(f)
+    if args.from_csv:
+        current = artifact_from_csv(args.current)
+    else:
+        with open(args.current) as f:
+            current = json.load(f)
     # a path given twice (prev-run lookup fell back to the committed file)
     # is compared once
     seen = set()
@@ -206,8 +339,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     failed = False
     md_parts: List[str] = []
     for bpath in baselines:
-        with open(bpath) as f:
-            baseline = json.load(f)
+        if args.from_csv:
+            baseline = artifact_from_csv(bpath)
+        else:
+            with open(bpath) as f:
+                baseline = json.load(f)
         try:
             report = compare(current, baseline, floor=args.noise_floor)
         except TrendError as exc:

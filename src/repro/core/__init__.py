@@ -7,14 +7,14 @@ execution backend per service.
 from .effects import (AsyncRpc, Compute, Offload, Sleep, SpawnLocal, Wait,
                       WaitAll, sync_rpc)
 from .executor import BACKEND_FACTORIES, BACKEND_NAMES, make_executor
-from .future import Future
+from .future import CompletedFuture, Future
 from .loadgen import (RequestFactory, find_peak_throughput, latency_sweep,
                       run_trial, warmup)
 from .metrics import BackendStats, LatencyRecorder, PeakResult, TrialResult
 from .service import App, Service, ServiceSpec
 
 __all__ = [
-    "App", "Service", "ServiceSpec", "Future",
+    "App", "Service", "ServiceSpec", "Future", "CompletedFuture",
     "AsyncRpc", "Wait", "WaitAll", "Sleep", "Compute", "Offload",
     "SpawnLocal", "sync_rpc",
     "BACKEND_FACTORIES", "BACKEND_NAMES", "make_executor",

@@ -29,6 +29,16 @@ The trade is the classic one: zero dispatch overhead and perfect locality,
 but zero intra-service parallelism — ``Compute`` effects serialize on the
 loop.  The paper's wait-dominated DeathStarBench service models are exactly
 the regime where that trade can win.
+
+Note on exclusivity: loop serialization is a *scheduling* property, not a
+mutual-exclusion guarantee handlers may rely on.  With the zero-handoff
+fast path (PR 4), a co-scheduled cooperative caller may run this service's
+handlers inline on *its* thread, concurrently with the loop — exactly as
+handlers of any service already run on multiple dispatcher threads or
+schedulers under the ``thread``/``fiber`` backends with ``n_workers > 1``.
+Shared ``Service.state`` must go through ``Service.lock`` on every backend;
+``App(inline_budget=0)`` restores strict loop-exclusivity if an experiment
+needs it.
 """
 from __future__ import annotations
 
@@ -40,7 +50,7 @@ from typing import Any, Generator, List, Optional, Tuple
 from .calibrate import burn
 from .effects import (AsyncRpc, Compute, Offload, Sleep, SpawnLocal, Wait,
                       WaitAll)
-from .future import Future
+from .future import CompletedFuture, Future
 from .metrics import BackendStats
 from .timers import TimerWheel
 
@@ -56,6 +66,10 @@ class EventLoopExecutor:
     backend exists to delete.
     """
 
+    # accepts zero-handoff inline execution of its handlers on a
+    # co-scheduled cooperative caller (see Service.inline_handler)
+    cooperative = True
+
     def __init__(self, app: Any, name: str, n_workers: int = 1) -> None:
         self.app = app
         self.name = name
@@ -69,6 +83,12 @@ class EventLoopExecutor:
         self.spawns = 0            # async-call continuations created
         self.switches = 0          # continuations resumed by the loop
         self.queue_depth_hwm = 0   # run queue + inbox high-water
+        # --- zero-handoff fast path (owner/loop thread only) -------------
+        self._inline_depth = 0
+        self.inline_calls = 0
+        self.inline_depth_hwm = 0
+        self.fast_futures = 0
+        self.slow_futures = 0
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> None:
@@ -144,9 +164,11 @@ class EventLoopExecutor:
                     eff = gen.send(send_value)
             except StopIteration as stop:
                 fut.set_result(stop.value)
+                self._classify(fut)
                 return
             except BaseException as exc:
                 fut.set_exception(exc)
+                self._classify(fut)
                 return
 
             if isinstance(eff, (Wait, WaitAll)):
@@ -176,8 +198,25 @@ class EventLoopExecutor:
             except BaseException as exc:
                 throw_exc = exc
 
+    def _classify(self, fut: Future) -> None:
+        """fast = resolved without a kernel Condition ever materializing."""
+        if fut.blocking_waited():
+            self.slow_futures += 1
+        else:
+            self.fast_futures += 1
+
     def _interpret(self, eff: Any) -> Any:
         if isinstance(eff, AsyncRpc):
+            app = self.app
+            if app is not None and app.net_latency == 0 \
+                    and app.inline_budget > 0:
+                # zero-handoff fast path: inline the cooperative callee,
+                # else elide the carrier (the reply future IS the result —
+                # see FiberScheduler._interpret for the two tiers)
+                fut = self._try_inline(eff, app)
+                if fut is not None:
+                    return fut
+                return app.send(eff.dest, eff.method, eff.payload)
             fut = Future()
             self.spawns += 1
             self._push_local(
@@ -198,6 +237,79 @@ class EventLoopExecutor:
             return fut
 
         raise TypeError(f"Unknown effect: {eff!r}")
+
+    # ------------------------------------------------ zero-handoff fast path
+    def _try_inline(self, eff: Any, app: Any) -> Optional[Future]:
+        """Same-carrier call inlining on the loop thread; see
+        FiberScheduler._try_inline for the contract."""
+        if self._inline_depth >= app.inline_budget:
+            return None
+        svc = app.services.get(eff.dest)
+        if svc is None:
+            return None
+        handler = svc.inline_handler(eff.method)
+        if handler is None:
+            return None
+        svc.count_request()
+        self.inline_calls += 1
+        self._inline_depth += 1
+        if self._inline_depth > self.inline_depth_hwm:
+            self.inline_depth_hwm = self._inline_depth
+        try:
+            return self._drive_inline(handler(svc, eff.payload))
+        finally:
+            self._inline_depth -= 1
+
+    def _drive_inline(self, gen: Generator) -> Future:
+        """Run an inlined callee up to its first suspension point: a
+        CompletedFuture when it never suspends, else the remainder parks as
+        an ordinary continuation of this loop."""
+        send_value: Any = None
+        throw_exc: Optional[BaseException] = None
+        while True:
+            try:
+                if throw_exc is not None:
+                    exc, throw_exc = throw_exc, None
+                    eff = gen.throw(exc)
+                else:
+                    eff = gen.send(send_value)
+            except StopIteration as stop:
+                self.fast_futures += 1
+                return CompletedFuture(stop.value)
+            except BaseException as exc:
+                self.fast_futures += 1
+                return CompletedFuture(exc=exc)
+
+            if isinstance(eff, (Wait, WaitAll)):
+                waits = ([eff.future] if isinstance(eff, Wait)
+                         else list(eff.futures))
+                if all(w.done for w in waits):
+                    try:
+                        send_value = (waits[0].result()
+                                      if isinstance(eff, Wait)
+                                      else [w.result() for w in waits])
+                        throw_exc = None
+                    except BaseException as exc:
+                        send_value, throw_exc = None, exc
+                    continue
+                fut = Future()
+                self.spawns += 1  # the remainder becomes a continuation,
+                self._park(gen, fut, eff, waits)  # as a fiber fallback does
+                return fut
+
+            if isinstance(eff, Sleep):
+                fut = Future()
+                self.spawns += 1
+                self._timers.push(
+                    time.monotonic() + max(eff.seconds, 0.0),
+                    (gen, fut, ("send", None)))
+                return fut
+
+            try:
+                send_value = self._interpret(eff)
+                throw_exc = None
+            except BaseException as exc:
+                throw_exc = exc
 
     # -------------------------------------------------------------- parking
     def _park(self, gen: Generator, fut: Future, eff: Any,
@@ -233,4 +345,8 @@ class EventLoopExecutor:
     # ---------------------------------------------------------------- stats
     def stats(self) -> BackendStats:
         return BackendStats(spawns=self.spawns, switches=self.switches,
-                            queue_depth_hwm=self.queue_depth_hwm)
+                            queue_depth_hwm=self.queue_depth_hwm,
+                            inline_calls=self.inline_calls,
+                            inline_depth_hwm=self.inline_depth_hwm,
+                            fast_futures=self.fast_futures,
+                            slow_futures=self.slow_futures)

@@ -42,6 +42,16 @@ switching a service between backends is a one-word config change, mirroring
 the paper's ``std::async`` → ``boost::fiber::async`` search-and-replace.
 New backends register in ``BACKEND_FACTORIES`` and every harness (benchmarks,
 CI smoke matrix, parity tests) picks them up from there.
+
+On top of the carrier designs, the cooperative backends share a
+**zero-handoff fast path** (PR 4): when ``net_latency == 0`` an ``AsyncRpc``
+to a co-scheduled cooperative service runs the callee handler *inline* as a
+direct continuation of the caller up to its first suspension point (bounded
+by ``App.inline_budget``), returning a pre-resolved ``CompletedFuture`` when
+it never suspends; calls that cannot inline still skip the carrier spawn by
+returning the transport reply future directly (carrier elision).  Thread
+backends keep the full carrier path — their kernel dispatch cost is the
+baseline under study.  See ``fiber.FiberScheduler._try_inline``.
 """
 from __future__ import annotations
 
@@ -64,6 +74,12 @@ _SHUTDOWN = object()
 
 class Executor:
     """Common interface: deliver(gen, reply_future) + lifecycle."""
+
+    # Whether this executor's handlers may run inline on a co-scheduled
+    # cooperative caller (the zero-handoff fast path).  Thread-family
+    # executors keep False: their kernel-level dispatch cost is the design
+    # point under study, so bypassing it would falsify the baseline.
+    cooperative = False
 
     def deliver(self, gen: Generator, reply: Future) -> None:
         raise NotImplementedError
@@ -93,6 +109,8 @@ class ThreadExecutor(Executor):
         self._threads: List[threading.Thread] = []
         self.spawns = 0           # kernel threads created for async calls
         self.spawn_seconds = 0.0  # wall time spent creating threads
+        self.fast_futures = 0     # completions resolved with no Condition
+        self.slow_futures = 0     # completions some waiter blocked on
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------ lifecycle
@@ -135,9 +153,11 @@ class ThreadExecutor(Executor):
                     eff = gen.send(send_value)
             except StopIteration as stop:
                 reply.set_result(stop.value)
+                self._classify(reply)
                 return
             except BaseException as exc:
                 reply.set_exception(exc)
+                self._classify(reply)
                 return
 
             try:
@@ -145,6 +165,16 @@ class ThreadExecutor(Executor):
                 throw_exc = None
             except BaseException as exc:
                 throw_exc = exc
+
+    def _classify(self, fut: Future) -> None:
+        """fast/slow future accounting (see BackendStats): on the thread
+        backends nearly every join is a blocking ``wait``, which is exactly
+        the kernel-object contrast the fast-path counters exist to show."""
+        with self._lock:
+            if fut.blocking_waited():
+                self.slow_futures += 1
+            else:
+                self.fast_futures += 1
 
     def _interpret(self, eff: Any) -> Any:
         if isinstance(eff, AsyncRpc):
@@ -192,7 +222,9 @@ class ThreadExecutor(Executor):
     def stats(self) -> BackendStats:
         with self._lock:
             return BackendStats(spawns=self.spawns,
-                                spawn_seconds=self.spawn_seconds)
+                                spawn_seconds=self.spawn_seconds,
+                                fast_futures=self.fast_futures,
+                                slow_futures=self.slow_futures)
 
 
 class PooledThreadExecutor(ThreadExecutor):
@@ -350,9 +382,11 @@ class PooledThreadExecutor(ThreadExecutor):
                     eff = gen.send(send_value)
             except StopIteration as stop:
                 fut.set_result(stop.value)
+                self._classify(fut)
                 return
             except BaseException as exc:
                 fut.set_exception(exc)
+                self._classify(fut)
                 return
             if isinstance(eff, (Wait, WaitAll)):
                 waits = ([eff.future] if isinstance(eff, Wait)
@@ -460,7 +494,9 @@ class PooledThreadExecutor(ThreadExecutor):
                                 spawn_seconds=self.spawn_seconds,
                                 pool_stalls=self.pool_stalls,
                                 stall_seconds=self.stall_seconds,
-                                queue_depth_hwm=self.queue_depth_hwm)
+                                queue_depth_hwm=self.queue_depth_hwm,
+                                fast_futures=self.fast_futures,
+                                slow_futures=self.slow_futures)
 
 
 class FiberExecutor(Executor):
@@ -473,6 +509,8 @@ class FiberExecutor(Executor):
     calls as one batch carrier (io_uring-style; see ``fiber.py``).  Batch
     rings are owner-thread-only, so ``batch`` excludes ``steal``.
     """
+
+    cooperative = True  # handlers may be inlined by a cooperative caller
 
     def __init__(self, app: Any, name: str, n_workers: int = 1, *,
                  steal: bool = False, batch: bool = False,
@@ -544,7 +582,13 @@ class FiberExecutor(Executor):
                             flushes_join=agg("flushes_join"),
                             flushes_timeout=agg("flushes_timeout"),
                             ring_hwm=max((getattr(s, "ring_hwm", 0)
-                                          for s in self._scheds), default=0))
+                                          for s in self._scheds), default=0),
+                            inline_calls=agg("inline_calls"),
+                            inline_depth_hwm=max(
+                                (s.inline_depth_hwm for s in self._scheds),
+                                default=0),
+                            fast_futures=agg("fast_futures"),
+                            slow_futures=agg("slow_futures"))
 
 
 # --------------------------------------------------------------- registry

@@ -47,7 +47,7 @@ from typing import Any, Generator, List, Optional, Tuple
 
 from .calibrate import burn
 from .effects import AsyncRpc, Compute, Effect, Offload, Sleep, SpawnLocal, Wait, WaitAll
-from .future import Future
+from .future import CompletedFuture, Future
 from .timers import TimerWheel
 
 _RAISE = object()  # sentinel: send value is an exception to throw into the fiber
@@ -133,6 +133,14 @@ class FiberScheduler:
         self.fibers_spawned = 0
         self.switches = 0
         self.steals = 0
+        # --- zero-handoff fast path (see _try_inline) -------------------
+        # owner-thread-only: _interpret runs on whichever scheduler thread
+        # is driving the fiber, and each scheduler has its own counters.
+        self._inline_depth = 0
+        self.inline_calls = 0
+        self.inline_depth_hwm = 0
+        self.fast_futures = 0
+        self.slow_futures = 0
 
     # ------------------------------------------------------------ external
     def spawn_external(self, gen: Generator, future: Optional[Future] = None,
@@ -291,9 +299,11 @@ class FiberScheduler:
                     eff = fib.gen.send(send_value)
             except StopIteration as stop:
                 fib.future.set_result(stop.value)
+                self._classify(fib.future)
                 return
             except BaseException as exc:  # handler error -> propagate
                 fib.future.set_exception(exc)
+                self._classify(fib.future)
                 return
 
             send_value, parked = self._interpret(fib, eff)
@@ -303,6 +313,20 @@ class FiberScheduler:
     def _interpret(self, fib: Fiber, eff: Effect) -> Tuple[Any, bool]:
         """Returns (send_value, parked)."""
         if isinstance(eff, AsyncRpc):
+            app = self.app
+            if app is not None and app.net_latency == 0 \
+                    and app.inline_budget > 0:
+                # Zero-handoff fast path.  Tier 1: run the callee handler
+                # inline (no mailbox, no carrier, no handoff at all).
+                fut = self._try_inline(eff, app)
+                if fut is not None:
+                    return fut, False
+                # Tier 2, carrier elision: with no client-side hop to
+                # simulate, the carrier body is just send + Wait(reply) —
+                # the reply future *is* the carrier's result, so hand it to
+                # the caller directly instead of spawning a fiber whose only
+                # job is to forward it.
+                return app.send(eff.dest, eff.method, eff.payload), False
             # THE paper's operation: async call spawns a *fiber*, not a thread.
             carrier = Fiber(self.app.rpc_carrier(eff.dest, eff.method,
                                                  eff.payload),
@@ -355,6 +379,98 @@ class FiberScheduler:
             return sub.future, False
 
         raise TypeError(f"Unknown effect: {eff!r}")
+
+    def _classify(self, fut: Future) -> None:
+        """fast = resolved without a kernel Condition ever materializing."""
+        if fut.blocking_waited():
+            self.slow_futures += 1
+        else:
+            self.fast_futures += 1
+
+    # ------------------------------------------------ zero-handoff fast path
+    def _try_inline(self, eff: AsyncRpc, app: "Any") -> Optional[Future]:
+        """Same-carrier call inlining: if the callee service's executor is
+        cooperative and co-scheduled (same process, no simulated network
+        hop), run its handler right here as a direct continuation of the
+        calling fiber — skipping the reply-future handoff, the mailbox, the
+        carrier spawn and the park/wake round trip.  Returns the call's
+        future, or None when the call must take the slow path (budget
+        exhausted, unknown service/method, thread-family callee)."""
+        if self._inline_depth >= app.inline_budget:
+            return None
+        svc = app.services.get(eff.dest)
+        if svc is None:
+            return None
+        handler = svc.inline_handler(eff.method)
+        if handler is None:
+            return None
+        svc.count_request()
+        self.inline_calls += 1
+        self._inline_depth += 1
+        if self._inline_depth > self.inline_depth_hwm:
+            self.inline_depth_hwm = self._inline_depth
+        try:
+            return self._drive_inline(handler(svc, eff.payload))
+        finally:
+            self._inline_depth -= 1
+
+    def _drive_inline(self, gen: Generator) -> Future:
+        """Run an inlined callee handler up to its first suspension point.
+
+        Completion without suspending returns a pre-resolved
+        :class:`CompletedFuture` — the zero-object, zero-handoff case.  A
+        genuine suspension (unresolved join, timed wait) falls back to
+        wrapping the remainder in a :class:`Fiber` parked on *this*
+        scheduler, indistinguishable from a carrier that suspended."""
+        send_value: Any = None
+        while True:
+            try:
+                if isinstance(send_value, tuple) and len(send_value) == 2 \
+                        and send_value[0] is _RAISE:
+                    eff = gen.throw(send_value[1])
+                else:
+                    eff = gen.send(send_value)
+            except StopIteration as stop:
+                self.fast_futures += 1
+                return CompletedFuture(stop.value)
+            except BaseException as exc:
+                self.fast_futures += 1
+                return CompletedFuture(exc=exc)
+
+            if isinstance(eff, Wait):
+                # the hot sync_rpc sequence: the nested AsyncRpc just
+                # returned a CompletedFuture, so the join is already done —
+                # no Fiber, no callback, no park
+                fut: Future = eff.future
+                if fut.done:
+                    try:
+                        send_value = fut.result()
+                    except BaseException as exc:
+                        send_value = (_RAISE, exc)
+                    continue
+            elif isinstance(eff, WaitAll):
+                futs = list(eff.futures)
+                if all(f.done for f in futs):
+                    try:
+                        send_value = [f.result() for f in futs]
+                    except BaseException as exc:
+                        send_value = (_RAISE, exc)
+                    continue
+            if isinstance(eff, (Wait, WaitAll, Sleep)):
+                # first real suspension point: from here on the remainder is
+                # an ordinary fiber of this scheduler
+                fib = Fiber(gen)
+                self.fibers_spawned += 1
+                send_value, parked = self._interpret(fib, eff)
+                if parked:
+                    return fib.future
+                # resolved in the race window between our done-check and
+                # _interpret's — keep driving as a normal fiber
+                self._run_fiber(fib, send_value)
+                return fib.future
+            # non-parking effects (AsyncRpc, Compute, Offload, SpawnLocal)
+            # never touch the fiber argument
+            send_value, _ = self._interpret(None, eff)  # type: ignore[arg-type]
 
     def _resume_on(self, fut: Future, fib: Fiber) -> None:
         try:

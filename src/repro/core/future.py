@@ -1,21 +1,42 @@
-"""Backend-agnostic futures.
+"""Backend-agnostic futures with a lock-free fast path.
 
-A :class:`Future` is the join point between the two execution backends the
+A :class:`Future` is the join point between the execution backends the
 paper compares:
 
 * **threads** (DeathStarBench ``std::async`` default policy): a kernel thread
   blocks on :meth:`Future.wait` via a condition variable;
-* **fibers** (``boost::fiber::async``): a fiber registers a *callback* that
-  re-enqueues it on its scheduler's ready queue — no kernel involvement.
+* **fibers / event loops** (``boost::fiber::async``): a cooperative carrier
+  registers a *callback* that re-enqueues it on its scheduler's ready queue —
+  no kernel involvement.
 
 The same object supports both, so a request can traverse services running on
 different backends (the paper's "replace the affected services one by one"
 migration story).
+
+The zero-handoff fast path (PR 4) makes the cooperative side genuinely
+kernel-free: the ``threading.Condition`` is **lazy**, materialized only when
+the first *blocking* waiter shows up (:meth:`wait` / :meth:`wait_done`).
+Resolution publishes value-then-``_done``-flag — single attribute stores,
+atomic and ordered under the GIL — so ``set_result`` on the happy path is a
+couple of attribute writes and a callback drain, with no lock acquire and no
+kernel synchronization object ever allocated.  Futures follow a
+**single-writer** discipline (each is resolved by exactly one completion
+site); the double-resolve check is exact for a sequential double-set and
+best-effort under a racing one.
+
+:class:`CompletedFuture` is the degenerate case for inline calls: born
+resolved, it never allocates even the callback list.
 """
 from __future__ import annotations
 
 import threading
 from typing import Any, Callable, List, Optional
+
+# Guards only the one-time materialization of a future's Condition (two
+# blocking waiters racing to create it).  Shared module-wide because the
+# blocking-wait path is already paying a kernel sync; the cooperative fast
+# path never touches it.
+_COND_LOCK = threading.Lock()
 
 
 class FutureError(RuntimeError):
@@ -25,83 +46,132 @@ class FutureError(RuntimeError):
 class Future:
     """A write-once result slot with thread-safe blocking *and* callback waits."""
 
-    __slots__ = ("_cond", "_done", "_value", "_exc", "_callbacks")
+    __slots__ = ("_done", "_value", "_exc", "_callbacks", "_cond")
 
     def __init__(self) -> None:
-        self._cond = threading.Condition()
         self._done = False
         self._value: Any = None
         self._exc: Optional[BaseException] = None
         self._callbacks: List[Callable[["Future"], None]] = []
+        self._cond: Optional[threading.Condition] = None
 
     # ---------------------------------------------------------------- write
     def set_result(self, value: Any) -> None:
-        with self._cond:
-            if self._done:
-                raise FutureError("Future already resolved")
-            self._value = value
-            self._done = True
-            callbacks, self._callbacks = self._callbacks, []
-            self._cond.notify_all()
-        for cb in callbacks:
-            cb(self)
+        if self._done:
+            raise FutureError("Future already resolved")
+        self._value = value
+        self._done = True  # publish: GIL orders the value store before this
+        self._on_resolved()
 
     def set_exception(self, exc: BaseException) -> None:
-        with self._cond:
-            if self._done:
-                raise FutureError("Future already resolved")
-            self._exc = exc
-            self._done = True
-            callbacks, self._callbacks = self._callbacks, []
-            self._cond.notify_all()
-        for cb in callbacks:
+        if self._done:
+            raise FutureError("Future already resolved")
+        self._exc = exc
+        self._done = True
+        self._on_resolved()
+
+    def _on_resolved(self) -> None:
+        # `_done` was set *before* this read, so a waiter that materializes
+        # the Condition after we read None here will see `_done` already
+        # True in its wait_for predicate and never park — no lost wakeup.
+        cond = self._cond
+        if cond is not None:
+            with cond:
+                cond.notify_all()
+        self._drain_callbacks()
+
+    def _drain_callbacks(self) -> None:
+        # list.pop(0) is atomic under the GIL, so the resolver and a
+        # registrar that lost the append-vs-resolve race can both drain:
+        # each callback is popped (and therefore fired) exactly once, in
+        # registration order.
+        cbs = self._callbacks
+        while cbs:
+            try:
+                cb = cbs.pop(0)
+            except IndexError:
+                return
             cb(self)
 
     # ----------------------------------------------------------------- read
     @property
     def done(self) -> bool:
-        with self._cond:
-            return self._done
+        return self._done
+
+    def blocking_waited(self) -> bool:
+        """True iff some waiter materialized the kernel Condition — the
+        executors' ``fast_futures``/``slow_futures`` classification."""
+        return self._cond is not None
+
+    def _materialize_cond(self) -> threading.Condition:
+        cond = self._cond
+        if cond is None:
+            with _COND_LOCK:
+                cond = self._cond
+                if cond is None:
+                    cond = self._cond = threading.Condition()
+        return cond
 
     def wait(self, timeout: Optional[float] = None) -> Any:
         """Blocking get — the *thread* backend's join. Re-raises exceptions."""
-        with self._cond:
-            if not self._done:
-                ok = self._cond.wait_for(lambda: self._done, timeout=timeout)
-                if not ok:
+        if not self._done:
+            cond = self._materialize_cond()
+            with cond:
+                if not cond.wait_for(lambda: self._done, timeout=timeout):
                     raise TimeoutError("Future.wait timed out")
-            if self._exc is not None:
-                raise self._exc
-            return self._value
+        if self._exc is not None:
+            raise self._exc
+        return self._value
 
     def wait_done(self, timeout: Optional[float] = None) -> bool:
         """Block until resolved or timeout; returns done-ness and never
         (re-)raises the stored exception — for waiters that only need the
         completion *event* (e.g. a pool thread deciding whether it can stop
         work-helping), not the value."""
-        with self._cond:
-            return self._cond.wait_for(lambda: self._done, timeout=timeout)
+        if self._done:
+            return True
+        cond = self._materialize_cond()
+        with cond:
+            return cond.wait_for(lambda: self._done, timeout=timeout)
 
     def result(self) -> Any:
         """Non-blocking get; raises if not done."""
-        with self._cond:
-            if not self._done:
-                raise FutureError("Future not resolved yet")
-            if self._exc is not None:
-                raise self._exc
-            return self._value
+        if not self._done:
+            raise FutureError("Future not resolved yet")
+        if self._exc is not None:
+            raise self._exc
+        return self._value
 
     def add_done_callback(self, cb: Callable[["Future"], None]) -> None:
-        """The *fiber* backend's join: cb fires immediately if already done,
-        else exactly once on resolution (possibly from another thread)."""
-        run_now = False
-        with self._cond:
-            if self._done:
-                run_now = True
-            else:
-                self._callbacks.append(cb)
-        if run_now:
+        """The cooperative backends' join: cb fires immediately if already
+        done, else exactly once on resolution (possibly from another
+        thread)."""
+        if self._done:
             cb(self)
+            return
+        self._callbacks.append(cb)
+        if self._done:
+            # lost the append-vs-resolve race: the resolver may have drained
+            # before our append landed, so drain whatever is left ourselves
+            self._drain_callbacks()
+
+
+class CompletedFuture(Future):
+    """A future born resolved — the zero-handoff inline-call result.
+
+    Allocates neither a Condition nor a callback list; every accessor takes
+    the already-done fast path, so handing one to a caller costs a single
+    tiny object construction."""
+
+    __slots__ = ()
+
+    def __init__(self, value: Any = None,
+                 exc: Optional[BaseException] = None) -> None:
+        self._done = True
+        self._value = value
+        self._exc = exc
+        self._callbacks = ()  # type: ignore[assignment]  # never appended to
+        self._cond = None
 
 
 def all_done(futures: List[Future]) -> bool:

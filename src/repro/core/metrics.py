@@ -30,6 +30,15 @@ class BackendStats:
     ring flushes by trigger; ``ring_hwm``: ring occupancy high-water
     (``fiber-batch`` only — mean batch size is
     ``batched_calls / sum(flushes_*)``).
+
+    Zero-handoff fast-path counters (cooperative backends):
+    ``inline_calls``: async RPCs whose callee handler ran as a direct
+    continuation of the caller (mailbox and carrier spawn skipped);
+    ``inline_depth_hwm``: deepest nesting of inlined calls observed — a
+    gauge, bounded by ``App.inline_budget``.  ``fast_futures``/
+    ``slow_futures``: handler/carrier completions whose reply future was
+    resolved without / with a kernel ``Condition`` ever materializing (a
+    blocking ``wait`` is what materializes one; cooperative joins never do).
     """
     spawns: int = 0
     spawn_seconds: float = 0.0
@@ -43,8 +52,12 @@ class BackendStats:
     flushes_join: int = 0
     flushes_timeout: int = 0
     ring_hwm: int = 0
+    inline_calls: int = 0
+    inline_depth_hwm: int = 0
+    fast_futures: int = 0
+    slow_futures: int = 0
 
-    _GAUGES = ("queue_depth_hwm", "ring_hwm")
+    _GAUGES = ("queue_depth_hwm", "ring_hwm", "inline_depth_hwm")
 
     def add(self, other: "BackendStats") -> "BackendStats":
         """In-place aggregation across executors (gauges take the max)."""
@@ -133,6 +146,9 @@ class TrialResult:
         if bs.get("pool_stalls"):
             s += (f" stalls={bs['pool_stalls']:.0f}"
                   f" qhwm={bs.get('queue_depth_hwm', 0):.0f}")
+        if bs.get("inline_calls"):
+            s += (f" inline={bs['inline_calls']:.0f}"
+                  f"@d{bs.get('inline_depth_hwm', 0):.0f}")
         if bs.get("batched_calls"):
             flushes = (bs.get("flushes_size", 0) + bs.get("flushes_join", 0)
                        + bs.get("flushes_timeout", 0))

@@ -9,6 +9,7 @@ thread-vs-fiber difference lives.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Generator, Optional
@@ -16,6 +17,15 @@ from typing import Any, Callable, Dict, Generator, Optional
 from .effects import Sleep, Wait
 from .executor import Executor, make_executor
 from .future import Future
+
+# Default inline-depth budget for the zero-handoff fast path: how many
+# levels of same-process cooperative callees may run as a direct
+# continuation of one caller step before the scheduler falls back to the
+# carrier path.  Bounds both the Python stack and how long one fiber can
+# monopolize its scheduler on a deep call chain (socialnetwork's
+# compose -> text -> url_shorten is depth 2).  0 disables the fast path
+# entirely (carrier elision included), restoring the PR 3 dispatch path.
+INLINE_BUDGET_DEFAULT = 4
 
 
 @dataclass
@@ -37,17 +47,43 @@ class Service:
         self.backend = backend
         self.executor: Executor = make_executor(backend, app, spec.name,
                                                 spec.n_workers)
-        self.requests = 0
-        self._req_lock = threading.Lock()
+        # Lock-free request accounting: each request consumes one ticket
+        # from an atomic counter (the same lost-update fix as
+        # FiberExecutor._rr) and performs *no* Python-level write at all —
+        # `requests` reads the counter's next value back out of its repr
+        # (documented itertools.count behaviour), so the count is exact
+        # with no lock acquire and no last-writer-wins race.
+        self._req_ticket = itertools.count(1)
+
+    @property
+    def requests(self) -> int:
+        r = repr(self._req_ticket)          # e.g. "count(42)"
+        return int(r[r.index("(") + 1:-1]) - 1
+
+    def count_request(self) -> None:
+        next(self._req_ticket)
 
     def deliver(self, method: str, payload: Any, reply: Future) -> None:
         handler = self.handlers.get(method)
         if handler is None:
             reply.set_exception(KeyError(f"{self.name}: no method {method!r}"))
             return
-        with self._req_lock:
-            self.requests += 1
+        self.count_request()
         self.executor.deliver(handler(self, payload), reply)
+
+    def inline_handler(self, method: str) -> Optional[Callable[..., Generator]]:
+        """Zero-handoff fast path: return the handler iff this service's
+        executor accepts having it run inline on a co-scheduled cooperative
+        caller (skipping the mailbox and the carrier spawn entirely).
+        Thread-family executors decline — their kernel-level dispatch cost
+        is the design point being measured.  An inlined handler runs on the
+        *caller's* thread, possibly concurrently with this service's own
+        executor; that is already the contract handlers live under (every
+        backend with ``n_workers > 1`` runs them on several threads), and
+        ``self.lock`` remains the mechanism protecting shared state."""
+        if not getattr(self.executor, "cooperative", False):
+            return None
+        return self.handlers.get(method)
 
 
 class OffloadPool:
@@ -72,6 +108,11 @@ class OffloadPool:
     def stop(self) -> None:
         for _ in self._threads:
             self._q.put(None)
+        if self._started:
+            # join with the executors' 5 s budget: App.stop() must not
+            # return while offload work is still mid-flight
+            for t in self._threads:
+                t.join(timeout=5.0)
 
     def submit(self, fn: Callable[..., Any], *args: Any) -> Future:
         fut = Future()
@@ -107,12 +148,22 @@ class App:
     net_latency:
         Simulated one-way network latency the carrier pays before the send
         (the container has one host; spawn/scheduling costs are real).
+    inline_budget:
+        Zero-handoff fast-path depth budget: when a cooperative backend's
+        ``AsyncRpc`` targets a co-scheduled cooperative service and
+        ``net_latency == 0``, the callee handler runs as a direct
+        continuation of the caller up to its first suspension point, up to
+        this many nested levels; beyond it (or for thread-family callees)
+        the call falls back to carrier elision or the full carrier path.
+        ``0`` disables the fast path entirely (the PR 3 dispatch path).
     """
 
     def __init__(self, backend: str = "fiber", net_latency: float = 0.0,
-                 offload_threads: int = 2) -> None:
+                 offload_threads: int = 2,
+                 inline_budget: int = INLINE_BUDGET_DEFAULT) -> None:
         self.default_backend = backend
         self.net_latency = net_latency
+        self.inline_budget = inline_budget
         self.services: Dict[str, Service] = {}
         self.offload_pool = OffloadPool(offload_threads)
         self._started = False

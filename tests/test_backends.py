@@ -174,7 +174,8 @@ def test_app_backend_stats_aggregates_across_services():
     for key in ("spawns", "pool_stalls", "queue_depth_hwm", "steals",
                 "switches", "spawn_seconds", "stall_seconds",
                 "batched_calls", "flushes_size", "flushes_join",
-                "flushes_timeout", "ring_hwm"):
+                "flushes_timeout", "ring_hwm", "inline_calls",
+                "inline_depth_hwm", "fast_futures", "slow_futures"):
         assert key in tr.backend_stats
     agg = app.backend_stats()
     assert agg.spawns == app.total_spawns()
@@ -199,6 +200,26 @@ def test_trial_row_mentions_batch_counters():
                                     "ring_hwm": 6})
     row = tr.row()
     assert "batched=12/4fl" in row and "ringhwm=6" in row
+
+
+def test_trial_row_mentions_inline_counters():
+    from repro.core import TrialResult
+    tr = TrialResult(offered_rps=1, achieved_rps=1, duration=1, p50=0.0,
+                     p99=0.0, mean=0.0, completed=1, shed=0, errors=0,
+                     backend_stats={"inline_calls": 42,
+                                    "inline_depth_hwm": 2})
+    assert "inline=42@d2" in tr.row()
+
+
+def test_backend_stats_inline_depth_hwm_is_a_gauge():
+    from repro.core import BackendStats
+    before = BackendStats(inline_calls=5, inline_depth_hwm=3)
+    after = BackendStats(inline_calls=9, inline_depth_hwm=3)
+    d = BackendStats.delta(before, after)
+    assert d.inline_calls == 4      # counter: per-trial delta
+    assert d.inline_depth_hwm == 3  # gauge: high-water survives the delta
+    agg = BackendStats(inline_depth_hwm=1).add(BackendStats(inline_depth_hwm=4))
+    assert agg.inline_depth_hwm == 4
 
 
 def test_backend_stats_ring_hwm_is_a_gauge():

@@ -239,9 +239,20 @@ else:
 
 # ----------------------------------------------------- fiber scheduler unit
 def test_fiber_spawn_counts():
+    """The zero-handoff fast path inlines every cooperative call (no carrier
+    fibers); with the fast path disabled the PR 3 carrier-per-call
+    accounting must come back."""
     with _mini_app("fiber") as app:
         app.send("fan", "fanout", {"n": 8}).wait(timeout=5)
+        st = app.backend_stats()
+        assert app.total_spawns() == 0       # no carriers on the fast path
+        assert st.inline_calls >= 8          # every async call inlined
+    app = _mini_app("fiber")
+    app.inline_budget = 0                    # restore the carrier path
+    with app:
+        app.send("fan", "fanout", {"n": 8}).wait(timeout=5)
         assert app.total_spawns() >= 8  # one carrier fiber per async call
+        assert app.backend_stats().inline_calls == 0
 
 
 def test_thread_spawn_counts():

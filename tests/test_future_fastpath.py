@@ -1,0 +1,268 @@
+"""Future fast-path unit tests + zero-handoff inline execution tests.
+
+The PR 4 Future resolves locklessly (value-then-done-flag publication) and
+materializes its ``threading.Condition`` only on the first *blocking*
+waiter, so the cooperative backends never touch a kernel sync object on the
+happy path.  These tests hammer the racy seams of that design — resolve vs
+blocking-wait, callback registration vs resolve — and pin down the
+semantics of :class:`CompletedFuture` and of same-carrier call inlining
+(parity, budget, counters) across the whole backend matrix.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.apps import APP_NAMES, BENCH_BACKENDS, get_app_def
+from repro.core import CompletedFuture, Future
+from repro.core.future import FutureError
+
+
+# ------------------------------------------------------------ lazy Condition
+def test_resolve_before_wait_never_materializes_condition():
+    f = Future()
+    f.set_result(1)
+    assert f.wait() == 1
+    assert f.result() == 1
+    assert not f.blocking_waited()       # the fast-future classification
+
+
+def test_blocking_wait_materializes_condition_exactly_for_blockers():
+    f = Future()
+    threading.Timer(0.05, f.set_result, args=("x",)).start()
+    assert f.wait(timeout=2.0) == "x"
+    assert f.blocking_waited()
+
+
+def test_wait_done_is_a_blocking_wait():
+    f = Future()
+    threading.Timer(0.05, f.set_result, args=(None,)).start()
+    assert f.wait_done(timeout=2.0)
+    assert f.blocking_waited()
+    # but wait_done on an already-done future takes the lock-free path
+    g = Future()
+    g.set_result(3)
+    assert g.wait_done()
+    assert not g.blocking_waited()
+
+
+def test_wait_timeout_raises_and_future_still_resolvable():
+    f = Future()
+    with pytest.raises(TimeoutError):
+        f.wait(timeout=0.02)
+    f.set_result("late")
+    assert f.wait() == "late"
+
+
+def test_double_resolve_raises():
+    f = Future()
+    f.set_result(1)
+    with pytest.raises(FutureError):
+        f.set_result(2)
+    with pytest.raises(FutureError):
+        f.set_exception(ValueError("no"))
+
+
+# --------------------------------------------------- cross-thread races
+def test_cross_thread_resolve_wait_race():
+    """Many futures resolved by one thread while another blocks on each
+    with no sleep anywhere: every wait must return, none may hang on a
+    lost notify (the lazy-Condition publication order is what prevents
+    that)."""
+    futures = [Future() for _ in range(500)]
+
+    def resolver():
+        for i, f in enumerate(futures):
+            f.set_result(i)
+
+    t = threading.Thread(target=resolver)
+    t.start()
+    got = [f.wait(timeout=10) for f in futures]
+    t.join()
+    assert got == list(range(500))
+
+
+def test_callback_vs_resolve_race_fires_exactly_once():
+    """Register a callback from one thread while another resolves: the
+    callback must fire exactly once whichever side wins the race."""
+    for trial in range(300):
+        f = Future()
+        fired = []
+        barrier = threading.Barrier(2)
+
+        def register():
+            barrier.wait()
+            f.add_done_callback(lambda fut: fired.append(fut.result()))
+
+        def resolve():
+            barrier.wait()
+            f.set_result(trial)
+
+        ts = [threading.Thread(target=register),
+              threading.Thread(target=resolve)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert fired == [trial]
+
+
+def test_callbacks_fire_in_registration_order():
+    f = Future()
+    seen = []
+    for i in range(5):
+        f.add_done_callback(lambda fut, i=i: seen.append(i))
+    f.set_result(None)
+    assert seen == list(range(5))
+    # after resolution: immediate, still ordered after the drained ones
+    f.add_done_callback(lambda fut: seen.append(5))
+    assert seen == list(range(6))
+
+
+def test_callback_registered_inside_callback_fires():
+    f = Future()
+    seen = []
+    f.add_done_callback(
+        lambda fut: f.add_done_callback(lambda g: seen.append("inner")))
+    f.set_result(None)
+    assert seen == ["inner"]
+
+
+# ------------------------------------------------------- CompletedFuture
+def test_completed_future_value():
+    f = CompletedFuture(42)
+    assert f.done
+    assert f.result() == 42
+    assert f.wait() == 42
+    assert not f.blocking_waited()
+    seen = []
+    f.add_done_callback(lambda fut: seen.append(fut.result()))
+    assert seen == [42]
+
+
+def test_completed_future_exception_propagates():
+    f = CompletedFuture(exc=ValueError("inline boom"))
+    assert f.done
+    with pytest.raises(ValueError, match="inline boom"):
+        f.result()
+    with pytest.raises(ValueError, match="inline boom"):
+        f.wait()
+    # callback path: fires immediately; the callback sees the exception
+    caught = []
+    def cb(fut):
+        try:
+            fut.result()
+        except ValueError as e:
+            caught.append(str(e))
+    f.add_done_callback(cb)
+    assert caught == ["inline boom"]
+
+
+def test_completed_future_rejects_second_resolve():
+    f = CompletedFuture(1)
+    with pytest.raises(FutureError):
+        f.set_result(2)
+
+
+# ----------------------------------------- inline execution: app-level
+def _fixed_requests(app_name, n=3):
+    factory = get_app_def(app_name).make_request_factory("mixed")
+    rng = np.random.default_rng(12)
+    return [factory(rng) for _ in range(n)]
+
+
+def _run(app_name, backend, requests, inline_budget=None):
+    d = get_app_def(app_name)
+    app = d.build(backend)
+    if inline_budget is not None:
+        app.inline_budget = inline_budget
+    with app:
+        out = [app.send(dest, m, p).wait(timeout=15)
+               for dest, m, p in requests]
+        stats = app.backend_stats()
+    return out, stats
+
+
+@pytest.mark.parametrize("app_name", APP_NAMES)
+def test_inline_and_noninline_execution_are_identical(app_name):
+    """The zero-handoff fast path changes scheduling, never semantics:
+    inlined (default) and non-inlined (budget 0, the PR 3 carrier path)
+    execution must return identical results on every backend, and both
+    must match the thread baseline."""
+    requests = _fixed_requests(app_name)
+    baseline, _ = _run(app_name, "thread", requests)
+    for backend in BENCH_BACKENDS:
+        inlined, st_on = _run(app_name, backend, requests)
+        carried, st_off = _run(app_name, backend, requests, inline_budget=0)
+        assert inlined == baseline, f"{backend} inlined diverged"
+        assert carried == baseline, f"{backend} carrier-path diverged"
+        assert st_off.inline_calls == 0  # budget 0 really disables it
+        if backend in ("fiber", "fiber-steal", "event-loop"):
+            assert st_on.inline_calls > 0, f"{backend} never inlined"
+
+
+def test_inline_budget_bounds_depth():
+    """A chain deeper than the budget must fall back to the carrier path
+    beyond the budget (and still return the right answer)."""
+    from repro.core import App, AsyncRpc, ServiceSpec, Wait
+
+    DEPTH = 8
+
+    def _hop(svc, payload):
+        if payload == 0:
+            return 0
+            yield  # pragma: no cover - marks this as a generator
+        f = yield AsyncRpc(f"hop{payload - 1}", "go", payload - 1)
+        v = yield Wait(f)
+        return v + 1
+
+    app = App(backend="fiber", inline_budget=3)
+    for i in range(DEPTH):
+        app.add_service(ServiceSpec(f"hop{i}", {"go": _hop}, n_workers=1))
+    with app:
+        assert app.send(f"hop{DEPTH - 1}", "go",
+                        DEPTH - 1).wait(timeout=10) == DEPTH - 1
+        st = app.backend_stats()
+    assert st.inline_depth_hwm == 3          # gauge capped by the budget
+    assert 0 < st.inline_calls < DEPTH - 1   # some hops had to fall back
+
+
+def test_thread_callee_is_not_inlined():
+    """Thread-family services decline inline execution — their kernel
+    dispatch cost is the paper's baseline and must stay measured."""
+    from repro.core import App, ServiceSpec, sync_rpc
+
+    def _leaf(svc, payload):
+        return payload
+        yield  # pragma: no cover - marks this as a generator
+
+    def _front(svc, payload):
+        v = yield from sync_rpc("leaf", "go", payload)
+        return v
+
+    app = App(backend="fiber")
+    app.add_service(ServiceSpec("front", {"go": _front}, n_workers=1))
+    app.add_service(ServiceSpec("leaf", {"go": _leaf}, n_workers=1,
+                                backend="thread"))
+    with app:
+        assert app.send("front", "go", 7).wait(timeout=10) == 7
+        st = app.backend_stats()
+        # never inlined: the call went through the thread service's mailbox
+        # (carrier *elision* still applies on the caller side — the reply
+        # future is handed over directly, so no carrier fiber either)
+        assert st.inline_calls == 0
+        assert app.services["leaf"].requests == 1
+
+
+def test_net_latency_disables_the_fast_path():
+    """A simulated network hop means the call is not co-located: the full
+    carrier path (which pays the hop) must run."""
+    from repro.apps import build_socialnetwork
+
+    app = build_socialnetwork("fiber", net_latency=0.0005)
+    with app:
+        out = app.send("frontend", "compose", {"text": "t"}).wait(timeout=10)
+        st = app.backend_stats()
+    assert out == {"post_id": 42}
+    assert st.inline_calls == 0
+    assert st.spawns == 9  # one carrier fiber per async call, as in PR 3

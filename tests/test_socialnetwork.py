@@ -55,8 +55,25 @@ def test_incremental_migration():
 
 
 def test_spawn_accounting():
-    """ComposePost fans out 7 async calls + 2 in Text = 9 carriers/request."""
+    """ComposePost fans out 7 async calls + 2 in Text = 9 calls/request.
+    On the zero-handoff fast path all 9 inline (no carriers); with the fast
+    path disabled, the PR 3 carrier-per-call accounting must come back."""
     with build_socialnetwork("fiber") as app:
+        base = app.backend_stats()
+        app.send("frontend", "compose", {"text": "t"}).wait(timeout=10)
+        from repro.core import BackendStats
+        d = BackendStats.delta(base, app.backend_stats())
+        assert d.inline_calls == 9
+        # 8 of the 9 inlined handlers suspend on their I/O sleep and park as
+        # continuation fibers; only unique_id completes without suspending,
+        # so exactly one call is fully zero-object (a CompletedFuture).
+        assert d.spawns == 8
+        assert d.fast_futures == 9   # no inlined reply ever took a Condition
+        # compose(d0) -> text(d1) -> url_shorten/user_mention(d2)
+        assert app.backend_stats().inline_depth_hwm == 2
+    app = build_socialnetwork("fiber")
+    app.inline_budget = 0
+    with app:
         base = app.total_spawns()
         app.send("frontend", "compose", {"text": "t"}).wait(timeout=10)
         assert app.total_spawns() - base == 9

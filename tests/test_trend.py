@@ -225,9 +225,203 @@ def test_committed_baseline_is_current_schema():
     assert baseline["schema_version"] == trend.SCHEMA_VERSION
     assert baseline["records"], "committed baseline has no records"
     keys = {r["key"] for r in baseline["records"]}
-    # full matrix: every registered app x backend cell
+    # full matrix: every registered app x backend cell contributes an rps
+    # AND a p99 record, and the rpc-path micro one record per backend
     from repro.apps import APP_NAMES, BENCH_BACKENDS
-    assert keys == {f"{a}/{b}" for a in APP_NAMES for b in BENCH_BACKENDS}
+    expected = {f"{a}/{b}" for a in APP_NAMES for b in BENCH_BACKENDS}
+    expected |= {f"{a}/{b}/p99" for a in APP_NAMES for b in BENCH_BACKENDS}
+    expected |= {f"rpc_path/{b}" for b in BENCH_BACKENDS}
+    assert keys == expected
     # self-diff passes trivially
     report = trend.compare(baseline, baseline)
     assert report["regressions"] == []
+
+
+# ----------------------------------------------- lower-is-better direction
+def _latency_artifact(values, trials=None, gate=None):
+    """values: {'app/backend/p99': ms} — direction-lower records."""
+    records = []
+    for key, v in values.items():
+        app, backend = key.split("/")[:2]
+        rec = {
+            "key": key, "app": app, "backend": backend,
+            "metric": "p99_ms", "unit": "ms", "direction": "lower",
+            "value": v, "trials": (trials or {}).get(key, [v, v]),
+            "errors": 0,
+        }
+        if gate is not None:
+            rec["gate"] = gate
+        records.append(rec)
+    return {"schema_version": trend.SCHEMA_VERSION,
+            "apps": sorted({k.split("/")[0] for k in values}),
+            "records": records}
+
+
+P99_BASE = {"socialnetwork/fiber/p99": 2.0, "mediaservice/thread/p99": 4.0}
+
+
+def test_lower_direction_regression_is_an_increase():
+    """A p99 that *rises* past (1 + band) x baseline must gate; halving a
+    latency (which would fail a higher-better cell) must pass clean."""
+    cur = dict(P99_BASE)
+    cur["socialnetwork/fiber/p99"] = P99_BASE["socialnetwork/fiber/p99"] * 2.5
+    report = trend.compare(_latency_artifact(cur), _latency_artifact(P99_BASE))
+    assert len(report["regressions"]) == 1
+    assert "socialnetwork/fiber/p99" in report["regressions"][0]
+
+    improved = {k: v / 2 for k, v in P99_BASE.items()}
+    report = trend.compare(_latency_artifact(improved),
+                           _latency_artifact(P99_BASE))
+    assert report["regressions"] == [] and report["warnings"] == []
+
+
+def test_lower_direction_dip_inside_band_warns():
+    cur = dict(P99_BASE)
+    cur["socialnetwork/fiber/p99"] = P99_BASE["socialnetwork/fiber/p99"] * 1.3
+    report = trend.compare(_latency_artifact(cur), _latency_artifact(P99_BASE))
+    assert report["regressions"] == []
+    assert len(report["warnings"]) == 1
+
+
+def test_lower_direction_cap_means_worse_than_2x_always_fails():
+    key = "socialnetwork/fiber/p99"
+    wild = {key: [2.0, 40.0]}  # 95% claimed spread in both runs
+    cur = dict(P99_BASE)
+    cur[key] = P99_BASE[key] * 2.01  # just past 1 + LOWER_MAX_BAND
+    report = trend.compare(_latency_artifact(cur, trials=wild),
+                           _latency_artifact(P99_BASE, trials=wild))
+    assert len(report["regressions"]) == 1
+
+
+def test_mixed_direction_artifact_gates_each_cell_its_own_way():
+    """One artifact carrying rps (higher) and p99 (lower) records: an rps
+    halving and a p99 tripling must both regress, independently."""
+    def mixed(rps, p99):
+        art = _artifact({"socialnetwork/fiber": rps})
+        art["records"] += _latency_artifact(
+            {"socialnetwork/fiber/p99": p99})["records"]
+        return art
+    report = trend.compare(mixed(145.0, 6.0), mixed(290.0, 2.0))
+    assert len(report["regressions"]) == 2
+    directions = {r["key"]: r.get("direction") for r in report["rows"]}
+    assert directions["socialnetwork/fiber"] == "higher"
+    assert directions["socialnetwork/fiber/p99"] == "lower"
+
+
+def test_warn_only_cells_surface_loudly_but_never_fail():
+    """Smoke p99 records carry gate: warn-only — a 5x out-of-band move
+    must show up as a warning, not a regression (smoke-scale tails cannot
+    support a hard gate)."""
+    cur = dict(P99_BASE)
+    cur["socialnetwork/fiber/p99"] = P99_BASE["socialnetwork/fiber/p99"] * 5
+    report = trend.compare(_latency_artifact(cur, gate="warn-only"),
+                           _latency_artifact(P99_BASE, gate="warn-only"))
+    assert report["regressions"] == []
+    assert any("warn-only" in w for w in report["warnings"])
+    (row,) = [r for r in report["rows"]
+              if r["key"] == "socialnetwork/fiber/p99"]
+    assert row["status"] == "warn"
+
+
+def test_smoke_p99_records_are_warn_only_and_rpc_records_micro():
+    """The artifact bench_smoke writes must tag its p99 cells warn-only and
+    its rpc micro cells noise=micro — the committed baseline proves it."""
+    path = REPO / "launch_results" / "baseline_smoke.json"
+    records = json.loads(path.read_text())["records"]
+    for r in records:
+        if r["key"].endswith("/p99"):
+            assert r.get("gate") == "warn-only", r["key"]
+        elif r["key"].startswith("rpc_path/"):
+            assert r.get("noise") == "micro", r["key"]
+        else:
+            assert r.get("direction") == "higher", r["key"]
+
+
+def test_ns_micro_cells_get_the_machine_absolute_clamps():
+    """rpc_path ns/call records: 2x slower (different hardware) passes,
+    beyond 2.5x (the fast path actually lost) fails."""
+    def micro(v):
+        return {"schema_version": trend.SCHEMA_VERSION, "apps": [],
+                "records": [{"key": "rpc_path/fiber", "app": "_rpc_path",
+                             "backend": "fiber", "metric": "ns_per_call",
+                             "unit": "ns", "direction": "lower",
+                             "value": v, "trials": [v, v], "errors": 0}]}
+    slow_hw = trend.compare(micro(9000.0), micro(4500.0))  # 2.0x
+    assert slow_hw["regressions"] == []
+    lost = trend.compare(micro(12000.0), micro(4500.0))    # 2.7x
+    assert len(lost["regressions"]) == 1
+
+
+# ------------------------------------------------------- full-bench CSV mode
+CSV_ROWS = """name,us_per_call,derived
+spawn_overhead/thread,250.00,req_us=2000.0
+spawn_overhead/thread_over_fiber,12.50,x
+rpc_path/fiber,5.20,ns=5200 inline=1472 spawns=0
+rpc_path/fiber_fastpath_speedup,45.38,x_vs_noinline
+peak_throughput/socialnetwork/mixed/fiber,450.00,rps=2222
+peak_throughput/socialnetwork/mixed/fiber_gain,1.60,x
+p99_latency/socialnetwork/mixed/fiber@500rps,3500.0,p50_us=900.0
+p99_latency/ERROR,0,failed
+# p99_latency took 12.0s
+"""
+
+
+def test_artifact_from_csv_ingests_measurements_not_ratios(tmp_path):
+    p = tmp_path / "bench.csv"
+    p.write_text(CSV_ROWS)
+    art = trend.artifact_from_csv(str(p))
+    recs = {r["key"]: r for r in art["records"]}
+    assert set(recs) == {"spawn_overhead/thread", "rpc_path/fiber",
+                        "peak_throughput/socialnetwork/mixed/fiber",
+                        "p99_latency/socialnetwork/mixed/fiber@500rps"}
+    assert all(r["direction"] == "lower" for r in art["records"])
+    assert art["schema_version"] == trend.SCHEMA_VERSION
+    # machine-absolute micro rows get the wide clamps; app-parameterized
+    # rows keep the p99-style clamps and a real app segment
+    assert recs["rpc_path/fiber"]["noise"] == "micro"
+    assert recs["spawn_overhead/thread"]["noise"] == "micro"
+    assert "noise" not in recs["p99_latency/socialnetwork/mixed/fiber@500rps"]
+    assert recs["p99_latency/socialnetwork/mixed/fiber@500rps"]["app"] \
+        == "socialnetwork"
+    assert recs["rpc_path/fiber"]["app"] == "_rpc_path"
+    # apps populated from the rows -> missing-cell warnings can fire
+    assert "socialnetwork" in art["apps"] and "_rpc_path" in art["apps"]
+
+
+def test_csv_mode_warns_on_cell_lost_from_current_run(tmp_path):
+    """A bench that errors out of the current CSV (its row skipped) must
+    produce a missing-cell warning, not silently drop out of the gate."""
+    base = tmp_path / "base.csv"
+    cur = tmp_path / "cur.csv"
+    base.write_text(CSV_ROWS)
+    cur.write_text(CSV_ROWS.replace(
+        "p99_latency/socialnetwork/mixed/fiber@500rps,3500.0,p50_us=900.0",
+        "p99_latency/ERROR,0,failed"))
+    report = trend.compare(trend.artifact_from_csv(str(cur)),
+                           trend.artifact_from_csv(str(base)))
+    assert any("missing from current" in w and "p99_latency" in w
+               for w in report["warnings"])
+
+
+def test_csv_mode_cli_gates_p99_cells(tmp_path):
+    """--from-csv: a 3x slower p99 cell in the current full-bench CSV fails
+    against the baseline CSV; an identical CSV passes."""
+    base = tmp_path / "base.csv"
+    same = tmp_path / "same.csv"
+    worse = tmp_path / "worse.csv"
+    base.write_text(CSV_ROWS)
+    same.write_text(CSV_ROWS)
+    worse.write_text(CSV_ROWS.replace(
+        "p99_latency/socialnetwork/mixed/fiber@500rps,3500.0",
+        "p99_latency/socialnetwork/mixed/fiber@500rps,10500.0"))
+
+    script = str(REPO / "benchmarks" / "trend.py")
+    ok = subprocess.run([sys.executable, script, "--from-csv",
+                         str(same), str(base)],
+                        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stderr
+    bad = subprocess.run([sys.executable, script, "--from-csv",
+                          str(worse), str(base)],
+                         capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "p99_latency/socialnetwork/mixed/fiber@500rps" in bad.stderr
