@@ -3,8 +3,9 @@
 Rates are swept from low load up to just beneath the *thread* backend's peak
 throughput (the paper's protocol), for each workload of each registered app,
 under every backend in the matrix (``BACKENDS`` — thread, thread-pool,
-fiber, fiber-steal, fiber-batch, event-loop), so the latency cliffs of all
-six dispatch mechanisms line up on a common x-axis.
+fiber, fiber-steal, fiber-batch, fiber-batch-cq, event-loop,
+event-loop-shard), so the latency cliffs of all eight dispatch mechanisms
+line up on a common x-axis.
 """
 from __future__ import annotations
 

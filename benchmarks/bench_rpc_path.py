@@ -27,10 +27,11 @@ from typing import Dict, List, Optional
 from repro.core import (App, AsyncRpc, BACKEND_NAMES, ServiceSpec, Wait)
 
 # backends whose AsyncRpc path the fast path accelerates.  Thread-family
-# backends keep the full carrier path by design; fiber-batch is excluded
-# because its submission ring intercepts AsyncRpc before the inline path,
-# so an inline-on/off comparison there measures nothing but noise.
-INLINE_BACKENDS = ("fiber", "fiber-steal", "event-loop")
+# backends keep the full carrier path by design; fiber-batch and
+# fiber-batch-cq are excluded because their submission rings intercept
+# AsyncRpc before the inline path, so an inline-on/off comparison there
+# measures nothing but noise.
+INLINE_BACKENDS = ("fiber", "fiber-steal", "event-loop", "event-loop-shard")
 
 
 def _leaf(svc, payload):

@@ -4,8 +4,10 @@ Paper analogue: "the ComposePost service spends 23% of its time in clone and
 exit system calls".  We measure the raw cost of spawning+joining async no-op
 carriers under each registered backend: thread pays a ``clone()`` per call,
 thread-pool a queue push to pre-spawned carriers, fiber/fiber-steal a heap
-allocation + deque push, fiber-batch a ring append (one carrier per flushed
-batch), event-loop a bare run-queue append on its single loop thread.
+allocation + deque push, fiber-batch/fiber-batch-cq a ring append (one
+carrier per flushed batch; the cq variant also returns replies through a
+completion ring), event-loop a bare run-queue append on its single loop
+thread, event-loop-shard the same on the request's hashed shard.
 """
 from __future__ import annotations
 

@@ -4,7 +4,8 @@ Protocol follows the paper: ramp the open-loop request rate until processed
 requests/s stops increasing; report the best achieved rate.  Runs every app
 in ``repro.apps.REGISTRY`` (SocialNetwork, HotelReservation, MediaService)
 crossed with every registered execution backend (``BENCH_BACKENDS``: thread,
-thread-pool, fiber, fiber-steal, fiber-batch, event-loop), so the headline
+thread-pool, fiber, fiber-steal, fiber-batch, fiber-batch-cq, event-loop,
+event-loop-shard), so the headline
 claim is measured across service-graph shapes *and* dispatch mechanisms,
 not one hand-picked pair.
 Worker pools are sized generously for the thread-family backends (DSB's

@@ -15,8 +15,8 @@ crossed with every backend in ``repro.apps.BENCH_BACKENDS``; restrict with
 ``--app`` (repeatable / comma-separated).
 
 ``--smoke`` switches to the CI bench-smoke matrix instead (tiny trials for
-every app × backend cell, parity + steal probe, JSON artifact via
-``--json``; see ``bench_smoke.py``).  ``--smoke --update-baseline``
+every app × backend cell across the 8-backend matrix, parity + steal and
+design-point probes, JSON artifact via ``--json``; see ``bench_smoke.py``).  ``--smoke --update-baseline``
 additionally rewrites the committed trend baseline
 (``launch_results/baseline_smoke.json``) when the run is fully green, so
 refreshing the CI trend gate's fallback baseline is one reviewed command

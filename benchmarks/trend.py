@@ -2,9 +2,10 @@
 
 ``bench_smoke.py`` gates each run on *internal* invariants (errors, parity
 vs the thread baseline).  This comparator adds the *cross-run* axis: per
-app x backend cell, has throughput regressed since the previous successful
-run on this branch (or, failing that, the committed
-``launch_results/baseline_smoke.json``)?
+app x backend cell (the full 8-backend matrix — new backends' records flow
+through here with no comparator changes), has throughput regressed since
+the previous successful run on this branch (or, failing that, the
+committed ``launch_results/baseline_smoke.json``)?
 
     python benchmarks/trend.py current.json baseline.json... [--md trend.md]
 

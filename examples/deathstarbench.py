@@ -2,7 +2,8 @@
 
 Measures peak throughput (paper Fig. 1) and p99-vs-rate (paper Fig. 2)
 for each of the app's request generators under every registered async
-backend (thread, thread-pool, fiber, fiber-steal, fiber-batch, event-loop).
+backend (thread, thread-pool, fiber, fiber-steal, fiber-batch,
+fiber-batch-cq, event-loop, event-loop-shard).
 
     PYTHONPATH=src python examples/deathstarbench.py \
         --app {socialnetwork,hotelreservation,mediaservice} [--quick] \

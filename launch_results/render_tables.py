@@ -20,7 +20,8 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 # canonical column order for the backend matrix; backends the CSV mentions
 # that are not listed here (future registry entries) are appended sorted.
 BACKEND_ORDER = ["thread", "thread-pool", "fiber", "fiber-steal",
-                 "fiber-batch", "event-loop"]
+                 "fiber-batch", "fiber-batch-cq", "event-loop",
+                 "event-loop-shard"]
 
 
 def _order_backends(found):

@@ -77,13 +77,20 @@ def build_bench_app(name: str, backend: str, **overrides: Any) -> App:
     not pool size — is the binding constraint, as in the paper's setup.
     Thread-family backends (``thread``, ``thread-pool``) get the wide
     dispatcher pools; fiber-family backends (``fiber``, ``fiber-steal``,
-    ``fiber-batch``) keep the paper's small scheduler counts; ``event-loop``
-    is pinned to one worker per service — the executor is single-carrier by
-    design, so extra workers would only be ignored."""
+    ``fiber-batch``, ``fiber-batch-cq``) keep the paper's small scheduler
+    counts; ``event-loop`` is pinned to one worker per service — the
+    executor is single-carrier by design, so extra workers would only be
+    ignored — while ``event-loop-shard`` shards only where the request
+    stream lands: the frontend gets the shard fan (lifting the one-loop
+    Compute-serialization ceiling is the design point it exists to
+    measure), leaf services stay single-loop — sharding a sleepy leaf only
+    fragments its timer wheel across more GIL-contending threads."""
     if backend.startswith("thread"):
         sizing = dict(n_workers=8, frontend_workers=16)
     elif backend == "event-loop":
         sizing = dict(n_workers=1, frontend_workers=1)
+    elif backend == "event-loop-shard":
+        sizing = dict(n_workers=1, frontend_workers=4)
     else:
         sizing = dict(n_workers=2, frontend_workers=2)
     sizing.update(overrides)

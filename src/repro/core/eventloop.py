@@ -30,6 +30,16 @@ but zero intra-service parallelism — ``Compute`` effects serialize on the
 loop.  The paper's wait-dominated DeathStarBench service models are exactly
 the regime where that trade can win.
 
+:class:`ShardedEventLoopExecutor` (the ``event-loop-shard`` backend) lifts
+the serialization ceiling without reintroducing carriers: **N independent
+loops**, each the plain single-threaded executor above, with every incoming
+request hashed by its request id onto one shard (nginx worker / SO_REUSEPORT
+style — a real deployment would hash the connection id; this in-process
+transport has no connections, so a per-executor request ticket stands in).
+A request and all of its continuations stay pinned to their shard, keeping
+the event loop's locality story, while a CPU-heavy handler only stalls
+1/N-th of the service.
+
 Note on exclusivity: loop serialization is a *scheduling* property, not a
 mutual-exclusion guarantee handlers may rely on.  With the zero-handoff
 fast path (PR 4), a co-scheduled cooperative caller may run this service's
@@ -42,6 +52,7 @@ needs it.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from collections import deque
@@ -350,3 +361,70 @@ class EventLoopExecutor:
                             inline_depth_hwm=self.inline_depth_hwm,
                             fast_futures=self.fast_futures,
                             slow_futures=self.slow_futures)
+
+
+class ShardedEventLoopExecutor:
+    """N independent event loops, requests hashed to a shard by request id
+    (duck-typed ``Executor``; the ``event-loop-shard`` backend).
+
+    ``n_workers`` is the shard count.  Each shard is a full
+    :class:`EventLoopExecutor` — own thread, run queue, inbox, timer wheel —
+    so a shard never synchronizes with its siblings; the only shared state
+    is the placement ticket.  Placement is a deterministic multiplicative
+    hash of the per-executor request ticket (the stand-in for a connection
+    id, see the module docstring): the same delivery sequence always lands
+    on the same shards, which is what keeps the parity suite exact, and
+    Fibonacci hashing spreads the sequential ticket stream evenly instead
+    of striping it.
+
+    Continuations spawned by a handler (``AsyncRpc`` fallbacks,
+    ``SpawnLocal``) stay on the shard that runs it — sharding decides
+    placement once, at delivery, exactly like hashing a connection to an
+    nginx/libuv worker.
+    """
+
+    cooperative = True  # shard handlers may inline on a cooperative caller
+
+    # Knuth's multiplicative constant (2^32 / phi): consecutive request ids
+    # scatter across shards without the modulo-striping a bare `id % n`
+    # would give when n divides the arrival pattern.
+    _HASH_MULT = 2654435761
+
+    def __init__(self, app: Any, name: str, n_workers: int = 2) -> None:
+        self.app = app
+        self.name = name
+        self.n_shards = max(int(n_workers), 1)
+        self._shards = [EventLoopExecutor(app, f"{name}-shard{i}")
+                        for i in range(self.n_shards)]
+        self._ticket = itertools.count()  # atomic under the GIL
+
+    @classmethod
+    def shard_for(cls, request_id: int, n_shards: int) -> int:
+        """Deterministic request-id -> shard placement (pure function, so
+        tests can pin it and a trace can be replayed)."""
+        return ((request_id * cls._HASH_MULT) & 0xFFFFFFFF) % n_shards
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        for s in self._shards:
+            s.start()
+
+    def stop(self) -> None:
+        for s in self._shards:
+            s.stop()
+
+    def deliver(self, gen: Generator, reply: Future) -> None:
+        shard = self.shard_for(next(self._ticket), self.n_shards)
+        self._shards[shard].deliver(gen, reply)
+
+    # ---------------------------------------------------------------- stats
+    @property
+    def spawns(self) -> int:
+        return sum(s.spawns for s in self._shards)
+
+    def stats(self) -> BackendStats:
+        agg = BackendStats()
+        for s in self._shards:
+            agg.add(s.stats())
+        agg.shards = self.n_shards  # gauge: shard width of this executor
+        return agg

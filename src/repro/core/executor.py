@@ -1,7 +1,7 @@
 """Service executors: the async-call backends under study.
 
 The paper compares two; this repo grows the comparison into a backend
-design-space study over six (see ``BACKEND_NAMES``):
+design-space study over eight (see ``BACKEND_NAMES``):
 
 ``thread``  (:class:`ThreadExecutor`)
     Faithful to DeathStarBench's ``std::async`` default launch policy: every
@@ -32,12 +32,26 @@ design-space study over six (see ``BACKEND_NAMES``):
     timeout) as *one* batch carrier fiber, amortizing per-call dispatch
     across a whole fan-out (see :class:`fiber.BatchFiberScheduler`).
 
+``fiber-batch-cq``  (:class:`FiberExecutor` with ``batch=True, cq=True``)
+    Submission rings plus the **completion-ring** mirror: reply resolutions
+    fired on callee threads append to the caller scheduler's
+    :class:`fiber.CompletionRing` instead of each paying an injected wakeup;
+    the ring drains as one batch on size / timeout / idle, so a wide burst
+    of replies costs one scheduler wakeup instead of one per reply (see
+    :class:`fiber.CQBatchFiberScheduler`).
+
 ``event-loop``  (:class:`eventloop.EventLoopExecutor`)
     The asyncio/libuv design point: a **single-carrier** cooperative loop
     where async calls are continuations on a run queue — no clone, no
     carrier pool, no handoff; ``Compute`` serializes on the loop.
 
-All six interpret the *same* handler generators (see ``effects.py``) —
+``event-loop-shard``  (:class:`eventloop.ShardedEventLoopExecutor`)
+    N independent event loops with requests hashed by request id onto one
+    shard (the nginx-worker/SO_REUSEPORT design point): the loop's zero
+    dispatch cost and per-request locality survive, but a CPU-heavy handler
+    stalls only 1/N-th of the service instead of all of it.
+
+All eight interpret the *same* handler generators (see ``effects.py``) —
 switching a service between backends is a one-word config change, mirroring
 the paper's ``std::async`` → ``boost::fiber::async`` search-and-replace.
 New backends register in ``BACKEND_FACTORIES`` and every harness (benchmarks,
@@ -64,8 +78,9 @@ from typing import Any, Callable, Dict, Generator, List, Optional
 
 from .calibrate import burn
 from .effects import AsyncRpc, Compute, Offload, Sleep, SpawnLocal, Wait, WaitAll
-from .eventloop import EventLoopExecutor
-from .fiber import BatchFiberScheduler, FiberScheduler, StealGroup
+from .eventloop import EventLoopExecutor, ShardedEventLoopExecutor
+from .fiber import (BatchFiberScheduler, CQBatchFiberScheduler,
+                    FiberScheduler, StealGroup)
 from .metrics import BackendStats
 from .future import Future
 
@@ -508,23 +523,41 @@ class FiberExecutor(Executor):
     ``batch=True``: per-scheduler submission rings flush same-tick async
     calls as one batch carrier (io_uring-style; see ``fiber.py``).  Batch
     rings are owner-thread-only, so ``batch`` excludes ``steal``.
+    ``cq=True`` (requires ``batch``): schedulers additionally batch
+    cross-thread reply resumptions through a per-scheduler
+    ``CompletionRing`` (see ``fiber.CQBatchFiberScheduler``).
     """
 
     cooperative = True  # handlers may be inlined by a cooperative caller
 
     def __init__(self, app: Any, name: str, n_workers: int = 1, *,
                  steal: bool = False, batch: bool = False,
-                 batch_size: int = 32, flush_after: float = 0.0005) -> None:
+                 batch_size: int = 32, flush_after: float = 0.0005,
+                 cq: bool = False, cq_size: int = 32,
+                 cq_flush_after: float = 0.0005) -> None:
         if steal and batch:
             raise ValueError("batch submission rings are owner-thread-only "
                              "state; steal=True cannot see them")
+        if cq and not batch:
+            raise ValueError("the completion ring is the batch family's "
+                             "reply-side mirror; cq=True requires batch=True")
         self.app = app
         self.name = name
         self.steal = steal
         self.batch = batch
+        self.cq = cq
         group = StealGroup() if steal and n_workers > 1 else None
-        if batch:
+        if cq:
             self._scheds: List[FiberScheduler] = [
+                CQBatchFiberScheduler(app, name=f"{name}-fib{i}",
+                                      batch_size=batch_size,
+                                      flush_after=flush_after,
+                                      cq_size=cq_size,
+                                      cq_flush_after=cq_flush_after)
+                for i in range(n_workers)
+            ]
+        elif batch:
+            self._scheds = [
                 BatchFiberScheduler(app, name=f"{name}-fib{i}",
                                     batch_size=batch_size,
                                     flush_after=flush_after)
@@ -571,22 +604,28 @@ class FiberExecutor(Executor):
         s.spawn_external(gen, reply)
 
     def stats(self) -> BackendStats:
-        # batch-ring counters exist only on BatchFiberScheduler; getattr
-        # keeps one aggregation path for all three fiber variants.
+        # ring counters exist only on the batch/cq scheduler subclasses;
+        # getattr keeps one aggregation path for all four fiber variants.
         def agg(field: str) -> int:
             return sum(getattr(s, field, 0) for s in self._scheds)
+
+        def gauge(field: str) -> int:
+            return max((getattr(s, field, 0) for s in self._scheds),
+                       default=0)
         return BackendStats(spawns=self.spawns, switches=self.switches,
                             steals=self.steals,
                             batched_calls=agg("batched_calls"),
                             flushes_size=agg("flushes_size"),
                             flushes_join=agg("flushes_join"),
                             flushes_timeout=agg("flushes_timeout"),
-                            ring_hwm=max((getattr(s, "ring_hwm", 0)
-                                          for s in self._scheds), default=0),
+                            ring_hwm=gauge("ring_hwm"),
+                            completions_batched=agg("completions_batched"),
+                            cq_flushes_size=agg("cq_flushes_size"),
+                            cq_flushes_timeout=agg("cq_flushes_timeout"),
+                            cq_flushes_idle=agg("cq_flushes_idle"),
+                            cq_hwm=gauge("cq_hwm"),
                             inline_calls=agg("inline_calls"),
-                            inline_depth_hwm=max(
-                                (s.inline_depth_hwm for s in self._scheds),
-                                default=0),
+                            inline_depth_hwm=gauge("inline_depth_hwm"),
                             fast_futures=agg("fast_futures"),
                             slow_futures=agg("slow_futures"))
 
@@ -604,7 +643,10 @@ BACKEND_FACTORIES: Dict[str, Callable[[Any, str, int], Executor]] = {
         app, name, n_workers, steal=True),
     "fiber-batch": lambda app, name, n_workers: FiberExecutor(
         app, name, n_workers, batch=True),
+    "fiber-batch-cq": lambda app, name, n_workers: FiberExecutor(
+        app, name, n_workers, batch=True, cq=True),
     "event-loop": EventLoopExecutor,
+    "event-loop-shard": ShardedEventLoopExecutor,
 }
 
 BACKEND_NAMES = tuple(BACKEND_FACTORIES)

@@ -33,9 +33,14 @@ Two placement algorithms, mirroring boost.fiber's stock schedulers:
 A third variant, :class:`BatchFiberScheduler` (the ``fiber-batch`` backend),
 keeps work-sharing placement but buffers same-tick ``AsyncRpc`` submissions
 in a per-scheduler ring and flushes them as one batch carrier fiber —
-io_uring-style submission/completion — amortizing per-call dispatch across a
-whole fan-out.  Timed parks for all variants (``Sleep`` effects, batch flush
-deadlines) share the :class:`repro.core.timers.TimerWheel`.
+io_uring-style submission — amortizing per-call dispatch across a whole
+fan-out.  A fourth, :class:`CQBatchFiberScheduler` (``fiber-batch-cq``),
+adds the completion-side mirror: a :class:`CompletionRing` that callee-side
+resolution callbacks append resumptions to instead of firing one injected
+wakeup per reply, drained as a single batch on size / timeout / idle — the
+io_uring CQ to the submission ring's SQ.  Timed parks for all variants
+(``Sleep`` effects, flush deadlines) share the
+:class:`repro.core.timers.TimerWheel`.
 """
 from __future__ import annotations
 
@@ -52,6 +57,7 @@ from .timers import TimerWheel
 
 _RAISE = object()  # sentinel: send value is an exception to throw into the fiber
 _FLUSH = object()  # timer payload: a batch scheduler's ring flush deadline
+_CQ_FLUSH = object()  # timer payload: a completion ring's drain deadline
 
 
 class Fiber:
@@ -123,6 +129,13 @@ class FiberScheduler:
         self._timers = TimerWheel()
         self._cond = threading.Condition()
         self._injected: deque[Tuple[Fiber, Any]] = deque()
+        # True only while the run loop is inside cond.wait (maintained under
+        # _cond).  Completion-ring appenders consult it to skip the arming
+        # notify entirely when the owner is demonstrably awake — the cond
+        # lock serializes the flag against the pre-park pending re-check, so
+        # the skip can never lose a wakeup (see CQBatchFiberScheduler).
+        self._parked = False
+        self._ident: Optional[int] = None  # run()-thread id, set per life
         self._stop = False
         self._thread: Optional[threading.Thread] = None
         self._group = steal_group
@@ -158,6 +171,12 @@ class FiberScheduler:
             self._cond.notify()
 
     def start(self) -> None:
+        # reset the stop latch so a stopped scheduler can be restarted (an
+        # App stop()->start() round trip re-enters every executor); without
+        # this the fresh thread would observe the stale flag and exit at
+        # its first idle check.
+        with self._cond:
+            self._stop = False
         self._thread = threading.Thread(target=self.run, name=self.name,
                                         daemon=True)
         self._thread.start()
@@ -171,6 +190,7 @@ class FiberScheduler:
 
     # ----------------------------------------------------------- main loop
     def run(self) -> None:
+        self._ident = threading.get_ident()  # owner ident for this life
         while True:
             # 1. pull external events / decide idle sleep under the lock
             with self._cond:
@@ -185,6 +205,11 @@ class FiberScheduler:
                 self._wake_idle_peer()
             if not have_ready and self._steal and not stopping:
                 have_ready = self._try_steal()
+            if not have_ready and self._harvest_completions():
+                # completion-ring drain (fiber-batch-cq "idle" flush): the
+                # scheduler ran out of ready work, so pending completions
+                # become the next batch instead of a park/wake round trip
+                have_ready = True
             if not have_ready:
                 with self._cond:
                     while self._injected:
@@ -192,33 +217,46 @@ class FiberScheduler:
                     if not self._ready:
                         if self._stop:
                             return
-                        timeout = self._timers.seconds_until_next(
-                            time.monotonic())
-                        if self._steal:
-                            timeout = (self._IDLE_STEAL_POLL if timeout is None
-                                       else min(timeout, self._IDLE_STEAL_POLL))
-                        if timeout is None or timeout > 0:
-                            if self._group is not None:
-                                self._group.register_idle(self)
-                            try:
-                                # surplus re-check after registering: a waker
-                                # that read the idle set as empty just before
-                                # we registered will not notify, so don't
-                                # park if a sibling visibly has spare work
-                                if self._group is None or not any(
-                                        len(s._ready) > 1
-                                        for s in self._group.members
-                                        if s is not self):
-                                    self._cond.wait(timeout=timeout)
-                            finally:
+                        # publish intent-to-park, THEN re-check the ring:
+                        # an appender reads the flag only after its append,
+                        # so either it sees _parked and notifies, or this
+                        # re-check sees its entry and skips the wait — the
+                        # cond lock (held through check and wait) makes the
+                        # interleaving safe in both directions
+                        self._parked = True
+                        if not self._has_pending_completions():
+                            timeout = self._timers.seconds_until_next(
+                                time.monotonic())
+                            if self._steal:
+                                timeout = (self._IDLE_STEAL_POLL
+                                           if timeout is None
+                                           else min(timeout,
+                                                    self._IDLE_STEAL_POLL))
+                            if timeout is None or timeout > 0:
                                 if self._group is not None:
-                                    self._group.unregister_idle(self)
+                                    self._group.register_idle(self)
+                                try:
+                                    # surplus re-check after registering: a
+                                    # waker that read the idle set as empty
+                                    # just before we registered will not
+                                    # notify, so don't park if a sibling
+                                    # visibly has spare work
+                                    if self._group is None or not any(
+                                            len(s._ready) > 1
+                                            for s in self._group.members
+                                            if s is not self):
+                                        self._cond.wait(timeout=timeout)
+                                finally:
+                                    if self._group is not None:
+                                        self._group.unregister_idle(self)
+                        self._parked = False
                         while self._injected:
                             self._ready.append(self._injected.popleft())
             # 2. fire due timers (the timer wheel is owner-thread-only; the
             #    resumed fibers go through _push_ready so thieves see them)
             for item in self._timers.pop_due(time.monotonic()):
                 self._on_timer(item)
+            self._arm_completion_timer()
             # 3. run one ready fiber to its next suspension point
             item = self._pop_ready()
             if item is not None:
@@ -230,6 +268,22 @@ class FiberScheduler:
         """A wheel entry came due.  Base schedulers only park fibers on the
         wheel; :class:`BatchFiberScheduler` also parks flush deadlines."""
         self._push_ready(item)
+
+    # ------------------------------------------------- completion-ring hooks
+    # No-ops on every scheduler except CQBatchFiberScheduler, whose
+    # CompletionRing batches cross-thread resumptions (see below).  They sit
+    # in the base run loop so the CQ variant does not have to duplicate it.
+    def _harvest_completions(self) -> bool:
+        """Drain any pending completion batch into the ready deque; returns
+        True if work was produced (the run loop then skips parking)."""
+        return False
+
+    def _has_pending_completions(self) -> bool:
+        """Racy park guard: True while completions are buffered."""
+        return False
+
+    def _arm_completion_timer(self) -> None:
+        """Owner thread: ensure a drain deadline covers a non-empty ring."""
 
     # ------------------------------------------------ ready deque + stealing
     # Work-sharing mode: the ready deque is touched only by the owner thread,
@@ -614,3 +668,211 @@ class BatchFiberScheduler(FiberScheduler):
             reply.add_done_callback(
                 lambda r, fut=fut: _chain_reply(r, fut))
         return len(batch)
+
+
+class CompletionRing:
+    """MPSC buffer of resolved-completion resumptions bound for ONE scheduler.
+
+    The reply-side mirror of :class:`BatchFiberScheduler`'s submission ring
+    (the io_uring CQ to its SQ): resolution callbacks running on *other*
+    executors' threads append ``(fiber, send_value)`` resumptions here
+    instead of each paying a condition-variable injection into the owning
+    scheduler — appends synchronize on the ring's own lock, which only
+    resolver threads contend, and the whole ring reaches the scheduler as
+    **one** batch.  Flush triggers, mirroring CQ-reaping conditions:
+
+    * **size** — the ring reached ``size`` entries; the appender that filled
+      it injects the batch itself (one lock acquire + one notify for the
+      whole batch);
+    * **timeout** — the owner was busy running fibers for ``cq_flush_after``
+      seconds since it first saw the ring non-empty (deadline parked on the
+      scheduler's :class:`~repro.core.timers.TimerWheel`), bounding reply
+      latency under sustained load;
+    * **idle** — the owner ran out of ready fibers; pending completions
+      become the next batch instead of a park/wake round trip.
+
+    Counters (surfaced as ``BackendStats``): ``completions_batched`` — total
+    resumptions that travelled through the ring; ``flushes_size`` /
+    ``flushes_timeout`` / ``flushes_idle`` — drains by trigger; ``hwm`` —
+    ring-occupancy high-water (gauge).
+    """
+
+    __slots__ = ("size", "_lock", "_entries", "_gen", "completions_batched",
+                 "flushes_size", "flushes_timeout", "flushes_idle", "hwm")
+
+    def __init__(self, size: int = 32) -> None:
+        self.size = size
+        self._lock = threading.Lock()
+        self._entries: List[Tuple[Fiber, Any]] = []
+        self._gen = 0  # bumps per drain: stale-deadline guard (cf. _FLUSH)
+        self.completions_batched = 0
+        self.flushes_size = 0
+        self.flushes_timeout = 0
+        self.flushes_idle = 0
+        self.hwm = 0
+
+    def append(self, fib: Fiber, value: Any
+               ) -> Tuple[Optional[List[Tuple[Fiber, Any]]], bool]:
+        """Thread-safe append.  Returns ``(batch, first)``: ``batch`` is the
+        whole ring when this append filled it to ``size`` (the appender
+        must deliver it), ``first`` is True when the ring just went
+        non-empty (the appender sends the single arming wakeup)."""
+        with self._lock:
+            self._entries.append((fib, value))
+            n = len(self._entries)
+            if n > self.hwm:
+                self.hwm = n
+            if n >= self.size:
+                batch, self._entries = self._entries, []
+                self._gen += 1
+                self.flushes_size += 1
+                self.completions_batched += n
+                return batch, False
+            return None, n == 1
+
+    def drain(self, reason: str) -> List[Tuple[Fiber, Any]]:
+        """Owner-side flush ("timeout" or "idle"); empty list when there is
+        nothing pending."""
+        with self._lock:
+            if not self._entries:
+                return []
+            batch, self._entries = self._entries, []
+            self._gen += 1
+            self.completions_batched += len(batch)
+            if reason == "timeout":
+                self.flushes_timeout += 1
+            else:
+                self.flushes_idle += 1
+            return batch
+
+    @property
+    def gen(self) -> int:
+        return self._gen
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __bool__(self) -> bool:
+        return bool(self._entries)
+
+
+class CQBatchFiberScheduler(BatchFiberScheduler):
+    """Submission rings *and* a completion ring (the ``fiber-batch-cq``
+    backend).
+
+    :class:`BatchFiberScheduler` amortizes the submission side but still
+    pays one injected wakeup per *reply*: every resolution callback fired on
+    a callee's thread acquires this scheduler's condition variable, appends
+    one resumption and notifies — under a wide fan-out the caller's cond
+    becomes the hottest lock in the app.  This subclass routes every
+    cross-thread event — reply resumptions *and* new-fiber deliveries
+    (``spawn_external``) — through a :class:`CompletionRing` instead: the
+    ring is the scheduler's only cross-thread doorbell.  Appender threads
+    contend only the ring's lock, the owner drains the ring as one batch
+    (size / timeout / idle — see :class:`CompletionRing`), and a ten-wide
+    burst of replies costs one scheduler wakeup instead of ten; while the
+    owner is demonstrably awake (``_parked`` False) an append costs no
+    condition-variable traffic at all.
+
+    Ring drains by the owner go straight onto the ready deque (no lock: the
+    batch family excludes stealing, so the deque is owner-thread-only); a
+    size-triggered flush is injected by the appender as one locked batch.
+    """
+
+    def __init__(self, app: "Any", name: str = "sched", *,
+                 batch_size: int = 32, flush_after: float = 0.0005,
+                 cq_size: int = 32, cq_flush_after: float = 0.0005) -> None:
+        super().__init__(app, name, batch_size=batch_size,
+                         flush_after=flush_after)
+        self.cq_flush_after = cq_flush_after
+        self._cq = CompletionRing(cq_size)
+        self._cq_armed = False  # owner-thread-only: drain deadline on wheel?
+
+    # ------------------------------------------------- callee-side: append
+    # The base class injects per cross-thread event; here ALL of them —
+    # reply resumptions fired on resolver threads AND new-fiber deliveries
+    # (spawn_external from dispatchers / batch carriers) — batch through
+    # the completion ring: it is this scheduler's only cross-thread
+    # doorbell, so a burst of replies or deliveries costs one wakeup.
+    def spawn_external(self, gen: Generator, future: Optional[Future] = None,
+                       name: str = "") -> Future:
+        fib = Fiber(gen, future, name)
+        self._complete(fib, None)
+        return fib.future
+
+    def _inject(self, fib: Fiber, value: Any) -> None:
+        # the base resume callbacks (_resume_on/_resume_all_on) funnel every
+        # cross-thread resumption through here; rerouting this one seam puts
+        # them all on the ring
+        self._complete(fib, value)
+
+    def _complete(self, fib: Fiber, value: Any) -> None:
+        if threading.get_ident() == self._ident:
+            # already on the owner thread (a resolution fired while this
+            # scheduler drives a fiber, or a co-scheduled delivery): the
+            # ready deque is ours to touch — no ring, no lock, no wakeup,
+            # and no flush latency for a same-thread continuation
+            self._ready.append((fib, value))
+            return
+        batch, first = self._cq.append(fib, value)
+        if batch is not None:
+            # size flush: the whole batch crosses in ONE injection
+            with self._cond:
+                self._injected.extend(batch)
+                self._cond.notify()
+        elif first and self._parked:
+            # empty -> non-empty while the owner sleeps: the single arming
+            # wakeup.  A busy owner needs none — it re-checks the ring every
+            # loop pass — and the pre-park _has_pending_completions re-check
+            # (made after _parked is published, under the cond lock that
+            # this notify must also take) closes the race either way: the
+            # owner sees our entry, or we see _parked and wake it.
+            with self._cond:
+                self._cond.notify()
+
+    # --------------------------------------- owner-side: drain + deadlines
+    def _harvest_completions(self) -> bool:
+        batch = self._cq.drain("idle")
+        if not batch:
+            return False
+        self._ready.extend(batch)
+        return True
+
+    def _has_pending_completions(self) -> bool:
+        return bool(self._cq)
+
+    def _arm_completion_timer(self) -> None:
+        if self._cq_armed or not self._cq:
+            return
+        self._cq_armed = True
+        self._timers.push(time.monotonic() + self.cq_flush_after,
+                          (_CQ_FLUSH, self._cq.gen))
+
+    def _on_timer(self, item: Any) -> None:
+        if isinstance(item, tuple) and item and item[0] is _CQ_FLUSH:
+            self._cq_armed = False  # re-armed next loop pass if refilled
+            if item[1] == self._cq.gen:
+                self._ready.extend(self._cq.drain("timeout"))
+            return  # stale generation: its ring already drained
+        super()._on_timer(item)
+
+    # ------------------------------------------------------ stats plumbing
+    @property
+    def completions_batched(self) -> int:
+        return self._cq.completions_batched
+
+    @property
+    def cq_flushes_size(self) -> int:
+        return self._cq.flushes_size
+
+    @property
+    def cq_flushes_timeout(self) -> int:
+        return self._cq.flushes_timeout
+
+    @property
+    def cq_flushes_idle(self) -> int:
+        return self._cq.flushes_idle
+
+    @property
+    def cq_hwm(self) -> int:
+        return self._cq.hwm

@@ -46,12 +46,13 @@ class FutureError(RuntimeError):
 class Future:
     """A write-once result slot with thread-safe blocking *and* callback waits."""
 
-    __slots__ = ("_done", "_value", "_exc", "_callbacks", "_cond")
+    __slots__ = ("_done", "_value", "_exc", "_exc_tb", "_callbacks", "_cond")
 
     def __init__(self) -> None:
         self._done = False
         self._value: Any = None
         self._exc: Optional[BaseException] = None
+        self._exc_tb = None  # traceback snapshot taken at set_exception time
         self._callbacks: List[Callable[["Future"], None]] = []
         self._cond: Optional[threading.Condition] = None
 
@@ -67,6 +68,13 @@ class Future:
         if self._done:
             raise FutureError("Future already resolved")
         self._exc = exc
+        # Snapshot the traceback as resolved.  Every re-raise (wait/result,
+        # possibly one per waiter) restores this snapshot first: a bare
+        # `raise exc` would instead *extend* the shared exc.__traceback__
+        # with the raising frames each time it is caught, so concurrent
+        # waiters would mutate each other's tracebacks and a wait->catch->
+        # wait loop would grow the chain without bound.
+        self._exc_tb = exc.__traceback__
         self._done = True
         self._on_resolved()
 
@@ -120,7 +128,9 @@ class Future:
                 if not cond.wait_for(lambda: self._done, timeout=timeout):
                     raise TimeoutError("Future.wait timed out")
         if self._exc is not None:
-            raise self._exc
+            # re-raise from the stored snapshot so multi-waiter re-raises
+            # never compound each other's frames (see set_exception)
+            raise self._exc.with_traceback(self._exc_tb)
         return self._value
 
     def wait_done(self, timeout: Optional[float] = None) -> bool:
@@ -139,7 +149,7 @@ class Future:
         if not self._done:
             raise FutureError("Future not resolved yet")
         if self._exc is not None:
-            raise self._exc
+            raise self._exc.with_traceback(self._exc_tb)
         return self._value
 
     def add_done_callback(self, cb: Callable[["Future"], None]) -> None:
@@ -170,6 +180,7 @@ class CompletedFuture(Future):
         self._done = True
         self._value = value
         self._exc = exc
+        self._exc_tb = exc.__traceback__ if exc is not None else None
         self._callbacks = ()  # type: ignore[assignment]  # never appended to
         self._cond = None
 

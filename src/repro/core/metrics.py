@@ -28,8 +28,18 @@ class BackendStats:
     run-queue) high water.  ``batched_calls``: async calls that went through
     a submission ring; ``flushes_size``/``flushes_join``/``flushes_timeout``:
     ring flushes by trigger; ``ring_hwm``: ring occupancy high-water
-    (``fiber-batch`` only — mean batch size is
+    (``fiber-batch``/``fiber-batch-cq`` — mean batch size is
     ``batched_calls / sum(flushes_*)``).
+
+    Completion-ring counters (``fiber-batch-cq`` only):
+    ``completions_batched``: cross-thread resumptions that travelled through
+    a scheduler's completion ring instead of each paying an injected wakeup;
+    ``cq_flushes_size``/``cq_flushes_timeout``/``cq_flushes_idle``: ring
+    drains by trigger (mean reply-batch size is
+    ``completions_batched / sum(cq_flushes_*)``); ``cq_hwm``: completion-ring
+    occupancy high-water (gauge).  ``shards``: configured shard width of an
+    ``event-loop-shard`` executor (gauge; app-wide aggregation takes the
+    widest service).
 
     Zero-handoff fast-path counters (cooperative backends):
     ``inline_calls``: async RPCs whose callee handler ran as a direct
@@ -52,12 +62,19 @@ class BackendStats:
     flushes_join: int = 0
     flushes_timeout: int = 0
     ring_hwm: int = 0
+    completions_batched: int = 0
+    cq_flushes_size: int = 0
+    cq_flushes_timeout: int = 0
+    cq_flushes_idle: int = 0
+    cq_hwm: int = 0
+    shards: int = 0
     inline_calls: int = 0
     inline_depth_hwm: int = 0
     fast_futures: int = 0
     slow_futures: int = 0
 
-    _GAUGES = ("queue_depth_hwm", "ring_hwm", "inline_depth_hwm")
+    _GAUGES = ("queue_depth_hwm", "ring_hwm", "cq_hwm", "shards",
+               "inline_depth_hwm")
 
     def add(self, other: "BackendStats") -> "BackendStats":
         """In-place aggregation across executors (gauges take the max)."""
@@ -155,6 +172,15 @@ class TrialResult:
             s += (f" batched={bs['batched_calls']:.0f}"
                   f"/{flushes:.0f}fl"
                   f" ringhwm={bs.get('ring_hwm', 0):.0f}")
+        if bs.get("completions_batched"):
+            cq_flushes = (bs.get("cq_flushes_size", 0)
+                          + bs.get("cq_flushes_timeout", 0)
+                          + bs.get("cq_flushes_idle", 0))
+            s += (f" cq={bs['completions_batched']:.0f}"
+                  f"/{cq_flushes:.0f}fl"
+                  f" cqhwm={bs.get('cq_hwm', 0):.0f}")
+        if bs.get("shards"):
+            s += f" shards={bs['shards']:.0f}"
         return s
 
 

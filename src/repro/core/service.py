@@ -88,31 +88,59 @@ class Service:
 
 class OffloadPool:
     """Fixed thread pool for genuinely-blocking work (jitted JAX steps,
-    checkpoint file writes).  Shared app-wide so fiber schedulers never block."""
+    checkpoint file writes).  Shared app-wide so fiber schedulers never block.
+
+    ``start()``/``stop()`` are idempotent and the pool is **restartable**: a
+    stopped pool's worker threads have exited (kernel threads cannot be
+    resurrected), so each ``start()`` spawns a fresh set.  It also drains
+    any shutdown sentinels still sitting in the queue — a worker that missed
+    its sentinel (join timeout) or a ``stop()`` issued before any start
+    would otherwise leave poison that kills the new workers on their first
+    ``get()``, silently orphaning every subsequent ``offload()`` future.
+    """
 
     def __init__(self, n_threads: int = 2) -> None:
         import queue as _q
+        self._queue_mod = _q
+        self._n_threads = n_threads
         self._q: "_q.SimpleQueue" = _q.SimpleQueue()
-        self._threads = [
-            threading.Thread(target=self._loop, name=f"offload{i}", daemon=True)
-            for i in range(n_threads)
-        ]
+        self._threads: list = []
         self._started = False
 
     def start(self) -> None:
-        if not self._started:
-            for t in self._threads:
-                t.start()
-            self._started = True
+        if self._started:
+            return
+        # drain stale shutdown sentinels, preserving queued work in order:
+        # submissions made while stopped are served by the new workers.
+        pending = []
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except self._queue_mod.Empty:
+                break
+            if item is not None:
+                pending.append(item)
+        for item in pending:
+            self._q.put(item)
+        self._threads = [
+            threading.Thread(target=self._loop, name=f"offload{i}", daemon=True)
+            for i in range(self._n_threads)
+        ]
+        for t in self._threads:
+            t.start()
+        self._started = True
 
     def stop(self) -> None:
+        if not self._started:
+            return  # idempotent; a never-started pool must not be poisoned
         for _ in self._threads:
             self._q.put(None)
-        if self._started:
-            # join with the executors' 5 s budget: App.stop() must not
-            # return while offload work is still mid-flight
-            for t in self._threads:
-                t.join(timeout=5.0)
+        # join with the executors' 5 s budget: App.stop() must not
+        # return while offload work is still mid-flight
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self._threads = []
+        self._started = False
 
     def submit(self, fn: Callable[..., Any], *args: Any) -> Future:
         fut = Future()
@@ -142,9 +170,11 @@ class App:
         semantics), ``"thread-pool"`` (bounded pre-spawned carrier pool),
         ``"fiber"`` (paper technique, work-sharing placement),
         ``"fiber-steal"`` (work-stealing placement), ``"fiber-batch"``
-        (io_uring-style batched submission rings) or ``"event-loop"``
-        (single-carrier cooperative loop).  Individual
-        :class:`ServiceSpec`s may override.
+        (io_uring-style batched submission rings), ``"fiber-batch-cq"``
+        (submission rings plus reply-batching completion rings),
+        ``"event-loop"`` (single-carrier cooperative loop) or
+        ``"event-loop-shard"`` (N loops, requests hashed by id).
+        Individual :class:`ServiceSpec`s may override.
     net_latency:
         Simulated one-way network latency the carrier pays before the send
         (the container has one host; spawn/scheduling costs are real).
@@ -177,6 +207,10 @@ class App:
         return svc
 
     def start(self) -> None:
+        """Idempotent; a stopped app can be started again (the benchmark
+        harnesses re-enter one App as a context manager between sweeps)."""
+        if self._started:
+            return
         from .calibrate import iters_per_second
         iters_per_second()  # calibrate the Compute burn before serving
         self.offload_pool.start()
@@ -185,10 +219,14 @@ class App:
         self._started = True
 
     def stop(self) -> None:
+        """Idempotent: a double stop() must not re-join executors or poison
+        the offload pool with extra shutdown sentinels."""
+        if not self._started:
+            return
+        self._started = False  # send() fails fast while teardown runs
         for svc in self.services.values():
             svc.executor.stop()
         self.offload_pool.stop()
-        self._started = False
 
     def __enter__(self) -> "App":
         self.start()
@@ -202,6 +240,13 @@ class App:
         """Enqueue an RPC at ``dest``; returns the reply future.
         Thread-safe; callable from any thread (incl. the load generator)."""
         reply = Future()
+        if not self._started:
+            # fail fast: a delivery into a stopped app would sit in a dead
+            # executor's mailbox and hang any blocking waiter forever
+            reply.set_exception(RuntimeError(
+                f"App is not started; cannot send {dest}.{method} "
+                f"(start() it, or use it as a context manager)"))
+            return reply
         svc = self.services.get(dest)
         if svc is None:
             reply.set_exception(KeyError(f"no service {dest!r}"))

@@ -10,34 +10,50 @@ import pytest
 
 from repro.core import (App, BACKEND_NAMES, Compute, ServiceSpec, SpawnLocal,
                         Wait, WaitAll, make_executor, run_trial)
-from repro.core.eventloop import EventLoopExecutor
+from repro.core.eventloop import EventLoopExecutor, ShardedEventLoopExecutor
 from repro.core.executor import (FiberExecutor, PooledThreadExecutor,
                                  ThreadExecutor)
-from repro.core.fiber import BatchFiberScheduler, FiberScheduler
+from repro.core.fiber import (BatchFiberScheduler, CQBatchFiberScheduler,
+                              FiberScheduler)
 from repro.core.future import Future
 
 
 # --------------------------------------------------------------- registry
-def test_backend_names_is_the_six_backend_matrix():
+def test_backend_names_is_the_eight_backend_matrix():
     assert BACKEND_NAMES == ("thread", "thread-pool", "fiber", "fiber-steal",
-                             "fiber-batch", "event-loop")
+                             "fiber-batch", "fiber-batch-cq", "event-loop",
+                             "event-loop-shard")
 
 
 def test_make_executor_resolves_every_registered_backend():
     types = {"thread": ThreadExecutor, "thread-pool": PooledThreadExecutor,
              "fiber": FiberExecutor, "fiber-steal": FiberExecutor,
-             "fiber-batch": FiberExecutor, "event-loop": EventLoopExecutor}
+             "fiber-batch": FiberExecutor, "fiber-batch-cq": FiberExecutor,
+             "event-loop": EventLoopExecutor,
+             "event-loop-shard": ShardedEventLoopExecutor}
     for backend in BACKEND_NAMES:
         ex = make_executor(backend, app=None, name="t", n_workers=2)
         assert isinstance(ex, types[backend]), backend
     assert make_executor("fiber-steal", None, "t", 2).steal
     assert not make_executor("fiber", None, "t", 2).steal
     batch = make_executor("fiber-batch", None, "t", 2)
-    assert batch.batch and not batch.steal
+    assert batch.batch and not batch.steal and not batch.cq
     assert all(isinstance(s, BatchFiberScheduler) for s in batch._scheds)
+    assert not any(isinstance(s, CQBatchFiberScheduler)
+                   for s in batch._scheds)
+    cq = make_executor("fiber-batch-cq", None, "t", 2)
+    assert cq.batch and cq.cq and not cq.steal
+    assert all(isinstance(s, CQBatchFiberScheduler) for s in cq._scheds)
     plain = make_executor("fiber", None, "t", 2)
     assert not any(isinstance(s, BatchFiberScheduler) for s in plain._scheds)
     assert all(isinstance(s, FiberScheduler) for s in plain._scheds)
+    shard = make_executor("event-loop-shard", None, "t", 2)
+    assert shard.n_shards == 2
+
+
+def test_completion_ring_requires_batch():
+    with pytest.raises(ValueError, match="requires batch"):
+        FiberExecutor(None, "bad", n_workers=1, cq=True)
 
 
 def test_make_executor_unknown_backend_lists_registry():
@@ -231,3 +247,29 @@ def test_backend_stats_ring_hwm_is_a_gauge():
     assert d.ring_hwm == 7         # gauge: high-water survives the delta
     agg = BackendStats(ring_hwm=3).add(BackendStats(ring_hwm=9))
     assert agg.ring_hwm == 9       # aggregation takes the max
+
+
+def test_trial_row_mentions_completion_ring_counters():
+    from repro.core import TrialResult
+    tr = TrialResult(offered_rps=1, achieved_rps=1, duration=1, p50=0.0,
+                     p99=0.0, mean=0.0, completed=1, shed=0, errors=0,
+                     backend_stats={"completions_batched": 24,
+                                    "cq_flushes_size": 1,
+                                    "cq_flushes_timeout": 2,
+                                    "cq_flushes_idle": 3,
+                                    "cq_hwm": 8, "shards": 4})
+    row = tr.row()
+    assert "cq=24/6fl" in row and "cqhwm=8" in row and "shards=4" in row
+
+
+def test_backend_stats_cq_hwm_and_shards_are_gauges():
+    from repro.core import BackendStats
+    before = BackendStats(completions_batched=5, cq_hwm=6, shards=4)
+    after = BackendStats(completions_batched=30, cq_hwm=6, shards=4)
+    d = BackendStats.delta(before, after)
+    assert d.completions_batched == 25  # counter: per-trial delta
+    assert d.cq_hwm == 6                # gauge: high-water survives
+    assert d.shards == 4                # gauge: configuration survives
+    agg = BackendStats(cq_hwm=2, shards=1).add(
+        BackendStats(cq_hwm=9, shards=4))
+    assert agg.cq_hwm == 9 and agg.shards == 4  # aggregation takes the max

@@ -1,0 +1,303 @@
+"""CompletionRing + CQBatchFiberScheduler (fiber-batch-cq) tests.
+
+The completion ring is the reply-side mirror of the submission ring: reply
+resolutions fired on callee threads append resumptions to the caller
+scheduler's ring instead of each paying an injected wakeup, and the ring
+drains as one batch on size / timeout / idle.  These tests pin the ring
+contract at the unit level (deterministic, no threads), then each flush
+trigger and the exception path end-to-end.
+"""
+import threading
+
+import pytest
+
+from repro.core import (App, AsyncRpc, Future, ServiceSpec, Sleep, Wait,
+                        WaitAll)
+from repro.core.executor import FiberExecutor
+from repro.core.fiber import _CQ_FLUSH, CompletionRing, CQBatchFiberScheduler, Fiber
+
+
+# ------------------------------------------------------------ ring contract
+def test_ring_append_reports_first_and_size():
+    ring = CompletionRing(size=3)
+    f = [Fiber(iter(())) for _ in range(4)]
+    assert ring.append(f[0], 0) == (None, True)    # empty -> non-empty
+    assert ring.append(f[1], 1) == (None, False)
+    batch, first = ring.append(f[2], 2)            # fills to size
+    assert not first
+    assert batch == [(f[0], 0), (f[1], 1), (f[2], 2)]
+    assert not ring                                # emptied by the flush
+    assert ring.flushes_size == 1
+    assert ring.completions_batched == 3
+    assert ring.hwm == 3
+    # the next append starts a fresh ring (and a fresh generation)
+    gen_after_size = ring.gen
+    assert ring.append(f[3], 3) == (None, True)
+    assert ring.gen == gen_after_size
+
+
+def test_ring_drain_counts_reason_and_bumps_generation():
+    ring = CompletionRing(size=100)
+    fib = Fiber(iter(()))
+    assert ring.drain("idle") == []                # empty drain is a no-op
+    assert ring.flushes_idle == 0 and ring.gen == 0
+    ring.append(fib, "a")
+    g = ring.gen
+    assert ring.drain("timeout") == [(fib, "a")]
+    assert ring.flushes_timeout == 1
+    assert ring.gen == g + 1
+    ring.append(fib, "b")
+    assert ring.drain("idle") == [(fib, "b")]
+    assert ring.flushes_idle == 1
+    assert ring.completions_batched == 2
+
+
+def test_scheduler_size_flush_injects_one_batch():
+    """cq_size completions arriving from resolver threads must cross into
+    the scheduler as ONE injected batch (scheduler not started: the inject
+    queue is inspected directly)."""
+    s = CQBatchFiberScheduler(app=None, name="unit", cq_size=3,
+                              cq_flush_after=60.0)
+    fibs = [Fiber(iter(())) for _ in range(3)]
+    for i, fib in enumerate(fibs):
+        s._complete(fib, i)
+    assert list(s._injected) == [(fibs[0], 0), (fibs[1], 1), (fibs[2], 2)]
+    assert s.cq_flushes_size == 1
+    assert s.completions_batched == 3
+    assert s.cq_hwm == 3
+    assert not s._cq
+
+
+def test_scheduler_timeout_drain_and_stale_generation():
+    """A drain deadline armed for ring generation N must be a no-op once N
+    has already flushed — otherwise every generation's leftover timer
+    prematurely drains its successor (the same guard the submission ring's
+    _FLUSH timers carry).  Scheduler not started: timers driven directly."""
+    s = CQBatchFiberScheduler(app=None, name="gen", cq_size=100,
+                              cq_flush_after=60.0)
+    fib = Fiber(iter(()))
+    s._complete(fib, 1)
+    s._arm_completion_timer()
+    assert s._cq_armed
+    armed_gen = s._cq.gen
+    s._on_timer((_CQ_FLUSH, armed_gen))            # due: drains to ready
+    assert list(s._ready) == [(fib, 1)]
+    assert s.cq_flushes_timeout == 1
+    assert not s._cq_armed
+    s._ready.clear()
+    s._complete(fib, 2)                            # next generation's ring
+    s._on_timer((_CQ_FLUSH, armed_gen))            # stale deadline: no-op
+    assert len(s._cq) == 1
+    assert s.cq_flushes_timeout == 1
+    s._arm_completion_timer()
+    s._on_timer((_CQ_FLUSH, s._cq.gen))            # its own deadline drains
+    assert s.cq_flushes_timeout == 2
+    assert list(s._ready) == [(fib, 2)]
+
+
+def test_arm_is_idempotent_and_skips_empty_ring():
+    s = CQBatchFiberScheduler(app=None, name="arm", cq_size=100,
+                              cq_flush_after=60.0)
+    s._arm_completion_timer()
+    assert len(s._timers) == 0                     # nothing pending: no timer
+    s._complete(Fiber(iter(())), 1)
+    s._arm_completion_timer()
+    s._arm_completion_timer()
+    assert len(s._timers) == 1                     # armed exactly once
+
+
+# --------------------------------------------------------- live flush paths
+def test_idle_flush_resumes_parked_fiber():
+    """An idle scheduler drains a freshly appended completion immediately
+    (the single arming wakeup) instead of waiting out the flush deadline."""
+    s = CQBatchFiberScheduler(app=None, name="idle", cq_size=100,
+                              cq_flush_after=60.0)  # timeout can't be the one
+    gate = Future()
+    parked = threading.Event()
+
+    def waiter():
+        parked.set()
+        v = yield Wait(gate)
+        return v + 1
+
+    s.start()
+    try:
+        fut = s.spawn_external(waiter())
+        assert parked.wait(timeout=5)
+        gate.set_result(41)                        # resolver: this thread
+        assert fut.wait(timeout=5) == 42
+    finally:
+        s.stop()
+    # two ring crossings: the spawn_external delivery (the ring is the
+    # scheduler's only cross-thread doorbell) and the gate resumption
+    assert s.completions_batched == 2
+    assert s.cq_flushes_idle == 2
+    assert s.cq_flushes_timeout == 0
+
+
+def test_timeout_flush_fires_while_scheduler_stays_busy():
+    """With the ready deque never emptying (two Sleep(0) spinners), pending
+    completions can only leave the ring via the TimerWheel deadline."""
+    s = CQBatchFiberScheduler(app=None, name="busy", cq_size=100,
+                              cq_flush_after=0.002)
+    stop_spinning = threading.Event()
+    gate = Future()
+    parked = threading.Event()
+
+    def spinner():
+        while not stop_spinning.is_set():
+            yield Sleep(0)
+
+    def waiter():
+        parked.set()
+        v = yield Wait(gate)
+        return v * 2
+
+    s.start()
+    try:
+        for _ in range(2):
+            s.spawn_external(spinner())
+        fut = s.spawn_external(waiter())
+        assert parked.wait(timeout=5)
+        gate.set_result(21)
+        assert fut.wait(timeout=5) == 42
+    finally:
+        stop_spinning.set()
+        s.stop()
+    assert s.completions_batched >= 1
+    assert s.cq_flushes_timeout >= 1, \
+        "busy scheduler drained the ring without its deadline"
+
+
+def test_exception_in_batched_completion_propagates():
+    """A completion that resolves exceptionally travels the ring as a
+    throw-resumption and surfaces in the parked fiber."""
+    s = CQBatchFiberScheduler(app=None, name="boom", cq_size=100,
+                              cq_flush_after=60.0)
+    gate = Future()
+    parked = threading.Event()
+    recovered = []
+
+    def waiter():
+        parked.set()
+        try:
+            yield Wait(gate)
+        except ValueError as exc:
+            recovered.append(str(exc))
+            return "recovered"
+        return "missed"
+
+    s.start()
+    try:
+        fut = s.spawn_external(waiter())
+        assert parked.wait(timeout=5)
+        gate.set_exception(ValueError("cq boom"))
+        assert fut.wait(timeout=5) == "recovered"
+    finally:
+        s.stop()
+    assert recovered == ["cq boom"]
+    assert s.completions_batched == 2  # delivery + throw-resumption
+
+
+# -------------------------------------------------------- executor-level e2e
+def _echo(svc, payload):
+    return payload
+    yield  # pragma: no cover - marks this as a generator
+
+
+@pytest.fixture
+def echo_app():
+    """Minimal transport target for AsyncRpc effects; replies resolve on the
+    thread service's dispatcher threads — genuinely foreign resolver threads
+    for the ring under test."""
+    app = App(backend="thread")
+    app.add_service(ServiceSpec("echo", {"go": _echo}, n_workers=2))
+    with app:
+        yield app
+
+
+def _cq_exec(app, **kw):
+    return FiberExecutor(app, "cq-test", n_workers=1, batch=True, cq=True,
+                         **kw)
+
+
+def test_fanout_join_costs_one_ring_completion(echo_app):
+    """A 4-wide fan-out joined by one WaitAll is a single resumption: the
+    countdown latch fires once, and that one completion crosses through the
+    ring (the wakeup the CQ amortizes under load)."""
+    ex = _cq_exec(echo_app, batch_size=1000, flush_after=60.0)
+
+    def _fan():
+        futs = []
+        for i in range(4):
+            f = yield AsyncRpc("echo", "go", i)
+            futs.append(f)
+        vals = yield WaitAll(futs)
+        return vals
+
+    ex.start()
+    try:
+        reply = Future()
+        ex.deliver(_fan(), reply)
+        assert reply.wait(timeout=10) == list(range(4))
+    finally:
+        ex.stop()
+    st = ex.stats()
+    assert st.batched_calls == 4          # submission ring still does its job
+    assert st.flushes_join == 1
+    # two ring crossings: the handler's delivery and ONE WaitAll-latch
+    # resumption for the whole 4-wide fan-out
+    assert st.completions_batched == 2
+    assert st.cq_flushes_size == 0
+    assert st.cq_hwm >= 1
+
+
+def test_sequential_waits_all_travel_the_ring(echo_app):
+    """Back-to-back sync RPCs park once per call; every resumption must
+    come back through the completion ring, none via per-reply injection."""
+    ex = _cq_exec(echo_app, batch_size=1000, flush_after=60.0)
+    n = 5
+
+    def _chain():
+        acc = 0
+        for i in range(n):
+            f = yield AsyncRpc("echo", "go", i)
+            acc += yield Wait(f)
+        return acc
+
+    ex.start()
+    try:
+        reply = Future()
+        ex.deliver(_chain(), reply)
+        assert reply.wait(timeout=10) == sum(range(n))
+    finally:
+        ex.stop()
+    st = ex.stats()
+    assert st.completions_batched == n + 1   # n resumptions + the delivery
+    assert (st.cq_flushes_size + st.cq_flushes_timeout
+            + st.cq_flushes_idle) >= 1
+
+
+def test_missing_method_error_crosses_ring_and_chained_reply(echo_app):
+    """The full fiber-batch-cq reply path — transport error, _chain_reply,
+    completion ring — must surface the exception exactly like the unbatched
+    backends do."""
+    ex = _cq_exec(echo_app, batch_size=1000, flush_after=60.0)
+
+    def _call():
+        f = yield AsyncRpc("echo", "nope", None)   # no such method
+        val = yield Wait(f)
+        return val
+
+    ex.start()
+    try:
+        reply = Future()
+        ex.deliver(_call(), reply)
+        with pytest.raises(KeyError):
+            reply.wait(timeout=10)
+    finally:
+        ex.stop()
+    # only the delivery crossed the ring: the missing-method reply resolves
+    # synchronously on the batch carrier's own thread, so its throw-
+    # resumption takes the same-thread bypass straight onto the ready deque
+    assert ex.stats().completions_batched == 1

@@ -164,6 +164,79 @@ def test_completed_future_rejects_second_resolve():
         f.set_result(2)
 
 
+# -------------------------------------------- multi-waiter exception re-raise
+def _tb_depth(exc):
+    n, tb = 0, exc.__traceback__
+    while tb is not None:
+        n, tb = n + 1, tb.tb_next
+    return n
+
+
+def _failed_future():
+    f = Future()
+    try:
+        raise ValueError("stored boom")
+    except ValueError as exc:
+        f.set_exception(exc)
+    return f
+
+
+def test_repeated_reraise_does_not_grow_traceback():
+    """Regression: wait()/result() re-raised the *same* stored exception
+    object, so every catch appended the raising frames to the shared
+    __traceback__ and a wait->catch->wait loop grew it without bound.  Each
+    re-raise must restore the traceback snapshot taken at set_exception
+    time."""
+    f = _failed_future()
+    depths = []
+    for _ in range(6):
+        for getter in (f.result, f.wait):
+            try:
+                getter()
+            except ValueError as exc:
+                depths.append(_tb_depth(exc))
+    assert len(set(depths)) == 1, f"traceback grew across re-raises: {depths}"
+
+
+def test_concurrent_waiters_see_bounded_tracebacks():
+    """Many threads blocking-wait on one failed future: no cross-waiter
+    traceback growth (each re-raise starts from the stored snapshot, so the
+    observed depth is bounded regardless of how raises interleave)."""
+    f = Future()
+    n = 8
+    barrier = threading.Barrier(n + 1)
+    depths = []
+    lock = threading.Lock()
+
+    def waiter():
+        barrier.wait()
+        for _ in range(50):
+            try:
+                f.wait(timeout=5)
+            except ValueError as exc:
+                with lock:
+                    depths.append(_tb_depth(exc))
+
+    threads = [threading.Thread(target=waiter) for _ in range(n)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    try:
+        raise ValueError("concurrent boom")
+    except ValueError as exc:
+        baseline_depth = _tb_depth(exc)
+        f.set_exception(exc)
+    for t in threads:
+        t.join()
+    assert len(depths) == n * 50
+    # each re-raise restores the snapshot before propagating, so a traceback
+    # can carry at most the frames of the raises in flight *right now* (≤ 2
+    # per concurrent waiter) on top of it — never a chain compounded across
+    # the 50 iterations, which under the old `raise self._exc` discipline
+    # grew past n * iterations frames
+    assert max(depths) <= baseline_depth + 2 * n, (min(depths), max(depths))
+
+
 # ----------------------------------------- inline execution: app-level
 def _fixed_requests(app_name, n=3):
     factory = get_app_def(app_name).make_request_factory("mixed")
@@ -197,7 +270,8 @@ def test_inline_and_noninline_execution_are_identical(app_name):
         assert inlined == baseline, f"{backend} inlined diverged"
         assert carried == baseline, f"{backend} carrier-path diverged"
         assert st_off.inline_calls == 0  # budget 0 really disables it
-        if backend in ("fiber", "fiber-steal", "event-loop"):
+        if backend in ("fiber", "fiber-steal", "event-loop",
+                       "event-loop-shard"):
             assert st_on.inline_calls > 0, f"{backend} never inlined"
 
 

@@ -1,0 +1,179 @@
+"""App / OffloadPool / executor lifecycle tests.
+
+Pins the three lifecycle bugfixes: a restartable OffloadPool (stop() used
+to leave _started True with dead workers, and a stop() before start()
+poisoned the queue with sentinels), an idempotent App.stop() with fail-fast
+send() on a stopped app, and a full App stop -> start -> stop round trip —
+offload futures included — on every registered backend (the benchmark
+harnesses re-enter one App as a context manager between sweeps).
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import (App, BACKEND_NAMES, Offload, ServiceSpec, Wait)
+from repro.core.fiber import FiberScheduler
+from repro.core.service import OffloadPool
+
+
+# ------------------------------------------------------------- OffloadPool
+def test_offload_pool_restarts_with_fresh_workers():
+    """Regression: after stop() the workers had exited but _started stayed
+    True, so a second start() was a no-op and every subsequent submit()
+    future hung forever."""
+    pool = OffloadPool(n_threads=2)
+    pool.start()
+    assert pool.submit(lambda: 1).wait(timeout=5) == 1
+    first_threads = list(pool._threads)
+    pool.stop()
+    assert all(not t.is_alive() for t in first_threads)
+    pool.start()                                   # must spawn fresh workers
+    assert pool.submit(lambda: 2).wait(timeout=5) == 2
+    assert all(t.is_alive() for t in pool._threads)
+    assert not (set(pool._threads) & set(first_threads))
+    pool.stop()
+
+
+def test_offload_pool_stop_before_start_does_not_poison():
+    """Regression: stop() on a never-started pool enqueued None sentinels
+    that killed the workers the moment the pool later started."""
+    pool = OffloadPool(n_threads=2)
+    pool.stop()                                    # idempotent no-op
+    pool.stop()
+    pool.start()
+    # both workers must be serving, not sentinel-killed: run more jobs than
+    # one worker could if its sibling had eaten a stale sentinel and exited
+    futs = [pool.submit(lambda i=i: i * i) for i in range(8)]
+    assert [f.wait(timeout=5) for f in futs] == [i * i for i in range(8)]
+    assert sum(t.is_alive() for t in pool._threads) == 2
+    pool.stop()
+
+
+def test_offload_pool_drains_stale_sentinels_but_keeps_queued_work():
+    """A sentinel left over from a missed shutdown must be swallowed on
+    start(); real work queued while stopped must survive, in order."""
+    pool = OffloadPool(n_threads=1)
+    fut_before = pool.submit(lambda: "queued-while-stopped")
+    pool._q.put(None)                              # simulate stale poison
+    fut_after = pool.submit(lambda: "also-queued")
+    pool.start()
+    assert fut_before.wait(timeout=5) == "queued-while-stopped"
+    assert fut_after.wait(timeout=5) == "also-queued"
+    assert pool._threads[0].is_alive()             # sentinel did not kill it
+    pool.stop()
+
+
+def test_offload_pool_start_and_stop_are_idempotent():
+    pool = OffloadPool(n_threads=2)
+    pool.start()
+    threads = list(pool._threads)
+    pool.start()                                   # second start: no-op
+    assert pool._threads == threads
+    pool.stop()
+    pool.stop()                                    # second stop: no-op
+    # and no sentinel pile-up from the double stop: restart still works
+    pool.start()
+    assert pool.submit(lambda: "ok").wait(timeout=5) == "ok"
+    pool.stop()
+
+
+# ---------------------------------------------------------- FiberScheduler
+def test_fiber_scheduler_restarts_after_stop():
+    """Regression: start() did not reset the stop latch, so a restarted
+    scheduler's thread exited at its first idle check."""
+    s = FiberScheduler(app=None, name="restart")
+    s.start()
+    s.stop()
+    assert not s._thread.is_alive()
+    s.start()
+    try:
+        def body():
+            return "alive"
+            yield  # pragma: no cover - marks this as a generator
+        assert s.spawn_external(body()).wait(timeout=5) == "alive"
+    finally:
+        s.stop()
+
+
+# ------------------------------------------------------------- App lifecycle
+def _offload_square(svc, payload):
+    f = yield Offload(lambda x: x * x, (payload,))
+    v = yield Wait(f)
+    return v
+
+
+def _tiny_app(backend):
+    app = App(backend=backend)
+    app.add_service(ServiceSpec("svc", {"sq": _offload_square}, n_workers=2))
+    return app
+
+
+def test_app_stop_is_idempotent():
+    app = _tiny_app("fiber")
+    app.start()
+    app.stop()
+    app.stop()                                     # must not re-join/poison
+    app.start()                                    # and must not break restart
+    assert app.send("svc", "sq", 4).wait(timeout=10) == 16
+    app.stop()
+
+
+def test_app_start_is_idempotent():
+    app = _tiny_app("thread")
+    app.start()
+    n_offload = len(app.offload_pool._threads)
+    app.start()                                    # no duplicate workers
+    assert len(app.offload_pool._threads) == n_offload
+    assert app.send("svc", "sq", 3).wait(timeout=10) == 9
+    app.stop()
+
+
+def test_send_on_stopped_app_fails_fast():
+    """A send into a stopped app must resolve exceptionally at once — not
+    park a delivery in a dead executor's mailbox and hang blocking waiters."""
+    app = _tiny_app("fiber")
+    reply = app.send("svc", "sq", 2)               # never started
+    assert reply.done                              # fail-fast, no hang window
+    with pytest.raises(RuntimeError, match="not started"):
+        reply.wait(timeout=1)
+    with app:
+        assert app.send("svc", "sq", 2).wait(timeout=10) == 4
+    t0 = time.perf_counter()
+    reply = app.send("svc", "sq", 2)               # stopped again
+    with pytest.raises(RuntimeError, match="not started"):
+        reply.wait(timeout=5)
+    assert time.perf_counter() - t0 < 1.0          # failed fast, no timeout
+
+
+@pytest.mark.parametrize("backend", BACKEND_NAMES)
+def test_stop_start_stop_round_trip_resolves_offloads(backend):
+    """Context-manager re-entry (what the benchmark harnesses do when they
+    reuse an App) must serve identical results — offload futures resolved —
+    in both lives, on every backend."""
+    app = _tiny_app(backend)
+    with app:
+        first = [app.send("svc", "sq", i).wait(timeout=10) for i in range(6)]
+    with app:
+        second = [app.send("svc", "sq", i).wait(timeout=10) for i in range(6)]
+    assert first == second == [i * i for i in range(6)]
+
+
+def test_concurrent_offloads_survive_restart_cycles():
+    """Offload futures submitted in each life of the pool all resolve, even
+    across several stop/start cycles with work in flight."""
+    app = _tiny_app("fiber-batch-cq")
+    for cycle in range(3):
+        with app:
+            futs = [app.send("svc", "sq", i) for i in range(10)]
+            done = threading.Event()
+
+            def waiter():
+                for i, f in enumerate(futs):
+                    assert f.wait(timeout=10) == i * i
+                done.set()
+
+            t = threading.Thread(target=waiter)
+            t.start()
+            t.join(timeout=15)
+            assert done.is_set(), f"cycle {cycle}: offload futures unresolved"

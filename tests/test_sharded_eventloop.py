@@ -1,0 +1,185 @@
+"""ShardedEventLoopExecutor (event-loop-shard) tests.
+
+Sharding must be a pure placement decision: deterministic (the parity suite
+and trace replay depend on it), reasonably balanced over a sequential
+request stream, and invisible to handler semantics — each shard is a full
+single-threaded event loop and a request never migrates off its shard.
+"""
+import threading
+
+import pytest
+
+from repro.core import Future, Sleep, SpawnLocal, Wait, WaitAll
+from repro.core.eventloop import EventLoopExecutor, ShardedEventLoopExecutor
+
+
+# ------------------------------------------------------------ hash placement
+def test_shard_for_is_deterministic_and_in_range():
+    for n in (1, 2, 3, 4, 7):
+        for rid in range(256):
+            s = ShardedEventLoopExecutor.shard_for(rid, n)
+            assert 0 <= s < n
+            assert s == ShardedEventLoopExecutor.shard_for(rid, n)
+
+
+def test_shard_for_spreads_a_sequential_stream():
+    """Sequential request ids (the ticket stream) must cover every shard
+    without herding: no shard may take more than twice its fair share."""
+    for n in (2, 3, 4, 5, 8):
+        counts = [0] * n
+        total = 1024
+        for rid in range(total):
+            counts[ShardedEventLoopExecutor.shard_for(rid, n)] += 1
+        assert all(c > 0 for c in counts), (n, counts)
+        assert max(counts) <= 2 * total / n, (n, counts)
+
+
+def test_delivery_sequence_maps_to_same_shards_every_run():
+    """Two executors fed the same delivery sequence place every request on
+    the same shard — the determinism the parity cells rely on."""
+    def placements(n_deliver):
+        ex = ShardedEventLoopExecutor(app=None, name="det", n_workers=4)
+        seen = []
+        for i, shard in enumerate(ex._shards):
+            shard.deliver = lambda gen, reply, i=i: seen.append(i)
+        for _ in range(n_deliver):
+            ex.deliver(iter(()), Future())
+        return seen
+
+    first, second = placements(64), placements(64)
+    assert first == second
+    assert set(first) == {0, 1, 2, 3}          # every shard participates
+
+
+# ----------------------------------------------------------- loop semantics
+def _leaf(ran_on, lock, i):
+    with lock:
+        ran_on.append(threading.current_thread().name)
+    return i
+    yield  # pragma: no cover - marks this as a generator
+
+
+def test_requests_fan_across_shard_threads_but_never_migrate():
+    """Different requests land on different shard loops; a request's own
+    continuations (SpawnLocal fan-out) all stay on its shard thread."""
+    ex = ShardedEventLoopExecutor(app=None, name="fan", n_workers=4)
+    assert ex.n_shards == 4
+    lock = threading.Lock()
+    per_request_threads = []
+
+    def _handler():
+        ran_on = []
+        futs = []
+        for i in range(4):
+            f = yield SpawnLocal(_leaf, (ran_on, lock, i))
+            futs.append(f)
+        vals = yield WaitAll(futs)
+        with lock:
+            ran_on.append(threading.current_thread().name)
+            per_request_threads.append(set(ran_on))
+        return vals
+
+    ex.start()
+    try:
+        futs = []
+        for _ in range(16):
+            fut = Future()
+            ex.deliver(_handler(), fut)
+            futs.append(fut)
+        for f in futs:
+            assert f.wait(timeout=10) == list(range(4))
+    finally:
+        ex.stop()
+    # each request was pinned: its handler + all its spawns on ONE thread
+    for threads in per_request_threads:
+        assert len(threads) == 1, threads
+    all_threads = set().union(*per_request_threads)
+    assert len(all_threads) > 1, "all 16 requests herded onto one shard"
+    assert all(t.startswith("fan-shard") for t in all_threads)
+
+
+def test_single_shard_degenerates_to_plain_event_loop():
+    ex = ShardedEventLoopExecutor(app=None, name="solo", n_workers=1)
+    assert ex.n_shards == 1
+    assert isinstance(ex._shards[0], EventLoopExecutor)
+    ex.start()
+    try:
+        def one():
+            yield Sleep(0.001)
+            return "ok"
+        fut = Future()
+        ex.deliver(one(), fut)
+        assert fut.wait(timeout=5) == "ok"
+    finally:
+        ex.stop()
+
+
+def test_exception_propagates_through_a_shard():
+    ex = ShardedEventLoopExecutor(app=None, name="boom", n_workers=3)
+    ex.start()
+
+    def _boom():
+        yield Sleep(0.001)
+        raise ValueError("shard boom")
+
+    try:
+        futs = []
+        for _ in range(6):                 # hit several shards
+            fut = Future()
+            ex.deliver(_boom(), fut)
+            futs.append(fut)
+        for fut in futs:
+            with pytest.raises(ValueError, match="shard boom"):
+                fut.wait(timeout=5)
+    finally:
+        ex.stop()
+
+
+def test_parked_wait_resumes_via_owning_shard():
+    ex = ShardedEventLoopExecutor(app=None, name="park", n_workers=2)
+    ex.start()
+    gate = Future()
+    parked = threading.Event()
+
+    def _waiter():
+        parked.set()
+        val = yield Wait(gate)
+        return val + 1
+
+    try:
+        fut = Future()
+        ex.deliver(_waiter(), fut)
+        assert parked.wait(timeout=5)
+        gate.set_result(41)
+        assert fut.wait(timeout=5) == 42
+    finally:
+        ex.stop()
+
+
+# ------------------------------------------------------------------- stats
+def test_stats_aggregate_shards_and_report_width():
+    ex = ShardedEventLoopExecutor(app=None, name="st", n_workers=4)
+
+    def _fan(n):
+        futs = []
+        for i in range(n):
+            f = yield SpawnLocal(_leaf, ([], threading.Lock(), i))
+            futs.append(f)
+        vals = yield WaitAll(futs)
+        return vals
+
+    ex.start()
+    try:
+        futs = []
+        for _ in range(8):
+            fut = Future()
+            ex.deliver(_fan(3), fut)
+            futs.append(fut)
+        for f in futs:
+            assert f.wait(timeout=10) == list(range(3))
+    finally:
+        ex.stop()
+    st = ex.stats()
+    assert st.shards == 4                       # gauge: configured width
+    assert st.spawns == 8 * 3 == ex.spawns      # summed across shards
+    assert st.switches >= 8 * 4                 # handlers + leaves resumed
