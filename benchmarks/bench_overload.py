@@ -1,0 +1,112 @@
+"""Goodput past the peak: overload survival across the backend matrix.
+
+The paper's protocol stops at the peak — "increase the request rate until
+processed requests per second does not increase anymore".  This table asks
+what happens *past* it: every app × backend cell is driven at a fixed
+multiple of its own measured peak with per-request deadlines enforced, and
+scored on
+
+* **goodput** — completions within the deadline per second (raw rps past
+  the peak rewards finishing requests nobody is still waiting for), and
+* **recovery time** — after the overload window, how long until a
+  comfortably-sustainable probe rate is served at healthy goodput again
+  (how fast the backlog drains).
+
+Each cell runs with the full resilience layer (``repro.core.resilience``):
+per-hop deadline propagation, budgeted retries, per-edge circuit breakers.
+The breakers-on-vs-off A/B comparison (interleaved paired rounds, same
+runner weather) lives in ``bench_smoke._overload_probe`` so CI re-measures
+it every run.
+
+Rows follow the harness convention (``name,us_per_call,derived``): goodput
+rows report ``1e6 / goodput`` in the us column with ``goodput_rps=`` in
+derived; recovery rows report the recovery time in us with ``s=`` derived
+(``inf`` recovery is reported as 0 goodput-style sentinel ``recovered=no``).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.apps import (APP_NAMES, BENCH_BACKENDS, build_bench_app,
+                        get_app_def)
+from repro.core import (ResiliencePolicy, RetryPolicy, find_peak_throughput,
+                        run_overload, warmup)
+
+MULTIPLE = 3.0        # overload rate = MULTIPLE x the cell's measured peak
+WORKLOAD = "mixed"
+
+
+def _policy(deadline: float) -> ResiliencePolicy:
+    return ResiliencePolicy(deadline=deadline, retry=RetryPolicy(),
+                            breakers=True)
+
+
+def measure_overload(app_name: str, backend: str, *,
+                     workload: str = WORKLOAD, multiple: float = MULTIPLE,
+                     peak_duration: float = 0.4, duration: float = 1.0,
+                     recovery_timeout: float = 5.0,
+                     verbose: bool = False):
+    """One cell: quick peak ramp, then ``multiple``x overload + recovery."""
+    d = get_app_def(app_name)
+    factory = d.make_request_factory(workload)
+    deadline = d.deadlines.get(workload, 0.08)
+    # peak measured on the app under test — the resilience-configured one.
+    # A policy with breakers/retries routes nested hops through App.send
+    # (per-edge accounting; tier-1 inlining steps aside), so its peak is
+    # genuinely lower than the plain app's: overloading at a multiple of
+    # the *plain* peak would start several-x past this system's capacity
+    # and the recovery probe would never be sustainable.  3x *its own*
+    # peak is the protocol; the plain-vs-policy capacity gap is quoted by
+    # the ordinary peak_throughput table.
+    with build_bench_app(app_name, backend,
+                         resilience=_policy(deadline)) as app:
+        warmup(app, factory)
+        pk = find_peak_throughput(app, factory, start_rate=200, growth=1.7,
+                                  duration=peak_duration, max_trials=10,
+                                  verbose=verbose)
+    # fresh app for the overload phase: ramp-phase breaker state and
+    # counters must not leak into the reported cell
+    with build_bench_app(app_name, backend,
+                         resilience=_policy(deadline)) as app:
+        warmup(app, factory)
+        res = run_overload(app, factory, peak_rps=pk.peak_rps,
+                           deadline=deadline, multiple=multiple,
+                           duration=duration,
+                           recovery_timeout=recovery_timeout,
+                           verbose=verbose)
+        stats = app.backend_stats()
+    return res, stats
+
+
+def run(quick: bool = False,
+        apps: Optional[Sequence[str]] = None) -> List[str]:
+    peak_duration = 0.25 if quick else 0.4
+    duration = 0.5 if quick else 1.0
+    recovery_timeout = 3.0 if quick else 5.0
+    apps = list(apps) if apps else list(APP_NAMES)
+    rows: List[str] = []
+    for app_name in apps:
+        for backend in BENCH_BACKENDS:
+            res, stats = measure_overload(
+                app_name, backend, peak_duration=peak_duration,
+                duration=duration, recovery_timeout=recovery_timeout)
+            g = res.overload.goodput_rps
+            derived = (f"goodput_rps={g:.0f};peak_rps={res.peak_rps:.0f};"
+                       f"offered_rps={res.overload_rps:.0f};"
+                       f"to={stats.timeouts};rtry={stats.retries};"
+                       f"brko={stats.breaker_opens};rej={stats.rejections}")
+            rows.append(f"overload/{app_name}/{WORKLOAD}/{backend}/goodput,"
+                        f"{1e6 / max(g, 1e-9):.2f},{derived}")
+            rec = res.recovery_time if res.recovered else float("inf")
+            rec_derived = (f"s={rec:.3f};recovered="
+                           f"{'yes' if res.recovered else 'no'};"
+                           f"probes={len(res.probes)}")
+            rec_us = rec * 1e6 if res.recovered else 0.0
+            rows.append(f"overload/{app_name}/{WORKLOAD}/{backend}/recovery,"
+                        f"{rec_us:.0f},{rec_derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -41,8 +41,14 @@ sequential joins) and ``event-loop-shard`` vs ``event-loop`` on
 hotelreservation's CPU-heavy reserve path (sharding must lift the
 Compute-serialization ceiling).
 
+It also runs one **overload probe** (breakers-on vs breakers-off on
+socialnetwork at ``OVERLOAD_MULTIPLE``x the measured peak, scored on
+goodput — see ``_overload_probe``); its goodput records enter the trend
+gate with their own wide ``overload`` noise band.
+
 The process exits non-zero iff a cell errors or parity is violated — the
-steal/design probes and the raw numbers are artifact data, not gates.
+steal/design/overload probes and the raw numbers are artifact data, not
+gates.
 
 Usage (what .github/workflows/ci.yml runs):
     PYTHONPATH=src python -m benchmarks.run --smoke --json smoke.json \
@@ -134,18 +140,30 @@ def _paired_probe(app_name: str, base: str, cand: str, *,
                   rate: float = PROBE_RATE,
                   max_outstanding: int = PROBE_MAX_OUTSTANDING,
                   max_rounds: int = PROBE_MAX_ROUNDS,
-                  build=None) -> Dict[str, Any]:
-    """Interleaved paired peak probe of two backends on one app.
+                  build=None, metric=None,
+                  trial_kwargs: Optional[Dict[str, Any]] = None
+                  ) -> Dict[str, Any]:
+    """Interleaved paired peak probe of two configurations on one app.
 
     The repo's A/B discipline for backend claims (see ROADMAP): trials are
-    interleaved (alternating order each round) so both backends see the
-    same runner weather, the comparison is peak-vs-peak (best across
-    rounds), and the probe stops early once ``cand``'s best reaches
-    ``target`` x ``base``'s best — a generous round budget only costs wall
-    time when the claim is losing.
+    interleaved (alternating order each round) so both sides see the same
+    runner weather, the comparison is peak-vs-peak (best across rounds),
+    and the probe stops early once ``cand``'s best reaches ``target`` x
+    ``base``'s best — a generous round budget only costs wall time when the
+    claim is losing.
+
+    ``base``/``cand`` are backend names by default, but any labels work
+    with a custom ``build(label)`` (e.g. ``breakers-on``/``breakers-off``
+    for the overload probe).  ``metric`` picks the scored TrialResult field
+    (default achieved rps); ``trial_kwargs`` is forwarded to ``run_trial``
+    (e.g. ``deadline``/``enforce_deadline`` for goodput probes).
     """
     d = get_app_def(app_name)
     factory = d.make_request_factory(workload)
+    if metric is None:
+        def metric(tr):
+            return tr.achieved_rps
+    kwargs = dict(trial_kwargs or {})
     if build is None:
         def build(b):  # canonical benchmark sizing for each backend family
             from repro.apps import build_bench_app
@@ -164,8 +182,8 @@ def _paired_probe(app_name: str, base: str, cand: str, *,
             for b in order:
                 tr = run_trial(apps[b], factory, rate, PROBE_DURATION,
                                seed=20 + i, drain=1.0,
-                               max_outstanding=max_outstanding)
-                best[b] = max(best[b], tr.achieved_rps)
+                               max_outstanding=max_outstanding, **kwargs)
+                best[b] = max(best[b], metric(tr))
             if best[base] > 0 and best[cand] >= target * best[base]:
                 break
         stats = {b: apps[b].backend_stats() for b in best}
@@ -255,6 +273,58 @@ def _design_probes(app_name: str,
     return out
 
 
+# Overload probe (PR 6): breakers-on vs breakers-off at a fixed multiple of
+# the measured peak, scored on GOODPUT (completions within the per-request
+# deadline / s) rather than raw rps — raw throughput past the peak rewards
+# completing requests nobody is still waiting for.  Both sides run the same
+# resilience policy (deadlines + budgeted retries); only the per-edge
+# circuit breakers differ, so the ratio isolates what fail-fast buys (or
+# costs) when the app is drowning.  Probe data, not a gate — a measured
+# loss is recorded honestly (see ROADMAP), and the goodput records feed the
+# cross-run trend gate with their own wide "overload" noise band.
+OVERLOAD_PROBE_APP = "socialnetwork"
+OVERLOAD_PROBE_BACKEND = "fiber"
+OVERLOAD_MULTIPLE = 3.0
+
+
+def _overload_probe(max_rounds: int = PROBE_MAX_ROUNDS) -> Dict[str, Any]:
+    from repro.apps import build_bench_app
+    from repro.core import (ResiliencePolicy, RetryPolicy,
+                            find_peak_throughput)
+    app_name = OVERLOAD_PROBE_APP
+    d = get_app_def(app_name)
+    deadline = d.deadlines.get("mixed", 0.08)
+    factory = d.make_request_factory("mixed")
+    # cheap peak ramp on a plain (no-resilience) app: the overload rate is
+    # a multiple of what the healthy app can actually do on this runner
+    with build_bench_app(app_name, OVERLOAD_PROBE_BACKEND) as app:
+        warmup(app, factory)
+        pk = find_peak_throughput(app, factory, start_rate=200, growth=1.7,
+                                  duration=0.3, max_trials=10)
+    rate = OVERLOAD_MULTIPLE * pk.peak_rps
+
+    def build(label: str):
+        pol = ResiliencePolicy(deadline=deadline, retry=RetryPolicy(),
+                               breakers=(label == "breakers-on"))
+        return build_bench_app(app_name, OVERLOAD_PROBE_BACKEND,
+                               resilience=pol)
+
+    probe = _paired_probe(app_name, "breakers-off", "breakers-on",
+                          rate=rate, max_outstanding=1024,
+                          max_rounds=max_rounds, build=build,
+                          metric=lambda tr: tr.goodput_rps,
+                          trial_kwargs=dict(deadline=deadline,
+                                            enforce_deadline=True,
+                                            settle=0.5))
+    on = probe.pop("_stats")["breakers-on"]
+    probe.update(backend=OVERLOAD_PROBE_BACKEND, metric="goodput_rps",
+                 peak_rps=round(pk.peak_rps, 1),
+                 overload_rps=round(rate, 1), deadline_s=deadline,
+                 breaker_opens=on.breaker_opens, timeouts=on.timeouts,
+                 retries=on.retries, rejections=on.rejections)
+    return probe
+
+
 def _rpc_path_records(out: Dict[str, Any]) -> None:
     """Per-RPC dispatch cost trend line: one cheap paired micro trial per
     backend (see bench_rpc_path.py), recorded like any other cell so
@@ -320,6 +390,7 @@ def run_smoke(apps: Optional[Sequence[str]] = None,
         "parity": {},
         "steal_probe": {},
         "design_probes": {},
+        "overload_probe": {},
         "failures": [],
     }
     for app_name in apps:
@@ -423,6 +494,43 @@ def run_smoke(apps: Optional[Sequence[str]] = None,
                       f"{cand}={p['cand_peak_rps']} "
                       f"ratio={p['ratio']} (target {p['target']}) "
                       f"ok={p['ok']} (rounds={p['rounds']})", flush=True)
+    if steal_probe and OVERLOAD_PROBE_APP in apps:
+        # one paired overload cell per run (probe data, not a gate); its
+        # goodput records feed trend.py with the wide "overload" noise band
+        try:
+            probe = _overload_probe(max_rounds=probe_rounds)
+        except Exception as exc:  # noqa: BLE001 - keep the artifact
+            probe = {"status": "error", "error": repr(exc)}
+            out["failures"].append(f"overload_probe: {exc!r}")
+        out["overload_probe"] = probe
+        if "cand_peak_rps" in probe:
+            for label, value in (("breakers-off", probe["base_peak_rps"]),
+                                 ("breakers-on", probe["cand_peak_rps"])):
+                out["records"].append({
+                    "key": f"overload/{OVERLOAD_PROBE_APP}/"
+                           f"{OVERLOAD_PROBE_BACKEND}/{label}",
+                    "app": OVERLOAD_PROBE_APP,
+                    "backend": OVERLOAD_PROBE_BACKEND,
+                    "metric": "goodput_rps",
+                    "unit": "rps",
+                    "direction": "higher",
+                    "noise": "overload",
+                    # goodput past the peak is bimodal at smoke scale (one
+                    # breaker trip erases half a short window) — surface
+                    # out-of-band moves loudly, never fail the run on them
+                    "gate": "warn-only",
+                    "value": value,
+                    "errors": 0,
+                })
+            print(f"overload probe {OVERLOAD_PROBE_APP} "
+                  f"[{OVERLOAD_PROBE_BACKEND} @ {probe['overload_rps']}rps"
+                  f"={OVERLOAD_MULTIPLE}x peak]: goodput "
+                  f"breakers-off={probe['base_peak_rps']} "
+                  f"breakers-on={probe['cand_peak_rps']} "
+                  f"ratio={probe['ratio']} ok={probe['ok']} "
+                  f"(opens={probe['breaker_opens']} "
+                  f"to={probe['timeouts']} rtry={probe['retries']}, "
+                  f"rounds={probe['rounds']})", flush=True)
     _rpc_path_records(out)
     if json_path:
         with open(json_path, "w") as f:

@@ -7,8 +7,10 @@ Tables:
   2. rpc_path         — per-RPC dispatch cost, zero-handoff fast path on/off
   3. peak_throughput  — paper Figure 1 (peak rps, app x workload x backend)
   4. p99_latency      — paper Figure 2 (p99 vs offered rate)
-  5. serving          — beyond-paper: LLM serving engine, thread vs fiber
-  6. roofline         — dry-run roofline terms (reads launch/dryrun results)
+  5. overload         — beyond-peak goodput + time-to-recover, resilience
+                        layer on (deadlines/retries/breakers; bench_overload)
+  6. serving          — beyond-paper: LLM serving engine, thread vs fiber
+  7. roofline         — dry-run roofline terms (reads launch/dryrun results)
 
 The microservice tables (2, 3) sweep every app in ``repro.apps.REGISTRY``
 crossed with every backend in ``repro.apps.BENCH_BACKENDS``; restrict with
@@ -119,6 +121,10 @@ def main(argv=None) -> None:
                                                        apps=apps)))
     benches.append(("p99_latency",
                     lambda quick: bench_latency.run(quick=quick, apps=apps)))
+    from . import bench_overload
+    benches.append(("overload",
+                    lambda quick: bench_overload.run(quick=quick,
+                                                     apps=apps)))
     try:
         from . import bench_serving
         benches.append(("serving", lambda quick: bench_serving.run(quick=quick)))

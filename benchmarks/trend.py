@@ -88,6 +88,15 @@ LOWER_MAX_BAND = 1.00
 # regression (losing inline execution) is a 40x move, far outside it.
 MICRO_NOISE_FLOOR = 1.00
 MICRO_MAX_BAND = 1.50
+# goodput-past-peak cells (noise "overload", direction higher): the metric
+# is by construction measured in a saturated, backlogged regime — the one
+# regime where wall-clock weather on a shared runner moves the number most
+# (observed several-x run-over-run on identical code: whether a breaker
+# trips inside the short window is effectively a coin flip).  The cells
+# are additionally tagged ``gate: warn-only`` by bench_smoke, so these
+# clamps only shape when the warning is worded as out-of-band.
+OVERLOAD_NOISE_FLOOR = 0.50
+OVERLOAD_MAX_BAND = 0.90
 
 # full-bench CSV prefixes ingested by --from-csv; ratio rows (derived "x",
 # "x_vs_noinline") and error rows are skipped
@@ -169,6 +178,12 @@ def compare(current: Dict[str, Any], baseline: Dict[str, Any], *,
             lo, cap = ((MICRO_NOISE_FLOOR, MICRO_MAX_BAND) if micro
                        else (LOWER_NOISE_FLOOR, LOWER_MAX_BAND))
             band = noise_band(cur, base, floor=max(floor, lo), cap=cap)
+        elif cur.get("noise") == "overload":
+            # goodput measured past the peak: saturated-regime numbers
+            # breathe more than rps-at-fixed-rate (see constants above)
+            band = noise_band(cur, base,
+                              floor=max(floor, OVERLOAD_NOISE_FLOOR),
+                              cap=OVERLOAD_MAX_BAND)
         else:
             band = noise_band(cur, base, floor=floor)
         base_v = float(base["value"])

@@ -137,11 +137,14 @@ def _reserve(svc: Any, payload: Any):
 def build_hotelreservation(backend: str = "fiber", *, n_workers: int = 2,
                            frontend_workers: int = 4,
                            net_latency: float = 0.0,
-                           overrides: Dict[str, str] | None = None) -> App:
+                           overrides: Dict[str, str] | None = None,
+                           resilience: Any = None) -> App:
     """Wire the HotelReservation app (per-service backend ``overrides``
-    support the paper's one-service-at-a-time migration experiment)."""
+    support the paper's one-service-at-a-time migration experiment;
+    ``resilience`` is an optional :class:`repro.core.ResiliencePolicy`)."""
     overrides = overrides or {}
-    app = App(backend=backend, net_latency=net_latency)
+    app = App(backend=backend, net_latency=net_latency,
+              resilience=resilience)
 
     def add(name: str, handlers: Dict[str, Any], workers: int) -> None:
         app.add_service(ServiceSpec(
@@ -163,6 +166,11 @@ def build_hotelreservation(backend: str = "fiber", *, n_workers: int = 2,
 
 # ------------------------------------------------------------ request mixes
 WORKLOADS = ("reserve", "search", "recommend", "mixed")
+
+# Per-workload end-to-end deadline defaults (seconds) for the overload
+# harness — generous multiples of the healthy p99 (see socialnetwork).
+DEADLINES = {"reserve": 0.08, "search": 0.06, "recommend": 0.05,
+             "mixed": 0.08}
 
 # DSB's hotel mix is search-dominated with rare writes.
 _MIX = (("search", 0.60), ("recommend", 0.25), ("reserve", 0.15))

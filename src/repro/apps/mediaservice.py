@@ -137,11 +137,14 @@ def _read_user(svc: Any, payload: Any):
 def build_mediaservice(backend: str = "fiber", *, n_workers: int = 2,
                        frontend_workers: int = 4,
                        net_latency: float = 0.0,
-                       overrides: Dict[str, str] | None = None) -> App:
+                       overrides: Dict[str, str] | None = None,
+                       resilience: Any = None) -> App:
     """Wire the MediaService app (per-service backend ``overrides`` support
-    the paper's one-service-at-a-time migration experiment)."""
+    the paper's one-service-at-a-time migration experiment; ``resilience``
+    is an optional :class:`repro.core.ResiliencePolicy`)."""
     overrides = overrides or {}
-    app = App(backend=backend, net_latency=net_latency)
+    app = App(backend=backend, net_latency=net_latency,
+              resilience=resilience)
 
     def add(name: str, handlers: Dict[str, Any], workers: int) -> None:
         app.add_service(ServiceSpec(
@@ -165,6 +168,11 @@ def build_mediaservice(backend: str = "fiber", *, n_workers: int = 2,
 
 # ------------------------------------------------------------ request mixes
 WORKLOADS = ("compose", "read_movie", "read_user", "mixed")
+
+# Per-workload end-to-end deadline defaults (seconds) for the overload
+# harness — generous multiples of the healthy p99 (see socialnetwork).
+DEADLINES = {"compose": 0.08, "read_movie": 0.05, "read_user": 0.05,
+             "mixed": 0.08}
 
 # movie-review traffic skews heavily toward reading a movie's reviews.
 _MIX = (("compose", 0.10), ("read_movie", 0.65), ("read_user", 0.25))

@@ -7,7 +7,7 @@ means registering one :class:`AppDef` here.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Tuple
 
 from ..core import App, BACKEND_NAMES
@@ -31,6 +31,8 @@ class AppDef:
     workloads: Tuple[str, ...]
     frontend: str
     description: str = ""
+    # workload -> default end-to-end deadline (s) for the overload harness
+    deadlines: Dict[str, float] = field(default_factory=dict)
 
 
 REGISTRY: Dict[str, AppDef] = {
@@ -41,6 +43,7 @@ REGISTRY: Dict[str, AppDef] = {
         workloads=tuple(socialnetwork.WORKLOADS),
         frontend="frontend",
         description="deep graph, nested fan-out (ComposePost: 7+2 carriers)",
+        deadlines=dict(socialnetwork.DEADLINES),
     ),
     "hotelreservation": AppDef(
         name="hotelreservation",
@@ -49,6 +52,7 @@ REGISTRY: Dict[str, AppDef] = {
         workloads=tuple(hotelreservation.WORKLOADS),
         frontend=hotelreservation.FRONTEND,
         description="shallow graph, 2-wide joins, CPU-heavy auth leaf",
+        deadlines=dict(hotelreservation.DEADLINES),
     ),
     "mediaservice": AppDef(
         name="mediaservice",
@@ -57,6 +61,7 @@ REGISTRY: Dict[str, AppDef] = {
         workloads=tuple(mediaservice.WORKLOADS),
         frontend=mediaservice.FRONTEND,
         description="widest single-service fan-out (ComposeReview: 7 carriers)",
+        deadlines=dict(mediaservice.DEADLINES),
     ),
 }
 

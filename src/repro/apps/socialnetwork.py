@@ -151,14 +151,17 @@ def _read_user(svc: Any, payload: Any):
 def build_socialnetwork(backend: str = "fiber", *, n_workers: int = 2,
                         frontend_workers: int = 4,
                         net_latency: float = 0.0,
-                        overrides: Dict[str, str] | None = None) -> App:
+                        overrides: Dict[str, str] | None = None,
+                        resilience: Any = None) -> App:
     """Wire the SocialNetwork app.
 
     ``overrides`` maps service name -> backend, supporting the paper's
-    one-service-at-a-time migration experiment.
+    one-service-at-a-time migration experiment.  ``resilience`` is an
+    optional :class:`repro.core.ResiliencePolicy` for overload experiments.
     """
     overrides = overrides or {}
-    app = App(backend=backend, net_latency=net_latency)
+    app = App(backend=backend, net_latency=net_latency,
+              resilience=resilience)
 
     def add(name: str, handlers: Dict[str, Any], workers: int) -> None:
         app.add_service(ServiceSpec(
@@ -184,6 +187,12 @@ def build_socialnetwork(backend: str = "fiber", *, n_workers: int = 2,
 
 # ------------------------------------------------------------ request mixes
 WORKLOADS = ("compose", "read_home", "read_user", "mixed")
+
+# Per-workload end-to-end deadline defaults (seconds) for the overload
+# harness: generous multiples of the healthy p99 so they only bite when the
+# app is genuinely drowning, not on ordinary tail noise.
+DEADLINES = {"compose": 0.08, "read_home": 0.05, "read_user": 0.05,
+             "mixed": 0.08}
 
 # the paper's "mixed" generator combines the three request types; DSB's
 # default mix is read-heavy.

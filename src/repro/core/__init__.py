@@ -7,18 +7,22 @@ execution backend per service.
 from .effects import (AsyncRpc, Compute, Offload, Sleep, SpawnLocal, Wait,
                       WaitAll, sync_rpc)
 from .executor import BACKEND_FACTORIES, BACKEND_NAMES, make_executor
-from .future import CompletedFuture, Future
-from .loadgen import (RequestFactory, find_peak_throughput, latency_sweep,
-                      run_trial, warmup)
+from .future import CompletedFuture, Future, Once
+from .loadgen import (OverloadResult, RequestFactory, find_peak_throughput,
+                      latency_sweep, run_overload, run_trial, warmup)
 from .metrics import BackendStats, LatencyRecorder, PeakResult, TrialResult
+from .resilience import (CircuitBreaker, CircuitOpenError, DeadlineExceeded,
+                         Rejected, ResiliencePolicy, RetryPolicy)
 from .service import App, Service, ServiceSpec
 
 __all__ = [
-    "App", "Service", "ServiceSpec", "Future", "CompletedFuture",
+    "App", "Service", "ServiceSpec", "Future", "CompletedFuture", "Once",
     "AsyncRpc", "Wait", "WaitAll", "Sleep", "Compute", "Offload",
     "SpawnLocal", "sync_rpc",
     "BACKEND_FACTORIES", "BACKEND_NAMES", "make_executor",
     "run_trial", "find_peak_throughput", "latency_sweep", "warmup",
-    "RequestFactory",
+    "run_overload", "OverloadResult", "RequestFactory",
     "LatencyRecorder", "TrialResult", "PeakResult",
+    "DeadlineExceeded", "CircuitOpenError", "Rejected",
+    "RetryPolicy", "CircuitBreaker", "ResiliencePolicy",
 ]

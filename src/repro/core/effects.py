@@ -31,7 +31,7 @@ SpawnLocal(genfn, *args)
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, List, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 
 class Effect:
@@ -43,6 +43,11 @@ class AsyncRpc(Effect):
     dest: str
     method: str
     payload: Any = None
+    # Absolute ``time.monotonic()`` deadline for this call, or None.  The
+    # interpreter tightens it against the calling request's own inherited
+    # deadline and propagates the result downstream (each hop re-checks, so
+    # an expired request fails fast instead of queueing dead work).
+    deadline: Optional[float] = None
 
 
 @dataclass

@@ -61,12 +61,21 @@ from typing import Any, Generator, List, Optional, Tuple
 from .calibrate import burn
 from .effects import (AsyncRpc, Compute, Offload, Sleep, SpawnLocal, Wait,
                       WaitAll)
-from .future import CompletedFuture, Future
+from .future import CompletedFuture, Future, Once
 from .metrics import BackendStats
+from .resilience import DeadlineExceeded, min_deadline
 from .timers import TimerWheel
 
 # a parked continuation resumes with ("send", value) or ("throw", exc)
 Resume = Optional[Tuple[str, Any]]
+
+# Tag for deadline entries on the timer wheel.  A parked continuation with a
+# deadline arms ``(_EL_DEADLINE, claim, gen, fut, deadline)`` at its expiry;
+# the loop intercepts these in ``pop_due`` (everything else on the wheel is
+# an ordinary ready continuation).  The ``claim`` (a ``Once``) is shared
+# with the park's resume callback, so exactly one of {resolution, expiry}
+# resumes the generator — the race is settled by a ticket, not a lock.
+_EL_DEADLINE = object()
 
 
 class EventLoopExecutor:
@@ -90,6 +99,9 @@ class EventLoopExecutor:
         self._timers = TimerWheel()    # owner-thread-only
         self._stop = False
         self._thread: Optional[threading.Thread] = None
+        # ambient deadline of the continuation the loop is currently
+        # driving (owner thread only; saved/restored around inline drives)
+        self._cur_deadline: Optional[float] = None
         # --- instrumentation (see metrics.BackendStats) ------------------
         self.spawns = 0            # async-call continuations created
         self.switches = 0          # continuations resumed by the loop
@@ -115,21 +127,24 @@ class EventLoopExecutor:
         if self._thread is not None:
             self._thread.join(timeout=5.0)
 
-    def deliver(self, gen: Generator, reply: Future) -> None:
-        self._inject(gen, reply, None)
+    def deliver(self, gen: Generator, reply: Future,
+                deadline: Optional[float] = None) -> None:
+        self._inject(gen, reply, None, deadline)
 
     # ------------------------------------------------------------ injection
-    def _inject(self, gen: Generator, fut: Future, resume: Resume) -> None:
+    def _inject(self, gen: Generator, fut: Future, resume: Resume,
+                deadline: Optional[float] = None) -> None:
         with self._cond:
-            self._inbox.append((gen, fut, resume))
+            self._inbox.append((gen, fut, resume, deadline))
             depth = len(self._inbox) + len(self._run)
             if depth > self.queue_depth_hwm:
                 self.queue_depth_hwm = depth
             self._cond.notify()
 
-    def _push_local(self, gen: Generator, fut: Future) -> None:
+    def _push_local(self, gen: Generator, fut: Future,
+                    deadline: Optional[float] = None) -> None:
         """Owner thread only: no lock, no wakeup — the loop is already awake."""
-        self._run.append((gen, fut, None))
+        self._run.append((gen, fut, None, deadline))
         depth = len(self._run) + len(self._inbox)
         if depth > self.queue_depth_hwm:
             self.queue_depth_hwm = depth
@@ -149,15 +164,32 @@ class EventLoopExecutor:
                     while self._inbox:
                         self._run.append(self._inbox.popleft())
             for cont in self._timers.pop_due(time.monotonic()):
+                if cont and cont[0] is _EL_DEADLINE:
+                    _, claim, gen, fut, deadline = cont
+                    if claim.claim():  # expiry beat the resolution callback
+                        self._count_timeout()
+                        self._run.append(
+                            (gen, fut,
+                             ("throw", DeadlineExceeded(
+                                 "deadline expired while parked")),
+                             deadline))
+                    continue  # claim lost: the resolution already resumed it
                 self._run.append(cont)
             if self._run:
-                gen, fut, resume = self._run.popleft()
+                gen, fut, resume, deadline = self._run.popleft()
                 self.switches += 1
-                self._step(gen, fut, resume)
+                self._step(gen, fut, resume, deadline)
+
+    def _count_timeout(self) -> None:
+        app = getattr(self, "app", None)
+        if app is not None:
+            app._res_stats.timeout()
 
     # ---------------------------------------------------- continuation step
-    def _step(self, gen: Generator, fut: Future, resume: Resume) -> None:
+    def _step(self, gen: Generator, fut: Future, resume: Resume,
+              deadline: Optional[float] = None) -> None:
         """Drive one continuation until it parks or finishes."""
+        self._cur_deadline = deadline
         send_value: Any = None
         throw_exc: Optional[BaseException] = None
         if resume is not None:
@@ -166,6 +198,12 @@ class EventLoopExecutor:
                 throw_exc = payload
             else:
                 send_value = payload
+        if (deadline is not None and throw_exc is None
+                and time.monotonic() >= deadline):
+            # dequeue check: the continuation sat in the run queue past its
+            # deadline — fail it now instead of burning the loop on dead work
+            self._count_timeout()
+            throw_exc = DeadlineExceeded("deadline expired in run queue")
         while True:
             try:
                 if throw_exc is not None:
@@ -194,13 +232,11 @@ class EventLoopExecutor:
                     except BaseException as exc:
                         send_value, throw_exc = None, exc
                     continue
-                self._park(gen, fut, eff, waits)
+                self._park(gen, fut, eff, waits, deadline)
                 return
 
             if isinstance(eff, Sleep):
-                self._timers.push(
-                    time.monotonic() + max(eff.seconds, 0.0),
-                    (gen, fut, ("send", None)))
+                self._sleep(gen, fut, eff.seconds, deadline)
                 return
 
             try:
@@ -208,6 +244,18 @@ class EventLoopExecutor:
                 throw_exc = None
             except BaseException as exc:
                 throw_exc = exc
+
+    def _sleep(self, gen: Generator, fut: Future, seconds: float,
+               deadline: Optional[float]) -> None:
+        """Timer-park a sleeping continuation, truncated at its deadline."""
+        wake = time.monotonic() + max(seconds, 0.0)
+        if deadline is not None and deadline <= wake:
+            # the sleep outlives the deadline: wake at the deadline with the
+            # expiry instead of completing a doomed sleep first
+            self._timers.push(deadline,
+                              (_EL_DEADLINE, Once(), gen, fut, deadline))
+            return
+        self._timers.push(wake, (gen, fut, ("send", None), deadline))
 
     def _classify(self, fut: Future) -> None:
         """fast = resolved without a kernel Condition ever materializing."""
@@ -218,20 +266,30 @@ class EventLoopExecutor:
 
     def _interpret(self, eff: Any) -> Any:
         if isinstance(eff, AsyncRpc):
+            dl = min_deadline(eff.deadline, self._cur_deadline)
+            if dl is not None and time.monotonic() >= dl:
+                # hop check at submission: dead calls never enter the queue
+                self._count_timeout()
+                raise DeadlineExceeded(
+                    f"rpc {eff.dest}.{eff.method}: deadline expired")
             app = self.app
             if app is not None and app.net_latency == 0 \
                     and app.inline_budget > 0:
                 # zero-handoff fast path: inline the cooperative callee,
                 # else elide the carrier (the reply future IS the result —
-                # see FiberScheduler._interpret for the two tiers)
-                fut = self._try_inline(eff, app)
+                # see FiberScheduler._interpret for the two tiers).  Inline
+                # is skipped when the policy needs per-edge accounting.
+                fut = (self._try_inline(eff, app, dl)
+                       if app._inline_rpc_ok else None)
                 if fut is not None:
                     return fut
-                return app.send(eff.dest, eff.method, eff.payload)
+                return app.send(eff.dest, eff.method, eff.payload,
+                                deadline=dl)
             fut = Future()
             self.spawns += 1
             self._push_local(
-                self.app.rpc_carrier(eff.dest, eff.method, eff.payload), fut)
+                self.app.rpc_carrier(eff.dest, eff.method, eff.payload, dl),
+                fut, dl)
             return fut
 
         if isinstance(eff, Compute):
@@ -244,13 +302,14 @@ class EventLoopExecutor:
         if isinstance(eff, SpawnLocal):
             fut = Future()
             self.spawns += 1
-            self._push_local(eff.genfn(*eff.args), fut)
+            self._push_local(eff.genfn(*eff.args), fut, self._cur_deadline)
             return fut
 
         raise TypeError(f"Unknown effect: {eff!r}")
 
     # ------------------------------------------------ zero-handoff fast path
-    def _try_inline(self, eff: Any, app: Any) -> Optional[Future]:
+    def _try_inline(self, eff: Any, app: Any,
+                    deadline: Optional[float] = None) -> Optional[Future]:
         """Same-carrier call inlining on the loop thread; see
         FiberScheduler._try_inline for the contract."""
         if self._inline_depth >= app.inline_budget:
@@ -266,12 +325,16 @@ class EventLoopExecutor:
         self._inline_depth += 1
         if self._inline_depth > self.inline_depth_hwm:
             self.inline_depth_hwm = self._inline_depth
+        prev_deadline = self._cur_deadline
+        self._cur_deadline = deadline  # callee's hops tighten against it
         try:
-            return self._drive_inline(handler(svc, eff.payload))
+            return self._drive_inline(handler(svc, eff.payload), deadline)
         finally:
+            self._cur_deadline = prev_deadline
             self._inline_depth -= 1
 
-    def _drive_inline(self, gen: Generator) -> Future:
+    def _drive_inline(self, gen: Generator,
+                      deadline: Optional[float] = None) -> Future:
         """Run an inlined callee up to its first suspension point: a
         CompletedFuture when it never suspends, else the remainder parks as
         an ordinary continuation of this loop."""
@@ -305,15 +368,13 @@ class EventLoopExecutor:
                     continue
                 fut = Future()
                 self.spawns += 1  # the remainder becomes a continuation,
-                self._park(gen, fut, eff, waits)  # as a fiber fallback does
+                self._park(gen, fut, eff, waits, deadline)  # fiber-fallback
                 return fut
 
             if isinstance(eff, Sleep):
                 fut = Future()
                 self.spawns += 1
-                self._timers.push(
-                    time.monotonic() + max(eff.seconds, 0.0),
-                    (gen, fut, ("send", None)))
+                self._sleep(gen, fut, eff.seconds, deadline)
                 return fut
 
             try:
@@ -324,14 +385,25 @@ class EventLoopExecutor:
 
     # -------------------------------------------------------------- parking
     def _park(self, gen: Generator, fut: Future, eff: Any,
-              waits: List[Future]) -> None:
+              waits: List[Future],
+              deadline: Optional[float] = None) -> None:
+        claim: Optional[Once] = None
+        if deadline is not None:
+            # arm the expiry on the loop's own wheel (we ARE the owner
+            # thread here); the claim decides resolution-vs-expiry
+            claim = Once()
+            self._timers.push(deadline,
+                              (_EL_DEADLINE, claim, gen, fut, deadline))
+
         if isinstance(eff, Wait):
             def _resume_one(w: Future) -> None:
+                if claim is not None and not claim.claim():
+                    return  # the deadline fired first; expiry resumed it
                 try:
                     resume: Tuple[str, Any] = ("send", w.result())
                 except BaseException as exc:
                     resume = ("throw", exc)
-                self._inject(gen, fut, resume)
+                self._inject(gen, fut, resume, deadline)
             waits[0].add_done_callback(_resume_one)
             return
 
@@ -343,12 +415,14 @@ class EventLoopExecutor:
                 remaining[0] -= 1
                 if remaining[0]:
                     return
+            if claim is not None and not claim.claim():
+                return  # the deadline fired first; expiry resumed it
             try:
                 resume: Tuple[str, Any] = ("send",
                                            [w.result() for w in waits])
             except BaseException as exc:
                 resume = ("throw", exc)
-            self._inject(gen, fut, resume)
+            self._inject(gen, fut, resume, deadline)
 
         for w in waits:
             w.add_done_callback(_resume_all)
@@ -413,9 +487,13 @@ class ShardedEventLoopExecutor:
         for s in self._shards:
             s.stop()
 
-    def deliver(self, gen: Generator, reply: Future) -> None:
+    def deliver(self, gen: Generator, reply: Future,
+                deadline: Optional[float] = None) -> None:
         shard = self.shard_for(next(self._ticket), self.n_shards)
-        self._shards[shard].deliver(gen, reply)
+        if deadline is None:  # common path keeps the pre-deadline signature
+            self._shards[shard].deliver(gen, reply)
+        else:
+            self._shards[shard].deliver(gen, reply, deadline)
 
     # ---------------------------------------------------------------- stats
     @property

@@ -82,13 +82,21 @@ from .eventloop import EventLoopExecutor, ShardedEventLoopExecutor
 from .fiber import (BatchFiberScheduler, CQBatchFiberScheduler,
                     FiberScheduler, StealGroup)
 from .metrics import BackendStats
-from .future import Future
+from .future import Future, Once
+from .resilience import DeadlineExceeded, min_deadline
 
 _SHUTDOWN = object()
 
 
 class Executor:
-    """Common interface: deliver(gen, reply_future) + lifecycle."""
+    """Common interface: deliver(gen, reply_future[, deadline]) + lifecycle.
+
+    ``deadline`` is an absolute ``time.monotonic()`` bound.  Thread-family
+    executors enforce it with kernel-timed waits (``Future.wait(timeout)``,
+    truncated sleeps); the pool's suspended continuations arm the app's
+    ``TimerThread``; cooperative executors arm their own timer wheel — no
+    backend ever polls for expiry.
+    """
 
     # Whether this executor's handlers may run inline on a co-scheduled
     # cooperative caller (the zero-handoff fast path).  Thread-family
@@ -96,8 +104,14 @@ class Executor:
     # point under study, so bypassing it would falsify the baseline.
     cooperative = False
 
-    def deliver(self, gen: Generator, reply: Future) -> None:
+    def deliver(self, gen: Generator, reply: Future,
+                deadline: Optional[float] = None) -> None:
         raise NotImplementedError
+
+    def _count_timeout(self) -> None:
+        app = getattr(self, "app", None)
+        if app is not None:
+            app._res_stats.timeout()
 
     def start(self) -> None:
         raise NotImplementedError
@@ -143,8 +157,9 @@ class ThreadExecutor(Executor):
             t.join(timeout=5.0)
         self._threads.clear()
 
-    def deliver(self, gen: Generator, reply: Future) -> None:
-        self._mailbox.put((gen, reply))
+    def deliver(self, gen: Generator, reply: Future,
+                deadline: Optional[float] = None) -> None:
+        self._mailbox.put((gen, reply, deadline))
 
     # ------------------------------------------------------------- dispatch
     def _dispatch_loop(self) -> None:
@@ -152,11 +167,21 @@ class ThreadExecutor(Executor):
             item = self._mailbox.get()
             if item is _SHUTDOWN:
                 return
-            gen, reply = item
-            self._drive(gen, reply)
+            gen, reply, deadline = item
+            self._drive(gen, reply, deadline)
 
-    def _drive(self, gen: Generator, reply: Future) -> None:
+    def _drive(self, gen: Generator, reply: Future,
+               deadline: Optional[float] = None) -> None:
         """Run a handler generator to completion *in this kernel thread*."""
+        if deadline is not None and time.monotonic() >= deadline:
+            # the request expired while queued in the mailbox: fail it
+            # without running the handler (dequeue-side hop check)
+            self._count_timeout()
+            reply.set_exception(DeadlineExceeded(
+                f"{self.name}: deadline expired in mailbox"))
+            self._classify(reply)
+            gen.close()
+            return
         send_value: Any = None
         throw_exc: Optional[BaseException] = None
         while True:
@@ -176,7 +201,7 @@ class ThreadExecutor(Executor):
                 return
 
             try:
-                send_value = self._interpret(eff)
+                send_value = self._interpret(eff, deadline)
                 throw_exc = None
             except BaseException as exc:
                 throw_exc = exc
@@ -191,24 +216,43 @@ class ThreadExecutor(Executor):
             else:
                 self.fast_futures += 1
 
-    def _interpret(self, eff: Any) -> Any:
+    def _interpret(self, eff: Any, deadline: Optional[float] = None) -> Any:
         if isinstance(eff, AsyncRpc):
             # THE paper's baseline operation: spawn a carrier per async call
             # (a fresh kernel thread here; a pool submission in the
             # PooledThreadExecutor subclass).
+            dl = min_deadline(eff.deadline, deadline)
+            if dl is not None and time.monotonic() >= dl:
+                self._count_timeout()
+                raise DeadlineExceeded(
+                    f"rpc {eff.dest}.{eff.method}: deadline expired")
             fut = Future()
             self._spawn_carrier(
-                self.app.rpc_carrier(eff.dest, eff.method, eff.payload), fut)
+                self.app.rpc_carrier(eff.dest, eff.method, eff.payload, dl),
+                fut, dl)
             return fut
 
         if isinstance(eff, Wait):
-            return eff.future.wait()
+            if deadline is None:
+                return eff.future.wait()
+            return self._timed_wait(eff.future, deadline)
 
         if isinstance(eff, WaitAll):
-            return [f.wait() for f in eff.futures]
+            if deadline is None:
+                return [f.wait() for f in eff.futures]
+            return [self._timed_wait(f, deadline) for f in eff.futures]
 
         if isinstance(eff, Sleep):
-            time.sleep(max(eff.seconds, 0.0))
+            seconds = max(eff.seconds, 0.0)
+            if deadline is not None:
+                now = time.monotonic()
+                if now + seconds >= deadline:
+                    # kernel-timed truncation: sleep only to the deadline,
+                    # then fail the request instead of finishing dead work
+                    time.sleep(max(deadline - now, 0.0))
+                    self._count_timeout()
+                    raise DeadlineExceeded("deadline expired during sleep")
+            time.sleep(seconds)
             return None
 
         if isinstance(eff, Compute):
@@ -220,15 +264,28 @@ class ThreadExecutor(Executor):
 
         if isinstance(eff, SpawnLocal):
             fut = Future()
-            self._spawn_carrier(eff.genfn(*eff.args), fut)
+            self._spawn_carrier(eff.genfn(*eff.args), fut, deadline)
             return fut
 
         raise TypeError(f"Unknown effect: {eff!r}")
 
-    def _spawn_carrier(self, gen: Generator, fut: Future) -> None:
+    def _timed_wait(self, fut: Future, deadline: float) -> Any:
+        """Kernel-timed join: block at most until the deadline, then fail
+        the *waiter* with DeadlineExceeded (the awaited future stays
+        pending and keeps its own single writer)."""
+        remaining = deadline - time.monotonic()
+        try:
+            return fut.wait(timeout=max(remaining, 0.0))
+        except TimeoutError:
+            self._count_timeout()
+            raise DeadlineExceeded("deadline expired while waiting") from None
+
+    def _spawn_carrier(self, gen: Generator, fut: Future,
+                       deadline: Optional[float] = None) -> None:
         """std::async semantics: one fresh kernel thread per async call."""
         t0 = time.perf_counter()
-        t = threading.Thread(target=self._drive, args=(gen, fut), daemon=True)
+        t = threading.Thread(target=self._drive, args=(gen, fut, deadline),
+                             daemon=True)
         t.start()
         with self._lock:
             self.spawns += 1
@@ -327,27 +384,28 @@ class PooledThreadExecutor(ThreadExecutor):
                     self._work_cv.wait()
                 if self._resumes:
                     # continuations first: they unblock waiting carriers
-                    gen, fut, resume = self._resumes.popleft()
+                    gen, fut, resume, deadline = self._resumes.popleft()
                 else:
-                    (gen, fut), resume = self._carriers.popleft(), None
+                    (gen, fut, deadline), resume = \
+                        self._carriers.popleft(), None
                     self._space_cv.notify()
             if resume is None:
-                self._drive(gen, fut)          # classic blocking carrier
+                self._drive(gen, fut, deadline)  # classic blocking carrier
             else:
-                self._run_suspendable(gen, fut, resume)
+                self._run_suspendable(gen, fut, resume, deadline)
 
     def _take_work_nowait(self):
         with self._qlock:
             if self._resumes:
                 return self._resumes.popleft()
             if self._carriers:
-                gen, fut = self._carriers.popleft()
+                gen, fut, deadline = self._carriers.popleft()
                 self._space_cv.notify()
-                return (gen, fut, None)
+                return (gen, fut, None, deadline)
         return None
 
     # ----------------------------------------------------------- wait path
-    def _interpret(self, eff: Any) -> Any:
+    def _interpret(self, eff: Any, deadline: Optional[float] = None) -> Any:
         # Work-helping: a pool thread about to block on a join first drains
         # queued work until the awaited futures resolve.  Without this a
         # saturated pool deadlocks on itself — every pool thread parked on a
@@ -355,11 +413,14 @@ class PooledThreadExecutor(ThreadExecutor):
         if isinstance(eff, (Wait, WaitAll)) \
                 and threading.get_ident() in self._pool_ids:
             futs = [eff.future] if isinstance(eff, Wait) else list(eff.futures)
-            self._help_until(futs)
-        return super()._interpret(eff)
+            self._help_until(futs, deadline)
+        return super()._interpret(eff, deadline)
 
-    def _help_until(self, futs: List[Future]) -> None:
+    def _help_until(self, futs: List[Future],
+                    deadline: Optional[float] = None) -> None:
         while not all(f.done for f in futs):
+            if deadline is not None and time.monotonic() >= deadline:
+                return  # the timed wait in super()._interpret fails the join
             item = self._take_work_nowait()
             if item is None:
                 # nothing to help with; progress is on other threads.  The
@@ -371,11 +432,12 @@ class PooledThreadExecutor(ThreadExecutor):
                         f.wait_done(timeout=0.005)
                         break
                 continue
-            gen, fut, resume = item
-            self._run_suspendable(gen, fut, resume)
+            gen, fut, resume, item_deadline = item
+            self._run_suspendable(gen, fut, resume, item_deadline)
 
     def _run_suspendable(self, gen: Generator, fut: Future,
-                         resume: Optional[Any] = None) -> None:
+                         resume: Optional[Any] = None,
+                         deadline: Optional[float] = None) -> None:
         """Drive a carrier without ever blocking this thread on a join: an
         unresolved Wait/WaitAll parks the generator on a done-callback that
         re-queues its continuation.  This is what keeps work-helping and
@@ -388,6 +450,13 @@ class PooledThreadExecutor(ThreadExecutor):
                 throw_exc = payload
             else:
                 send_value = payload
+        if (deadline is not None and throw_exc is None
+                and time.monotonic() >= deadline):
+            # expired while queued/suspended and no expiry was delivered
+            # yet: fail the carrier now instead of resuming dead work
+            self._count_timeout()
+            throw_exc = DeadlineExceeded(
+                f"{self.name}: deadline expired before resume")
         while True:
             try:
                 if throw_exc is not None:
@@ -415,23 +484,40 @@ class PooledThreadExecutor(ThreadExecutor):
                     except BaseException as exc:
                         send_value, throw_exc = None, exc
                     continue
-                self._suspend_on(gen, fut, eff, waits)
+                self._suspend_on(gen, fut, eff, waits, deadline)
                 return
             try:
-                send_value = super()._interpret(eff)  # non-join effects only
+                # non-join effects only; ThreadExecutor._interpret so the
+                # timed-wait work-help hook above is not re-entered
+                send_value = ThreadExecutor._interpret(self, eff, deadline)
                 throw_exc = None
             except BaseException as exc:
                 throw_exc = exc
 
     def _suspend_on(self, gen: Generator, fut: Future, eff: Any,
-                    waits: List[Future]) -> None:
+                    waits: List[Future],
+                    deadline: Optional[float] = None) -> None:
+        # With a deadline, the parked continuation races a TimerThread
+        # expiry against the done-callback; a first-writer-wins claim
+        # guarantees exactly one of them enqueues the resume.
+        claim = Once() if deadline is not None else None
+        if claim is not None:
+            def _expire() -> None:
+                if claim.claim():
+                    self._count_timeout()
+                    self._enqueue_resume(gen, fut, ("throw", DeadlineExceeded(
+                        f"{self.name}: deadline expired while suspended")),
+                        deadline)
+            self.app._timer.push(deadline, _expire)
         if isinstance(eff, Wait):
             def _resume_one(w: Future) -> None:
+                if claim is not None and not claim.claim():
+                    return  # the deadline expiry already resumed the carrier
                 try:
                     resume = ("send", w.result())
                 except BaseException as exc:
                     resume = ("throw", exc)
-                self._enqueue_resume(gen, fut, resume)
+                self._enqueue_resume(gen, fut, resume, deadline)
             waits[0].add_done_callback(_resume_one)
             return
         remaining = [len(waits)]
@@ -442,25 +528,28 @@ class PooledThreadExecutor(ThreadExecutor):
                 remaining[0] -= 1
                 if remaining[0]:
                     return
+            if claim is not None and not claim.claim():
+                return
             try:
                 resume = ("send", [w.result() for w in waits])
             except BaseException as exc:
                 resume = ("throw", exc)
-            self._enqueue_resume(gen, fut, resume)
+            self._enqueue_resume(gen, fut, resume, deadline)
         for w in waits:
             w.add_done_callback(_resume_all)
 
-    def _enqueue_resume(self, gen: Generator, fut: Future,
-                        resume: Any) -> None:
+    def _enqueue_resume(self, gen: Generator, fut: Future, resume: Any,
+                        deadline: Optional[float] = None) -> None:
         # unbounded on purpose: continuations are not new admissions (the
         # carrier was counted and bounded at submission), and refusing them
         # could deadlock the very join they resolve
         with self._qlock:
-            self._resumes.append((gen, fut, resume))
+            self._resumes.append((gen, fut, resume, deadline))
             self._work_cv.notify()
 
     # ----------------------------------------------------------- spawn path
-    def _spawn_carrier(self, gen: Generator, fut: Future) -> None:
+    def _spawn_carrier(self, gen: Generator, fut: Future,
+                       deadline: Optional[float] = None) -> None:
         on_pool = threading.get_ident() in self._pool_ids
         queued = False
         stalled = False
@@ -472,10 +561,10 @@ class PooledThreadExecutor(ThreadExecutor):
                     # dispatcher: block with backpressure accounting, then —
                     # on pathological saturation — degrade to caller-runs so
                     # the service makes progress instead of wedging
-                    deadline = t0 + self.stall_timeout
+                    stall_end = t0 + self.stall_timeout
                     while len(self._carriers) >= self.queue_bound \
                             and not self._shutdown:
-                        left = deadline - time.perf_counter()
+                        left = stall_end - time.perf_counter()
                         if left <= 0:
                             break
                         self._space_cv.wait(timeout=left)
@@ -483,7 +572,7 @@ class PooledThreadExecutor(ThreadExecutor):
                 # queue slot may only free when *it* helps, so waiting here
                 # could deadlock
             if len(self._carriers) < self.queue_bound:
-                self._carriers.append((gen, fut))
+                self._carriers.append((gen, fut, deadline))
                 queued = True
                 self._work_cv.notify()
                 depth = len(self._carriers) + len(self._resumes)
@@ -499,9 +588,9 @@ class PooledThreadExecutor(ThreadExecutor):
                 self.queue_depth_hwm = depth
         if not queued:
             if on_pool:
-                self._run_suspendable(gen, fut)
+                self._run_suspendable(gen, fut, None, deadline)
             else:
-                self._drive(gen, fut)
+                self._drive(gen, fut, deadline)
 
     def stats(self) -> BackendStats:
         with self._lock:
@@ -593,7 +682,8 @@ class FiberExecutor(Executor):
         for s in self._scheds:
             s.stop()
 
-    def deliver(self, gen: Generator, reply: Future) -> None:
+    def deliver(self, gen: Generator, reply: Future,
+                deadline: Optional[float] = None) -> None:
         # Round-robin placement in both modes (as in boost, whose
         # work_stealing algorithm also keeps naive local placement and lets
         # the steal path fix imbalance).  A least-loaded placement variant
@@ -601,7 +691,10 @@ class FiberExecutor(Executor):
         # concurrent delivers all read the same stale queue lengths and herd
         # onto one scheduler, while rr spreads bursts by construction.
         s = self._scheds[next(self._rr) % len(self._scheds)]
-        s.spawn_external(gen, reply)
+        if deadline is None:  # common path keeps the pre-deadline signature
+            s.spawn_external(gen, reply)
+        else:
+            s.spawn_external(gen, reply, deadline=deadline)
 
     def stats(self) -> BackendStats:
         # ring counters exist only on the batch/cq scheduler subclasses;

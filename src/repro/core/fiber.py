@@ -52,25 +52,32 @@ from typing import Any, Generator, List, Optional, Tuple
 
 from .calibrate import burn
 from .effects import AsyncRpc, Compute, Effect, Offload, Sleep, SpawnLocal, Wait, WaitAll
-from .future import CompletedFuture, Future
+from .future import CompletedFuture, Future, Once
+from .resilience import DeadlineExceeded
 from .timers import TimerWheel
 
 _RAISE = object()  # sentinel: send value is an exception to throw into the fiber
 _FLUSH = object()  # timer payload: a batch scheduler's ring flush deadline
 _CQ_FLUSH = object()  # timer payload: a completion ring's drain deadline
+_DEADLINE = object()  # timer payload: a parked fiber's deadline expiry
 
 
 class Fiber:
-    """A resumable handler: generator + completion future."""
+    """A resumable handler: generator + completion future.
 
-    __slots__ = ("gen", "future", "name")
+    ``deadline`` is the request's inherited absolute expiry (or None); the
+    scheduler checks it at every hop (AsyncRpc) and arms it on the timer
+    wheel whenever the fiber parks, so expiry needs no polling."""
+
+    __slots__ = ("gen", "future", "name", "deadline")
     _count = itertools.count()
 
     def __init__(self, gen: Generator, future: Optional[Future] = None,
-                 name: str = "") -> None:
+                 name: str = "", deadline: Optional[float] = None) -> None:
         self.gen = gen
         self.future = future if future is not None else Future()
         self.name = name or f"fiber-{next(Fiber._count)}"
+        self.deadline = deadline
 
 
 class StealGroup:
@@ -154,12 +161,17 @@ class FiberScheduler:
         self.inline_depth_hwm = 0
         self.fast_futures = 0
         self.slow_futures = 0
+        # ambient deadline of the inline call currently being driven (the
+        # inlined callee has no Fiber yet); owner-thread-only, save/restored
+        # around each _drive_inline so nesting works.
+        self._inline_deadline: Optional[float] = None
 
     # ------------------------------------------------------------ external
     def spawn_external(self, gen: Generator, future: Optional[Future] = None,
-                       name: str = "") -> Future:
+                       name: str = "",
+                       deadline: Optional[float] = None) -> Future:
         """Thread-safe: create a fiber from outside the scheduler thread."""
-        fib = Fiber(gen, future, name)
+        fib = Fiber(gen, future, name, deadline)
         with self._cond:
             self._injected.append((fib, None))
             self._cond.notify()
@@ -265,9 +277,26 @@ class FiberScheduler:
                 self._run_fiber(fib, value)
 
     def _on_timer(self, item: Any) -> None:
-        """A wheel entry came due.  Base schedulers only park fibers on the
-        wheel; :class:`BatchFiberScheduler` also parks flush deadlines."""
+        """A wheel entry came due.  Base schedulers park fibers and deadline
+        expiries on the wheel; :class:`BatchFiberScheduler` adds flush
+        deadlines."""
+        if isinstance(item, tuple) and len(item) == 3 \
+                and item[0] is _DEADLINE:
+            _, claim, fib = item
+            if claim.claim():
+                # first writer wins: the completion callback for this park
+                # lost (or will lose) the claim and becomes a no-op, so the
+                # fiber is resumed exactly once — with the expiry thrown in
+                self._count_timeout()
+                self._push_ready((fib, (_RAISE, DeadlineExceeded(
+                    f"{fib.name}: deadline expired while parked"))))
+            return
         self._push_ready(item)
+
+    def _count_timeout(self) -> None:
+        app = self.app
+        if app is not None:
+            app._res_stats.timeout()
 
     # ------------------------------------------------- completion-ring hooks
     # No-ops on every scheduler except CQBatchFiberScheduler, whose
@@ -364,15 +393,35 @@ class FiberScheduler:
             if parked:
                 return
 
+    def _rpc_deadline(self, fib: Optional[Fiber],
+                      eff: AsyncRpc) -> Optional[float]:
+        """Effective deadline of an async call: the effect's own bound
+        tightened by the calling request's inherited one (inline callees
+        have no Fiber yet; their ambient bound is _inline_deadline)."""
+        amb = fib.deadline if fib is not None else self._inline_deadline
+        dl = eff.deadline
+        if amb is not None:
+            dl = amb if dl is None else min(dl, amb)
+        return dl
+
     def _interpret(self, fib: Fiber, eff: Effect) -> Tuple[Any, bool]:
         """Returns (send_value, parked)."""
         if isinstance(eff, AsyncRpc):
             app = self.app
+            dl = self._rpc_deadline(fib, eff)
+            if dl is not None and time.monotonic() >= dl:
+                # hop check: an expired request spawns no further fan-out
+                self._count_timeout()
+                return (_RAISE, DeadlineExceeded(
+                    f"rpc {eff.dest}.{eff.method}: deadline expired")), False
             if app is not None and app.net_latency == 0 \
                     and app.inline_budget > 0:
                 # Zero-handoff fast path.  Tier 1: run the callee handler
-                # inline (no mailbox, no carrier, no handoff at all).
-                fut = self._try_inline(eff, app)
+                # inline (no mailbox, no carrier, no handoff at all) — unless
+                # the resilience policy needs per-edge accounting, in which
+                # case the hop must go through App.send (tier 2 below).
+                fut = (self._try_inline(eff, app, dl)
+                       if app._inline_rpc_ok else None)
                 if fut is not None:
                     return fut, False
                 # Tier 2, carrier elision: with no client-side hop to
@@ -380,11 +429,12 @@ class FiberScheduler:
                 # the reply future *is* the carrier's result, so hand it to
                 # the caller directly instead of spawning a fiber whose only
                 # job is to forward it.
-                return app.send(eff.dest, eff.method, eff.payload), False
+                return app.send(eff.dest, eff.method, eff.payload,
+                                deadline=dl), False
             # THE paper's operation: async call spawns a *fiber*, not a thread.
             carrier = Fiber(self.app.rpc_carrier(eff.dest, eff.method,
-                                                 eff.payload),
-                            name=f"carrier->{eff.dest}")
+                                                 eff.payload, dl),
+                            name=f"carrier->{eff.dest}", deadline=dl)
             self.fibers_spawned += 1
             self._push_ready((carrier, None))
             return carrier.future, False
@@ -396,7 +446,9 @@ class FiberScheduler:
                     return fut.result(), False
                 except BaseException as exc:
                     return (_RAISE, exc), False
-            fut.add_done_callback(lambda f, fib=fib: self._resume_on(f, fib))
+            claim = self._arm_deadline(fib)
+            fut.add_done_callback(
+                lambda f, fib=fib, claim=claim: self._resume_on(f, fib, claim))
             return None, True
 
         if isinstance(eff, WaitAll):
@@ -407,15 +459,22 @@ class FiberScheduler:
                 except BaseException as exc:
                     return (_RAISE, exc), False
             latch = _CountdownLatch(len(futs))
+            claim = self._arm_deadline(fib)
             for f in futs:
                 f.add_done_callback(
-                    lambda _f, fib=fib, futs=futs, latch=latch:
-                        self._resume_all_on(latch, futs, fib))
+                    lambda _f, fib=fib, futs=futs, latch=latch, claim=claim:
+                        self._resume_all_on(latch, futs, fib, claim))
             return None, True
 
         if isinstance(eff, Sleep):
-            deadline = time.monotonic() + max(eff.seconds, 0.0)
-            self._timers.push(deadline, (fib, None))
+            wake = time.monotonic() + max(eff.seconds, 0.0)
+            if fib.deadline is not None and fib.deadline <= wake:
+                # the sleep outlives the request: park the expiry instead of
+                # the wake-up (timer-wheel-armed, claimed on fire so the
+                # timeout counter ticks exactly once)
+                self._timers.push(fib.deadline, (_DEADLINE, Once(), fib))
+            else:
+                self._timers.push(wake, (fib, None))
             return None, True
 
         if isinstance(eff, Compute):
@@ -434,6 +493,18 @@ class FiberScheduler:
 
         raise TypeError(f"Unknown effect: {eff!r}")
 
+    def _arm_deadline(self, fib: Optional[Fiber]) -> Optional[Once]:
+        """Park-time deadline arming: push a claimed expiry entry on the
+        wheel for a deadline-carrying fiber about to suspend.  Returns the
+        claim the resume callback must win before injecting (first writer
+        wins; the loser — late completion or stale timer — is a no-op).
+        The wheel is owner-thread-only and we *are* the driving thread."""
+        if fib is None or fib.deadline is None:
+            return None
+        claim = Once()
+        self._timers.push(fib.deadline, (_DEADLINE, claim, fib))
+        return claim
+
     def _classify(self, fut: Future) -> None:
         """fast = resolved without a kernel Condition ever materializing."""
         if fut.blocking_waited():
@@ -442,7 +513,8 @@ class FiberScheduler:
             self.fast_futures += 1
 
     # ------------------------------------------------ zero-handoff fast path
-    def _try_inline(self, eff: AsyncRpc, app: "Any") -> Optional[Future]:
+    def _try_inline(self, eff: AsyncRpc, app: "Any",
+                    deadline: Optional[float] = None) -> Optional[Future]:
         """Same-carrier call inlining: if the callee service's executor is
         cooperative and co-scheduled (same process, no simulated network
         hop), run its handler right here as a direct continuation of the
@@ -463,12 +535,16 @@ class FiberScheduler:
         self._inline_depth += 1
         if self._inline_depth > self.inline_depth_hwm:
             self.inline_depth_hwm = self._inline_depth
+        prev_deadline = self._inline_deadline
+        self._inline_deadline = deadline
         try:
-            return self._drive_inline(handler(svc, eff.payload))
+            return self._drive_inline(handler(svc, eff.payload), deadline)
         finally:
+            self._inline_deadline = prev_deadline
             self._inline_depth -= 1
 
-    def _drive_inline(self, gen: Generator) -> Future:
+    def _drive_inline(self, gen: Generator,
+                      deadline: Optional[float] = None) -> Future:
         """Run an inlined callee handler up to its first suspension point.
 
         Completion without suspending returns a pre-resolved
@@ -512,8 +588,9 @@ class FiberScheduler:
                     continue
             if isinstance(eff, (Wait, WaitAll, Sleep)):
                 # first real suspension point: from here on the remainder is
-                # an ordinary fiber of this scheduler
-                fib = Fiber(gen)
+                # an ordinary fiber of this scheduler (inheriting the inline
+                # call's effective deadline, so parked expiry still arms)
+                fib = Fiber(gen, deadline=deadline)
                 self.fibers_spawned += 1
                 send_value, parked = self._interpret(fib, eff)
                 if parked:
@@ -526,7 +603,10 @@ class FiberScheduler:
             # never touch the fiber argument
             send_value, _ = self._interpret(None, eff)  # type: ignore[arg-type]
 
-    def _resume_on(self, fut: Future, fib: Fiber) -> None:
+    def _resume_on(self, fut: Future, fib: Fiber,
+                   claim: Optional[Once] = None) -> None:
+        if claim is not None and not claim.claim():
+            return  # the deadline expiry beat us; the fiber already resumed
         try:
             value: Any = fut.result()
         except BaseException as exc:
@@ -534,9 +614,11 @@ class FiberScheduler:
         self._inject(fib, value)
 
     def _resume_all_on(self, latch: "_CountdownLatch", futs: List[Future],
-                       fib: Fiber) -> None:
+                       fib: Fiber, claim: Optional[Once] = None) -> None:
         if not latch.count_down():
             return
+        if claim is not None and not claim.claim():
+            return  # the deadline expiry beat us; the fiber already resumed
         try:
             value: Any = [f.result() for f in futs]
         except BaseException as exc:
@@ -600,7 +682,7 @@ class BatchFiberScheduler(FiberScheduler):
         super().__init__(app, name)
         self.batch_size = batch_size
         self.flush_after = flush_after
-        self._ring: List[Tuple[str, str, Any, Future]] = []
+        self._ring: List[Tuple[str, str, Any, Future, Optional[float]]] = []
         # Each flush advances the ring generation; flush deadlines are
         # tagged with the generation that armed them so a stale timer from
         # a size/join-flushed ring cannot truncate its successor (which
@@ -616,12 +698,18 @@ class BatchFiberScheduler(FiberScheduler):
     # ----------------------------------------------------------- submission
     def _interpret(self, fib: Fiber, eff: Effect) -> Tuple[Any, bool]:
         if isinstance(eff, AsyncRpc):
+            dl = self._rpc_deadline(fib, eff)
+            if dl is not None and time.monotonic() >= dl:
+                # hop check before buffering: dead calls never hit the ring
+                self._count_timeout()
+                return (_RAISE, DeadlineExceeded(
+                    f"rpc {eff.dest}.{eff.method}: deadline expired")), False
             fut = Future()
             if not self._ring:
                 # arm the flush deadline when the ring goes non-empty
                 self._timers.push(time.monotonic() + self.flush_after,
                                   (_FLUSH, self._ring_gen))
-            self._ring.append((eff.dest, eff.method, eff.payload, fut))
+            self._ring.append((eff.dest, eff.method, eff.payload, fut, dl))
             if len(self._ring) > self.ring_hwm:
                 self.ring_hwm = len(self._ring)
             if len(self._ring) >= self.batch_size:
@@ -657,14 +745,15 @@ class BatchFiberScheduler(FiberScheduler):
         self.fibers_spawned += 1  # one carrier per *batch*, not per call
         self._push_ready((carrier, None))
 
-    def _batch_carrier(self, batch: List[Tuple[str, str, Any, Future]]
+    def _batch_carrier(self, batch: List[Tuple[str, str, Any, Future,
+                                               Optional[float]]]
                        ) -> Generator:
         """One fiber submits the whole ring: the per-call dispatch cost the
         plain fiber backend pays N times is paid once here."""
         if self.app.net_latency > 0:
             yield Sleep(self.app.net_latency)  # client-side hop, amortized
-        for dest, method, payload, fut in batch:
-            reply = self.app.send(dest, method, payload)
+        for dest, method, payload, fut, dl in batch:
+            reply = self.app.send(dest, method, payload, deadline=dl)
             reply.add_done_callback(
                 lambda r, fut=fut: _chain_reply(r, fut))
         return len(batch)
@@ -795,8 +884,9 @@ class CQBatchFiberScheduler(BatchFiberScheduler):
     # the completion ring: it is this scheduler's only cross-thread
     # doorbell, so a burst of replies or deliveries costs one wakeup.
     def spawn_external(self, gen: Generator, future: Optional[Future] = None,
-                       name: str = "") -> Future:
-        fib = Fiber(gen, future, name)
+                       name: str = "",
+                       deadline: Optional[float] = None) -> Future:
+        fib = Fiber(gen, future, name, deadline)
         self._complete(fib, None)
         return fib.future
 

@@ -29,6 +29,7 @@ resolved, it never allocates even the callback list.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 from typing import Any, Callable, List, Optional
 
@@ -183,6 +184,28 @@ class CompletedFuture(Future):
         self._exc_tb = exc.__traceback__ if exc is not None else None
         self._callbacks = ()  # type: ignore[assignment]  # never appended to
         self._cond = None
+
+
+class Once:
+    """First-writer-wins claim ticket for completion-vs-deadline races.
+
+    When a parked continuation can be resumed by *either* a future's done
+    callback or a timer-armed deadline expiry, both sides call ``claim()``
+    and only the winner acts; the loser's wheel entry or callback becomes a
+    no-op.  The future itself keeps its single-writer discipline — the
+    resumed generator remains the only thing that resolves the reply.
+    ``itertools.count`` makes the claim a single C-level operation under
+    the GIL (the same lost-update-free idiom as the executors' tickets).
+    """
+
+    __slots__ = ("_ticket",)
+
+    def __init__(self) -> None:
+        self._ticket = itertools.count()
+
+    def claim(self) -> bool:
+        """True exactly once, across any number of racing callers."""
+        return next(self._ticket) == 0
 
 
 def all_done(futures: List[Future]) -> bool:

@@ -1,21 +1,39 @@
-"""Open-loop Poisson load generator + peak-throughput search.
+"""Open-loop Poisson load generator + peak-throughput search + overload mode.
 
 Mirrors the paper's evaluation protocol:
 
 * *peak throughput*: "increase the request rate ... until the number of
   processed requests per second does not increase anymore" — implemented as a
   geometric ramp; the peak is the best achieved rate across the ramp;
-* *tail latency vs rate*: fixed-rate open-loop trials reporting p99.
+* *tail latency vs rate*: fixed-rate open-loop trials reporting p99;
+* *overload* (:func:`run_overload`): drive a fixed multiple of the measured
+  peak, score **goodput** (completions within the per-request deadline / s),
+  then probe at a sustainable rate until goodput recovers — the
+  time-to-recover after the overload window.
 
 Arrivals are generated open-loop (Poisson, seeded) so queueing delay shows up
 as latency rather than throttling the generator — the regime where the thread
 backend's spawn cost collapses, per the paper.
+
+Trial isolation
+---------------
+A trial that ends with in-flight requests (the drain window timed out) used
+to leak them into its successor: their done-callbacks fired mid-next-trial,
+decrementing a stale ``outstanding`` counter, polluting the next trial's
+``BackendStats`` delta, and racing the summary read.  :func:`run_trial` now
+*severs* each trial: every callback checks a per-trial liveness flag under
+the trial lock before touching any counter, leftovers are counted as
+``abandoned`` and parked on ``app._loadgen_leftovers``, and the next trial
+waits (bounded by ``settle``) for them to finish before snapshotting
+``stats_before``.  The latency summary is computed only after the sever, so
+it reads a frozen recorder instead of racing late completions.
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Callable, List, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -26,15 +44,44 @@ from .service import App
 RequestFactory = Callable[[np.random.Generator], Tuple[str, str, Any]]
 
 
+def _settle(app: App, budget: float) -> None:
+    """Wait (bounded) for the previous trial's abandoned requests to finish
+    so their executor-side completions don't pollute this trial's
+    ``BackendStats`` delta."""
+    leftovers = getattr(app, "_loadgen_leftovers", None)
+    if not leftovers:
+        return
+    end = time.monotonic() + max(budget, 0.0)
+    for f in leftovers:
+        rem = end - time.monotonic()
+        if rem <= 0:
+            break
+        f.wait_done(timeout=rem)
+    app._loadgen_leftovers = []
+
+
 def run_trial(app: App, make_request: RequestFactory, rate: float,
               duration: float, *, seed: int = 0, max_outstanding: int = 4096,
-              drain: float = 2.0) -> TrialResult:
-    """Offer ``rate`` req/s for ``duration`` seconds; measure completions."""
+              drain: float = 2.0, deadline: Optional[float] = None,
+              enforce_deadline: bool = False,
+              settle: float = 1.0) -> TrialResult:
+    """Offer ``rate`` req/s for ``duration`` seconds; measure completions.
+
+    ``deadline`` (seconds, relative) classifies completions as *good* when
+    they finish within it; with ``enforce_deadline=True`` it is also stamped
+    onto every send, so the app's resilience layer fails slow requests
+    instead of letting them queue forever.
+    """
     rng = np.random.default_rng(seed)
     rec = LatencyRecorder()
     outstanding = [0]
     shed = [0]
+    offered = [0]
+    good = [0]
+    live = [True]  # trial epoch: severed before the summary is read
+    inflight: set = set()
     lock = threading.Lock()
+    _settle(app, settle)
     stats_before = app.backend_stats()
 
     t_start = time.perf_counter()
@@ -49,6 +96,7 @@ def run_trial(app: App, make_request: RequestFactory, rate: float,
         # generator open-loop even when pacing sleep overshoots)
         while next_arrival <= now:
             next_arrival += float(rng.exponential(1.0 / rate))
+            offered[0] += 1
             with lock:
                 if outstanding[0] >= max_outstanding:
                     shed[0] += 1
@@ -58,29 +106,57 @@ def run_trial(app: App, make_request: RequestFactory, rate: float,
             t0 = time.perf_counter()
 
             def _done(fut: Any, t0: float = t0) -> None:
+                # the WHOLE body runs under the trial lock: the liveness
+                # check, the counter updates, and the recorder write are one
+                # atomic unit, so severing the trial (live[0] = False, same
+                # lock) guarantees no late callback mutates anything the
+                # summary reads
                 with lock:
+                    if not live[0]:
+                        return  # late completion of an abandoned request
                     outstanding[0] -= 1
-                try:
-                    fut.result()
-                    rec.record(time.perf_counter() - t0)
-                except BaseException:
-                    rec.record_error()
+                    inflight.discard(fut)
+                    try:
+                        fut.result()
+                    except BaseException:
+                        rec.record_error()
+                        return
+                    dt = time.perf_counter() - t0
+                    rec.record(dt)
+                    if deadline is None or dt <= deadline:
+                        good[0] += 1
 
-            app.send(dest, method, payload).add_done_callback(_done)
+            dl = (time.monotonic() + deadline
+                  if enforce_deadline and deadline is not None else None)
+            fut = app.send(dest, method, payload, deadline=dl)
+            with lock:
+                if not fut.done:
+                    inflight.add(fut)
+            fut.add_done_callback(_done)
         pause = min(next_arrival - time.perf_counter(), 0.001)
         if pause > 0:
             time.sleep(pause)
 
     # drain: give in-flight requests a bounded window to finish
-    deadline = time.perf_counter() + drain
-    while time.perf_counter() < deadline:
+    drain_end = time.perf_counter() + drain
+    while time.perf_counter() < drain_end:
         with lock:
             if outstanding[0] == 0:
                 break
         time.sleep(0.005)
 
+    # sever the trial: late completions must not touch this trial's
+    # recorder/counters (bugfix: they used to decrement a stale counter and
+    # pollute the NEXT trial's BackendStats delta)
+    with lock:
+        live[0] = False
+        abandoned = outstanding[0]
+        leftovers = list(inflight)
+        inflight.clear()
+    app._loadgen_leftovers = leftovers  # next trial settles on these
+
     elapsed = duration  # completions attributed to the offered window
-    s = rec.summary()
+    s = rec.summary()   # safe: the recorder is frozen after the sever
     return TrialResult(
         offered_rps=rate,
         achieved_rps=rec.completed / elapsed,
@@ -89,6 +165,10 @@ def run_trial(app: App, make_request: RequestFactory, rate: float,
         completed=rec.completed, shed=shed[0], errors=rec.errors,
         backend_stats=BackendStats.delta(stats_before,
                                         app.backend_stats()).as_dict(),
+        offered=offered[0],
+        good=good[0],
+        goodput_rps=good[0] / elapsed,
+        abandoned=abandoned,
     )
 
 
@@ -138,3 +218,66 @@ def latency_sweep(app: App, make_request: RequestFactory, rates: List[float],
         if verbose:
             print("   ", tr.row(), flush=True)
     return out
+
+
+@dataclass
+class OverloadResult:
+    """Goodput past the peak + time-to-recover after the overload window."""
+    peak_rps: float
+    overload_rps: float          # offered rate during the overload window
+    overload: TrialResult        # the overload trial (goodput_rps is the score)
+    recovery_rate: float         # sustainable probe rate used for recovery
+    recovery_time: float         # s from overload end to first healthy probe
+    recovered: bool              # False: never healthy within the timeout
+    probes: List[TrialResult] = field(default_factory=list)
+
+
+def run_overload(app: App, make_request: RequestFactory, *,
+                 peak_rps: float, deadline: float, multiple: float = 3.0,
+                 duration: float = 1.0, recovery_rate: Optional[float] = None,
+                 recovery_duration: float = 0.25,
+                 recovery_timeout: float = 5.0,
+                 recovery_threshold: float = 0.9, seed: int = 0,
+                 max_outstanding: int = 4096, enforce_deadline: bool = True,
+                 verbose: bool = False) -> OverloadResult:
+    """Drive ``multiple``× the measured peak, then probe until goodput
+    recovers.
+
+    The overload trial uses a short drain so the backlog it built persists
+    into the recovery phase — recovery time measures how fast the app sheds
+    that backlog, not how patient the drain window was.  A probe is
+    *healthy* when its goodput reaches ``recovery_threshold`` of the probe
+    rate (``recovery_rate``, default half the peak — comfortably
+    sustainable, so only residual backlog can make a probe fail).
+    """
+    overload_rps = multiple * peak_rps
+    tr = run_trial(app, make_request, overload_rps, duration, seed=seed,
+                   max_outstanding=max_outstanding, drain=0.25,
+                   deadline=deadline, enforce_deadline=enforce_deadline,
+                   settle=1.0)
+    if verbose:
+        print("    overload", tr.row(), flush=True)
+    t_over_end = time.monotonic()
+
+    rrate = recovery_rate if recovery_rate is not None else 0.5 * peak_rps
+    probes: List[TrialResult] = []
+    recovered = False
+    recovery_time = float("inf")
+    i = 0
+    while time.monotonic() - t_over_end < recovery_timeout:
+        p = run_trial(app, make_request, rrate, recovery_duration,
+                      seed=seed + 1000 + i, max_outstanding=max_outstanding,
+                      drain=0.25, deadline=deadline,
+                      enforce_deadline=enforce_deadline, settle=0.0)
+        probes.append(p)
+        if verbose:
+            print("    probe   ", p.row(), flush=True)
+        if p.goodput_rps >= recovery_threshold * rrate:
+            recovered = True
+            recovery_time = time.monotonic() - t_over_end
+            break
+        i += 1
+    return OverloadResult(peak_rps=peak_rps, overload_rps=overload_rps,
+                          overload=tr, recovery_rate=rrate,
+                          recovery_time=recovery_time, recovered=recovered,
+                          probes=probes)

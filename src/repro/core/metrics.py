@@ -49,6 +49,13 @@ class BackendStats:
     ``slow_futures``: handler/carrier completions whose reply future was
     resolved without / with a kernel ``Condition`` ever materializing (a
     blocking ``wait`` is what materializes one; cooperative joins never do).
+
+    Resilience counters (app-level, see ``repro.core.resilience``):
+    ``timeouts``: deadline-expiry events (admission checks, parked-wait
+    expiries, truncated sleeps — a single request can tick several hops);
+    ``retries``: re-sends issued by the budgeted retry policy;
+    ``breaker_opens``: circuit-breaker closed/half-open -> open transitions;
+    ``rejections``: arrivals refused by a bounded service mailbox.
     """
     spawns: int = 0
     spawn_seconds: float = 0.0
@@ -72,6 +79,10 @@ class BackendStats:
     inline_depth_hwm: int = 0
     fast_futures: int = 0
     slow_futures: int = 0
+    timeouts: int = 0
+    retries: int = 0
+    breaker_opens: int = 0
+    rejections: int = 0
 
     _GAUGES = ("queue_depth_hwm", "ring_hwm", "cq_hwm", "shards",
                "inline_depth_hwm")
@@ -152,11 +163,26 @@ class TrialResult:
     # every service in the app; empty when the caller did not supply an app
     # snapshot.
     backend_stats: Dict[str, float] = field(default_factory=dict)
+    # goodput accounting (overload mode): total arrivals the generator
+    # produced (admitted + shed — sheds stay in the denominator so "peak"
+    # can never be inflated by quietly dropping offered load), completions
+    # that beat the per-request deadline, that count as a rate, and
+    # admitted requests still unresolved when the trial was severed.
+    offered: int = 0
+    good: int = 0
+    goodput_rps: float = 0.0
+    abandoned: int = 0
 
     def row(self) -> str:
         s = (f"offered={self.offered_rps:9.1f} achieved={self.achieved_rps:9.1f} "
              f"p50={self.p50 * 1e3:8.2f}ms p99={self.p99 * 1e3:8.2f}ms "
              f"n={self.completed} shed={self.shed}")
+        if self.good != self.completed:
+            s += f" good={self.good} goodput={self.goodput_rps:.0f}/s"
+        if self.abandoned:
+            s += f" abandoned={self.abandoned}"
+        if self.errors:
+            s += f" errors={self.errors}"
         bs = self.backend_stats
         if bs.get("steals"):
             s += f" steals={bs['steals']:.0f}"
@@ -181,6 +207,14 @@ class TrialResult:
                   f" cqhwm={bs.get('cq_hwm', 0):.0f}")
         if bs.get("shards"):
             s += f" shards={bs['shards']:.0f}"
+        if bs.get("timeouts"):
+            s += f" to={bs['timeouts']:.0f}"
+        if bs.get("retries"):
+            s += f" rtry={bs['retries']:.0f}"
+        if bs.get("breaker_opens"):
+            s += f" brko={bs['breaker_opens']:.0f}"
+        if bs.get("rejections"):
+            s += f" rej={bs['rejections']:.0f}"
         return s
 
 

@@ -1,0 +1,265 @@
+"""Overload-survival policy objects: deadlines, retries, breakers, bounds.
+
+The paper's peak-throughput numbers say nothing about the regime production
+actually lives in — *past* peak, where microservice graphs amplify queueing
+hop-by-hop and every unshed request makes the backlog worse.  This module
+holds the policy half of the resilience layer:
+
+* :class:`DeadlineExceeded` / :class:`CircuitOpenError` / :class:`Rejected`
+  — the three fail-fast reply exceptions the transport can resolve a reply
+  :class:`Future` with instead of queueing work it cannot finish in time.
+* :class:`RetryPolicy` — jittered exponential backoff, capped attempts.
+* :class:`RetryBudget` — a token bucket refilled by *successes*, so retries
+  can never amplify offered load unboundedly (the classic 10%-retry-budget
+  discipline: a dead downstream earns no tokens, so retries dry up).
+* :class:`CircuitBreaker` — closed -> open -> half-open on error/timeout
+  rate over a rolling window; fail-fast while open.
+* :class:`ResiliencePolicy` — the bundle an :class:`~repro.core.App` is
+  built with; ``None`` keeps the pre-resilience fast path bit-for-bit.
+
+Enforcement (who *checks* a deadline, and when) lives in the executors:
+cooperative backends arm their timer wheel (no polling), thread backends
+use kernel-timed waits.  This module is deliberately stdlib-only.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline expired before a reply was produced."""
+
+
+class CircuitOpenError(RuntimeError):
+    """Fail-fast reply: the destination's circuit breaker is open."""
+
+
+class Rejected(RuntimeError):
+    """Fail-fast reply: the destination's bounded mailbox is full."""
+
+
+def min_deadline(a: Optional[float], b: Optional[float]) -> Optional[float]:
+    """Tighter of two absolute (``time.monotonic``) deadlines; None = none."""
+    if a is None:
+        return b
+    if b is None:
+        return a
+    return a if a <= b else b
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Jittered exponential backoff.  ``max_attempts`` counts the first try."""
+
+    max_attempts: int = 3
+    base_backoff: float = 0.002     # s, delay after the first failure
+    max_backoff: float = 0.050      # s, exponential growth cap
+    jitter: float = 0.5             # +/- fraction of the computed delay
+    budget_initial: float = 8.0     # retry tokens available before any success
+    budget_ratio: float = 0.1       # tokens earned per successful reply
+    budget_cap: float = 64.0        # token bucket ceiling
+
+    def backoff_for(self, attempt: int) -> float:
+        """Delay before attempt ``attempt + 1`` (``attempt`` >= 1 failed)."""
+        raw = min(self.max_backoff, self.base_backoff * (2 ** (attempt - 1)))
+        lo = 1.0 - self.jitter
+        return raw * (lo + 2.0 * self.jitter * random.random())
+
+
+class RetryBudget:
+    """Token bucket: every retry spends one token; every success earns
+    ``ratio``.  Under a hard outage nothing succeeds, the bucket drains, and
+    the retry storm self-extinguishes — offered load cannot be amplified by
+    more than ``initial + ratio * successes`` extra requests."""
+
+    def __init__(self, policy: RetryPolicy) -> None:
+        self._lock = threading.Lock()
+        self._tokens = float(policy.budget_initial)
+        self._ratio = policy.budget_ratio
+        self._cap = policy.budget_cap
+
+    @property
+    def tokens(self) -> float:
+        return self._tokens
+
+    def credit(self) -> None:
+        with self._lock:
+            self._tokens = min(self._cap, self._tokens + self._ratio)
+
+    def try_spend(self) -> bool:
+        with self._lock:
+            if self._tokens >= 1.0:
+                self._tokens -= 1.0
+                return True
+            return False
+
+
+class CircuitBreaker:
+    """Per-edge closed -> open -> half-open state machine.
+
+    Outcomes are recorded into a rolling window of the last ``window``
+    replies; once at least ``min_volume`` samples are present and the
+    failure ratio reaches ``threshold`` the breaker opens (fail fast).
+    After ``reset_timeout`` seconds it admits exactly one half-open probe;
+    the probe's outcome closes or re-opens it.  ``clock`` is injectable so
+    unit tests can drive transitions without sleeping.
+    """
+
+    def __init__(self, *, threshold: float = 0.5, window: int = 32,
+                 min_volume: int = 8, reset_timeout: float = 0.25,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self.threshold = threshold
+        self.window = window
+        self.min_volume = min_volume
+        self.reset_timeout = reset_timeout
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._samples: deque = deque(maxlen=window)  # True = ok
+        self._state = "closed"
+        self._opened_at = 0.0
+        self._probing = False
+        self.opens = 0  # monotonic open-transition count (-> breaker_opens)
+
+    @property
+    def state(self) -> str:
+        return self._state
+
+    def allow(self) -> bool:
+        """May a call be attempted on this edge right now?"""
+        with self._lock:
+            if self._state == "closed":
+                return True
+            if self._state == "open":
+                if self._clock() - self._opened_at < self.reset_timeout:
+                    return False
+                self._state = "half-open"
+                self._probing = True
+                return True
+            # half-open: one probe in flight at a time
+            if self._probing:
+                return False
+            self._probing = True
+            return True
+
+    def record(self, ok: bool) -> None:
+        """Record a reply outcome for a call previously admitted."""
+        with self._lock:
+            if self._state == "half-open":
+                self._probing = False
+                if ok:
+                    self._state = "closed"
+                    self._samples.clear()
+                else:
+                    self._trip()
+                return
+            if self._state == "open":
+                return  # stale outcome from before the trip
+            self._samples.append(ok)
+            if len(self._samples) < self.min_volume:
+                return
+            failures = self._samples.count(False)
+            if failures / len(self._samples) >= self.threshold:
+                self._trip()
+
+    def abort_probe(self) -> None:
+        """Release the half-open probe slot without recording an outcome.
+
+        For probes that failed fast on a *downstream* open circuit: the
+        admitted call never exercised this edge, so it is evidence of
+        neither health nor sickness.  Without this release the breaker
+        would sit in half-open forever — probe slot consumed, every other
+        call failing fast, and (since no traffic flows) the downstream
+        breaker never getting the probe *it* needs to close: a whole-graph
+        recovery deadlock.  No-op in closed/open states."""
+        with self._lock:
+            if self._state == "half-open":
+                self._probing = False
+
+    def _trip(self) -> None:
+        # caller holds self._lock
+        self._state = "open"
+        self._opened_at = self._clock()
+        self._probing = False
+        self.opens += 1
+        self._samples.clear()
+
+
+@dataclass(frozen=True)
+class ResiliencePolicy:
+    """Everything an :class:`App` needs to survive past peak.
+
+    ``deadline`` is the default per-request budget (seconds) stamped onto
+    root sends that did not pass one explicitly; propagation downstream is
+    automatic.  ``retry`` enables budgeted retry-with-backoff on every
+    ``App.send`` edge.  ``breakers`` enables one :class:`CircuitBreaker`
+    per destination service.  ``mailbox_bound`` caps per-service admitted
+    in-flight requests; excess arrivals are rejected immediately
+    (queue-based load leveling) instead of building unbounded backlog.
+    """
+
+    deadline: Optional[float] = 0.05
+    retry: Optional[RetryPolicy] = None
+    breakers: bool = True
+    breaker_threshold: float = 0.5
+    breaker_window: int = 32
+    breaker_min_volume: int = 8
+    breaker_reset: float = 0.25
+    mailbox_bound: Optional[int] = None
+
+    def make_breaker(self,
+                     clock: Callable[[], float] = time.monotonic
+                     ) -> CircuitBreaker:
+        return CircuitBreaker(threshold=self.breaker_threshold,
+                              window=self.breaker_window,
+                              min_volume=self.breaker_min_volume,
+                              reset_timeout=self.breaker_reset,
+                              clock=clock)
+
+
+class ResilienceStats:
+    """Lock-free app-wide resilience counters.
+
+    Same idiom as ``Service._req_ticket``: each event consumes one ticket
+    from an atomic ``itertools.count`` (a single C-level operation under
+    the GIL — no lost updates across executor threads), and reads parse
+    the next value back out of the counter's repr.
+    """
+
+    __slots__ = ("_timeouts", "_retries", "_rejections")
+
+    def __init__(self) -> None:
+        self._timeouts = itertools.count(1)
+        self._retries = itertools.count(1)
+        self._rejections = itertools.count(1)
+
+    @staticmethod
+    def _read(counter: "itertools.count") -> int:
+        r = repr(counter)                    # e.g. "count(42)"
+        return int(r[r.index("(") + 1:-1]) - 1
+
+    def timeout(self) -> None:
+        next(self._timeouts)
+
+    def retry(self) -> None:
+        next(self._retries)
+
+    def rejection(self) -> None:
+        next(self._rejections)
+
+    @property
+    def timeouts(self) -> int:
+        return self._read(self._timeouts)
+
+    @property
+    def retries(self) -> int:
+        return self._read(self._retries)
+
+    @property
+    def rejections(self) -> int:
+        return self._read(self._rejections)

@@ -11,12 +11,17 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Generator, Optional
+from typing import Any, Callable, Dict, Generator, List, Optional
 
 from .effects import Sleep, Wait
 from .executor import Executor, make_executor
 from .future import Future
+from .resilience import (CircuitBreaker, CircuitOpenError, DeadlineExceeded,
+                         Rejected, ResiliencePolicy, ResilienceStats,
+                         RetryBudget)
+from .timers import TimerThread
 
 # Default inline-depth budget for the zero-handoff fast path: how many
 # levels of same-process cooperative callees may run as a direct
@@ -54,6 +59,16 @@ class Service:
         # (documented itertools.count behaviour), so the count is exact
         # with no lock acquire and no last-writer-wins race.
         self._req_ticket = itertools.count(1)
+        # Queue-based load leveling: when the app's resilience policy caps
+        # mailbox depth, admissions beyond the bound are rejected outright
+        # instead of building unbounded backlog.  The in-flight count is a
+        # plain int under its own small lock (one acquire per request at
+        # admission, one in the reply's done-callback).
+        pol = getattr(app, "resilience", None)
+        self._mailbox_bound: Optional[int] = (
+            pol.mailbox_bound if pol is not None else None)
+        self._adm_lock = threading.Lock()
+        self._inflight = 0
 
     @property
     def requests(self) -> int:
@@ -63,13 +78,37 @@ class Service:
     def count_request(self) -> None:
         next(self._req_ticket)
 
-    def deliver(self, method: str, payload: Any, reply: Future) -> None:
+    def _admission_release(self, _fut: Future) -> None:
+        with self._adm_lock:
+            self._inflight -= 1
+
+    def deliver(self, method: str, payload: Any, reply: Future,
+                deadline: Optional[float] = None) -> None:
         handler = self.handlers.get(method)
         if handler is None:
             reply.set_exception(KeyError(f"{self.name}: no method {method!r}"))
             return
+        if deadline is not None and time.monotonic() >= deadline:
+            # hop-level admission check: an already-expired request must not
+            # enter the mailbox — fail the reply, spawn nothing.
+            self.app._res_stats.timeout()
+            reply.set_exception(DeadlineExceeded(
+                f"{self.name}.{method}: deadline expired before dispatch"))
+            return
+        bound = self._mailbox_bound
+        if bound is not None:
+            with self._adm_lock:
+                admitted = self._inflight < bound
+                if admitted:
+                    self._inflight += 1
+            if not admitted:
+                self.app._res_stats.rejection()
+                reply.set_exception(Rejected(
+                    f"{self.name}: mailbox full ({bound} in flight)"))
+                return
+            reply.add_done_callback(self._admission_release)
         self.count_request()
-        self.executor.deliver(handler(self, payload), reply)
+        self.executor.deliver(handler(self, payload), reply, deadline)
 
     def inline_handler(self, method: str) -> Optional[Callable[..., Generator]]:
         """Zero-handoff fast path: return the handler iff this service's
@@ -186,17 +225,48 @@ class App:
         this many nested levels; beyond it (or for thread-family callees)
         the call falls back to carrier elision or the full carrier path.
         ``0`` disables the fast path entirely (the PR 3 dispatch path).
+    resilience:
+        Optional :class:`~repro.core.resilience.ResiliencePolicy` enabling
+        the overload-survival layer: default per-request deadlines, budgeted
+        retry-with-backoff, per-destination circuit breakers and bounded
+        service mailboxes.  ``None`` (the default) keeps the pre-resilience
+        send path bit-for-bit.
     """
 
     def __init__(self, backend: str = "fiber", net_latency: float = 0.0,
                  offload_threads: int = 2,
-                 inline_budget: int = INLINE_BUDGET_DEFAULT) -> None:
+                 inline_budget: int = INLINE_BUDGET_DEFAULT,
+                 resilience: Optional[ResiliencePolicy] = None) -> None:
         self.default_backend = backend
         self.net_latency = net_latency
         self.inline_budget = inline_budget
+        self.resilience = resilience
+        # Tier-1 call inlining runs the callee handler without touching the
+        # send path, which would bypass per-edge breakers, retries and
+        # mailbox bounds — only sound when the policy carries none of those
+        # (a bare default-deadline policy still inlines: deadlines ride the
+        # ambient propagation the interpreters already do).
+        self._inline_rpc_ok = resilience is None or (
+            not resilience.breakers and resilience.retry is None
+            and resilience.mailbox_bound is None)
         self.services: Dict[str, Service] = {}
         self.offload_pool = OffloadPool(offload_threads)
         self._started = False
+        # resilience machinery: app-wide counters, per-destination breakers,
+        # a retry token bucket, and one kernel-timer thread for backoff
+        # firings and pool-suspend deadline expiries (lazily started).
+        self._res_stats = ResilienceStats()
+        self._breakers: Dict[str, CircuitBreaker] = {}
+        self._breaker_lock = threading.Lock()
+        self._retry_budget: Optional[RetryBudget] = (
+            RetryBudget(resilience.retry)
+            if resilience is not None and resilience.retry is not None
+            else None)
+        self._timer = TimerThread()
+        # futures of requests a load-generation trial abandoned at sever
+        # time; the next trial settles on them before snapshotting stats
+        # (see loadgen.run_trial).
+        self._loadgen_leftovers: List[Future] = []
 
     # ------------------------------------------------------------- wiring
     def add_service(self, spec: ServiceSpec) -> Service:
@@ -227,6 +297,7 @@ class App:
         for svc in self.services.values():
             svc.executor.stop()
         self.offload_pool.stop()
+        self._timer.stop()
 
     def __enter__(self) -> "App":
         self.start()
@@ -236,13 +307,53 @@ class App:
         self.stop()
 
     # ---------------------------------------------------------- transport
-    def send(self, dest: str, method: str, payload: Any = None) -> Future:
+    def send(self, dest: str, method: str, payload: Any = None, *,
+             deadline: Optional[float] = None) -> Future:
         """Enqueue an RPC at ``dest``; returns the reply future.
-        Thread-safe; callable from any thread (incl. the load generator)."""
+        Thread-safe; callable from any thread (incl. the load generator).
+
+        ``deadline`` is an absolute ``time.monotonic()`` bound propagated
+        to every downstream hop.  With no deadline and no resilience
+        policy this is the original zero-overhead path."""
+        if self.resilience is None and deadline is None:
+            reply = Future()
+            if not self._started:
+                # fail fast: a delivery into a stopped app would sit in a
+                # dead executor's mailbox and hang any blocking waiter
+                reply.set_exception(RuntimeError(
+                    f"App is not started; cannot send {dest}.{method} "
+                    f"(start() it, or use it as a context manager)"))
+                return reply
+            svc = self.services.get(dest)
+            if svc is None:
+                reply.set_exception(KeyError(f"no service {dest!r}"))
+                return reply
+            svc.deliver(method, payload, reply)
+            return reply
+        return self._send_resilient(dest, method, payload, deadline)
+
+    def _breaker(self, dest: str) -> CircuitBreaker:
+        br = self._breakers.get(dest)
+        if br is None:
+            with self._breaker_lock:
+                br = self._breakers.get(dest)
+                if br is None:
+                    br = self.resilience.make_breaker()
+                    self._breakers[dest] = br
+        return br
+
+    def _send_resilient(self, dest: str, method: str, payload: Any,
+                        deadline: Optional[float]) -> Future:
+        """Policy-wrapped send: default deadline stamping, per-destination
+        circuit breaker, and budgeted retry-with-jittered-backoff.
+
+        The outer ``reply`` future is resolved exactly once, by whichever
+        attempt concludes the call; each attempt uses its own inner future,
+        so a late reply from a superseded attempt can never double-resolve
+        the caller's join (single-writer discipline preserved)."""
+        pol = self.resilience
         reply = Future()
         if not self._started:
-            # fail fast: a delivery into a stopped app would sit in a dead
-            # executor's mailbox and hang any blocking waiter forever
             reply.set_exception(RuntimeError(
                 f"App is not started; cannot send {dest}.{method} "
                 f"(start() it, or use it as a context manager)"))
@@ -251,17 +362,97 @@ class App:
         if svc is None:
             reply.set_exception(KeyError(f"no service {dest!r}"))
             return reply
-        svc.deliver(method, payload, reply)
+        if (deadline is None and pol is not None
+                and pol.deadline is not None):
+            deadline = time.monotonic() + pol.deadline
+        if deadline is not None and time.monotonic() >= deadline:
+            self._res_stats.timeout()
+            reply.set_exception(DeadlineExceeded(
+                f"{dest}.{method}: deadline already expired at send"))
+            return reply
+        breaker = (self._breaker(dest)
+                   if pol is not None and pol.breakers else None)
+        retry = pol.retry if pol is not None else None
+        if breaker is not None and not breaker.allow():
+            reply.set_exception(CircuitOpenError(
+                f"{dest}: circuit open, failing fast"))
+            return reply
+
+        attempts = [0]
+
+        def launch() -> None:
+            attempts[0] += 1
+            inner = Future()
+            inner.add_done_callback(on_done)
+            svc.deliver(method, payload, inner, deadline)
+
+        def on_done(f: Future) -> None:
+            try:
+                value = f.result()
+            except CircuitOpenError as exc:
+                # a *downstream* edge failed fast; propagate without
+                # recording a failure here (don't cascade trips) and
+                # without retrying into a known-open circuit.  If this
+                # attempt was a half-open probe, release the slot — the
+                # edge itself was never exercised (see abort_probe).
+                if breaker is not None:
+                    breaker.abort_probe()
+                reply.set_exception(exc)
+                return
+            except BaseException as exc:
+                if breaker is not None:
+                    breaker.record(False)
+                delay = _retry_delay(exc)
+                if delay is None:
+                    reply.set_exception(exc)
+                    return
+                self._res_stats.retry()
+                self._timer.push(time.monotonic() + delay, retry_fire)
+                return
+            if breaker is not None:
+                breaker.record(True)
+            if self._retry_budget is not None:
+                self._retry_budget.credit()
+            reply.set_result(value)
+
+        def _retry_delay(exc: BaseException) -> Optional[float]:
+            """Backoff before the next attempt, or None for no retry.
+            Deadline expiry is never retried (the attempt consumed the
+            whole budget); the token bucket caps amplification."""
+            if retry is None or isinstance(exc, DeadlineExceeded):
+                return None
+            if attempts[0] >= retry.max_attempts:
+                return None
+            delay = retry.backoff_for(attempts[0])
+            if (deadline is not None
+                    and time.monotonic() + delay >= deadline):
+                return None
+            if not self._retry_budget.try_spend():
+                return None
+            return delay
+
+        def retry_fire() -> None:
+            if not self._started:
+                reply.set_exception(RuntimeError(
+                    f"App stopped while retrying {dest}.{method}"))
+                return
+            if breaker is not None and not breaker.allow():
+                reply.set_exception(CircuitOpenError(
+                    f"{dest}: circuit opened during backoff, failing fast"))
+                return
+            launch()
+
+        launch()
         return reply
 
-    def rpc_carrier(self, dest: str, method: str,
-                    payload: Any) -> Generator:
+    def rpc_carrier(self, dest: str, method: str, payload: Any,
+                    deadline: Optional[float] = None) -> Generator:
         """The generator every async-call carrier runs: client-side network
         latency, send, block on reply.  Interpreted by a kernel thread
         (thread backend) or a fiber (fiber backend)."""
         if self.net_latency > 0:
             yield Sleep(self.net_latency)
-        reply = self.send(dest, method, payload)
+        reply = self.send(dest, method, payload, deadline=deadline)
         value = yield Wait(reply)
         return value
 
@@ -279,4 +470,8 @@ class App:
         agg = BackendStats()
         for s in self.services.values():
             agg.add(s.executor.stats())
+        agg.timeouts = self._res_stats.timeouts
+        agg.retries = self._res_stats.retries
+        agg.rejections = self._res_stats.rejections
+        agg.breaker_opens = sum(b.opens for b in self._breakers.values())
         return agg

@@ -20,7 +20,9 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from typing import Any, List, Optional, Tuple
+import threading
+import time
+from typing import Any, Callable, List, Optional, Tuple
 
 
 class TimerWheel:
@@ -59,3 +61,66 @@ class TimerWheel:
 
     def __bool__(self) -> bool:
         return bool(self._heap)
+
+
+class TimerThread:
+    """App-wide kernel-timed callback scheduler for the *non*-cooperative
+    paths: retry backoff firings and deadline expiry for pool-suspended
+    continuations, neither of which has a scheduler thread of its own to
+    park a :class:`TimerWheel` entry on.
+
+    One daemon thread sleeps on a condition variable until the earliest
+    deadline (no polling); callbacks run on that thread with the lock
+    released, so they may push further timers.  ``push`` is thread-safe and
+    lazily starts the thread, ``stop`` is idempotent, and the object is
+    restartable (``App.stop``/``start`` cycles, like the offload pool).
+    """
+
+    def __init__(self, name: str = "res-timer") -> None:
+        self._name = name
+        self._cond = threading.Condition()
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = False
+
+    def push(self, deadline: float, fn: Callable[[], None]) -> None:
+        """Run ``fn()`` on the timer thread at monotonic time ``deadline``."""
+        with self._cond:
+            heapq.heappush(self._heap, (deadline, next(self._seq), fn))
+            if self._thread is None or not self._thread.is_alive():
+                self._stop = False
+                self._thread = threading.Thread(
+                    target=self._loop, name=self._name, daemon=True)
+                self._thread.start()
+            else:
+                self._cond.notify()  # may have become the new earliest
+
+    def stop(self) -> None:
+        with self._cond:
+            thread = self._thread
+            self._stop = True
+            self._cond.notify_all()
+        if thread is not None:
+            thread.join(timeout=5.0)
+        with self._cond:
+            self._thread = None
+
+    def _loop(self) -> None:
+        while True:
+            due: List[Callable[[], None]] = []
+            with self._cond:
+                if self._stop:
+                    return
+                now = time.monotonic()
+                while self._heap and self._heap[0][0] <= now:
+                    due.append(heapq.heappop(self._heap)[2])
+                if not due:
+                    timeout = (self._heap[0][0] - now) if self._heap else None
+                    self._cond.wait(timeout=timeout)
+                    continue
+            for fn in due:
+                try:
+                    fn()
+                except Exception:
+                    pass  # a timer callback must never kill the wheel

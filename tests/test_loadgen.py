@@ -11,10 +11,18 @@ The open-loop generator caps concurrent in-flight requests at
 A gate service (every request parks on one externally-controlled future)
 makes saturation deterministic: exactly ``max_outstanding`` requests get in,
 everything else sheds, and nothing completes until the gate opens.
-"""
-import threading
 
-from repro.core import App, Compute, ServiceSpec, Wait, run_trial
+The regression tests at the bottom pin the two cross-trial bugs fixed in
+the resilience PR: leftover in-flight requests from a drained-out trial
+leaking into the next trial's ``BackendStats`` delta, and the latency
+summary racing late completions.
+"""
+import math
+import threading
+import time
+
+from repro.core import App, Compute, LatencyRecorder, ServiceSpec, Wait, \
+    run_trial
 from repro.core.future import Future
 
 
@@ -96,3 +104,87 @@ def test_no_shed_below_max_outstanding():
     assert tr.shed == 0, tr.row()
     assert tr.completed > 0, tr.row()
     assert tr.errors == 0, tr.row()
+
+
+# --------------------------------------------------------------- regressions
+def test_no_cross_trial_leakage():
+    """Requests abandoned by a drained-out trial must not pollute the next
+    trial's metrics.
+
+    Trial 1 parks its requests on a closed gate and uses a drain window too
+    short to outlast it, so it returns with leftovers in flight.  The gate
+    then opens *while trial 2 runs*.  Pre-fix, the leftovers' completions
+    landed inside trial 2's ``BackendStats`` delta (and their ``_done``
+    callbacks decremented a stale counter); post-fix, trial 2's settle phase
+    waits them out before its ``stats_before`` snapshot, and the severed
+    callbacks are no-ops.
+    """
+    gate = Future()
+
+    def _hold(svc, payload):
+        val = yield Wait(gate)
+        return val
+
+    def _fast(svc, payload):
+        yield Compute(0.0)
+        return payload
+
+    app = App(backend="fiber")
+    app.add_service(ServiceSpec("gate", {"hold": _hold}, n_workers=1))
+    app.add_service(ServiceSpec("fast", {"go": _fast}, n_workers=1))
+    with app:
+        tr1 = run_trial(app, _gate_factory, rate=200, duration=0.2, seed=5,
+                        max_outstanding=8, drain=0.05)
+        # the drain timed out: the admitted window is still parked
+        assert tr1.abandoned == 8, tr1.row()
+        assert tr1.completed == 0, tr1.row()
+        opener = threading.Timer(0.15, gate.set_result, args=("open",))
+        opener.start()
+        tr2 = run_trial(app, lambda rng: ("fast", "go", 1), rate=200,
+                        duration=0.4, seed=6)
+        opener.join()
+    assert tr2.errors == 0, tr2.row()
+    bs = tr2.backend_stats
+    # every completion classified inside trial 2's delta must be trial 2's
+    # own (one reply future per request on this no-RPC app); the 8 leftover
+    # gate requests completing mid-trial would show up as +8 here.
+    classified = bs["fast_futures"] + bs["slow_futures"]
+    assert tr2.completed - 1 <= classified <= tr2.completed + 1, \
+        (classified, tr2.completed, tr2.row())
+
+
+def test_summary_not_racing_late_completions(monkeypatch):
+    """The latency summary and the completion counters must describe the
+    same frozen state.
+
+    Pre-fix, ``rec.summary()`` ran while leftover requests could still
+    complete: a completion landing between the summary snapshot and the
+    ``rec.completed`` read produced a TrialResult with ``completed > 0``
+    but NaN percentiles.  The patched summary makes that interleaving
+    deterministic by opening the gate (and waiting for the completions)
+    inside the summary call itself.  Post-fix the trial is severed before
+    the summary, so the late completions are counted as abandoned and the
+    result stays self-consistent.
+    """
+    gate = Future()
+    app = _build_gated_app(gate)
+    real_summary = LatencyRecorder.summary
+
+    def patched(self):
+        s = real_summary(self)
+        if not gate.done:
+            gate.set_result("open")
+            time.sleep(0.3)  # let the gated requests complete (pre-fix:
+            #                  they mutate the recorder right here)
+        return s
+
+    monkeypatch.setattr(LatencyRecorder, "summary", patched)
+    with app:
+        tr = run_trial(app, _gate_factory, rate=100, duration=0.15, seed=7,
+                       max_outstanding=4, drain=0.05)
+    # consistency: completions reported must be the ones the percentiles
+    # summarize (pre-fix: completed == 4 with p50 == NaN)
+    if tr.completed:
+        assert math.isfinite(tr.p50), tr.row()
+    assert tr.completed + tr.abandoned == 4, tr.row()
+    assert tr.abandoned == 4, tr.row()

@@ -1,0 +1,506 @@
+"""Resilience layer: deadlines, retries, breakers, bounds, overload mode.
+
+Covers the policy objects (unit tests with injected clocks — no sleeping
+through state machines), enforcement across the full backend matrix
+(timeouts must fire on every backend, armed by timers rather than polling
+on the cooperative ones), and the overload harness built on top.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import (BACKEND_NAMES, App, AsyncRpc, CircuitBreaker,
+                        CircuitOpenError, Compute, DeadlineExceeded,
+                        Rejected, ResiliencePolicy, RetryPolicy, ServiceSpec,
+                        Sleep, Wait, run_overload, run_trial)
+from repro.core.future import Future
+from repro.core.resilience import RetryBudget
+from repro.core.timers import TimerThread
+
+
+# --------------------------------------------------------------- app helpers
+def _sleepy_app(backend: str, leaf_sleep: float = 0.2,
+                resilience=None) -> App:
+    """root --rpc--> leaf, leaf sleeps: the canonical deadline victim."""
+    def leaf(svc, payload):
+        yield Sleep(leaf_sleep)
+        return "leaf"
+
+    def root(svc, payload):
+        f = yield AsyncRpc("leaf", "get", payload)
+        return (yield Wait(f))
+
+    app = App(backend=backend, net_latency=0.0, resilience=resilience)
+    app.add_service(ServiceSpec("leaf", {"get": leaf}, n_workers=1))
+    app.add_service(ServiceSpec("root", {"get": root}, n_workers=1))
+    return app
+
+
+# ------------------------------------------------------------------ deadlines
+@pytest.mark.parametrize("backend", BACKEND_NAMES)
+def test_deadline_expires_on_every_backend(backend):
+    """A per-call deadline shorter than the leaf's sleep must resolve the
+    reply with DeadlineExceeded — on all 8 backends — and tick the app-wide
+    timeout counter."""
+    app = _sleepy_app(backend, leaf_sleep=0.25)
+    with app:
+        fut = app.send("root", "get", None,
+                       deadline=time.monotonic() + 0.02)
+        with pytest.raises(DeadlineExceeded):
+            fut.wait(timeout=5.0)
+        assert app.backend_stats().timeouts >= 1
+
+
+@pytest.mark.parametrize("backend", ["fiber", "fiber-batch", "fiber-batch-cq",
+                                     "event-loop", "event-loop-shard"])
+def test_deadline_fires_by_timer_not_drain(backend):
+    """Cooperative backends arm the expiry on their timer wheel: it must
+    fire close to the deadline even though the parked request would
+    otherwise never resume (the gate stays closed), proving there is a
+    timer driving it and not a poll-on-next-completion."""
+    gate = Future()
+
+    def hold(svc, payload):
+        return (yield Wait(gate))
+
+    app = App(backend=backend, net_latency=0.0)
+    app.add_service(ServiceSpec("gate", {"hold": hold}, n_workers=1))
+    with app:
+        t0 = time.monotonic()
+        fut = app.send("gate", "hold", None, deadline=t0 + 0.05)
+        with pytest.raises(DeadlineExceeded):
+            fut.wait(timeout=5.0)
+        elapsed = time.monotonic() - t0
+        gate.set_result("open")  # release the parked generator
+    assert elapsed >= 0.04, elapsed          # not failed eagerly
+    assert elapsed < 1.0, elapsed            # fired by the timer, promptly
+
+
+@pytest.mark.parametrize("backend", BACKEND_NAMES)
+def test_deadline_propagates_to_nested_hops(backend):
+    """An expired budget must cut the whole chain: the root's AsyncRpc to a
+    second hop happens after the deadline passed, so the downstream call
+    fails fast instead of doing dead work."""
+    done_leaf = []
+
+    def leaf(svc, payload):
+        done_leaf.append(1)
+        yield Compute(0.0)
+        return "leaf"
+
+    def root(svc, payload):
+        yield Sleep(0.08)  # burn the whole budget before the hop
+        f = yield AsyncRpc("leaf", "get", payload)
+        return (yield Wait(f))
+
+    app = App(backend=backend, net_latency=0.0)
+    app.add_service(ServiceSpec("leaf", {"get": leaf}, n_workers=1))
+    app.add_service(ServiceSpec("root", {"get": root}, n_workers=1))
+    with app:
+        fut = app.send("root", "get", None,
+                       deadline=time.monotonic() + 0.02)
+        with pytest.raises(DeadlineExceeded):
+            fut.wait(timeout=5.0)
+    assert not done_leaf  # the downstream hop never ran dead work
+
+
+def test_policy_default_deadline_is_stamped():
+    """With a ResiliencePolicy, sends that pass no explicit deadline get
+    the policy default."""
+    pol = ResiliencePolicy(deadline=0.02, breakers=False)
+    app = _sleepy_app("fiber", leaf_sleep=0.3, resilience=pol)
+    with app:
+        with pytest.raises(DeadlineExceeded):
+            app.send("root", "get").wait(timeout=5.0)
+        assert app.backend_stats().timeouts >= 1
+
+
+# -------------------------------------------------------------------- retries
+def test_retry_succeeds_after_transient_failures():
+    attempts = []
+
+    def flaky(svc, payload):
+        attempts.append(1)
+        if len(attempts) < 3:
+            raise RuntimeError("transient")
+        return "ok"
+        yield  # make it a generator
+
+    pol = ResiliencePolicy(deadline=1.0, breakers=False,
+                           retry=RetryPolicy(max_attempts=3,
+                                             base_backoff=0.001))
+    app = App(backend="fiber", net_latency=0.0, resilience=pol)
+    app.add_service(ServiceSpec("flaky", {"get": flaky}, n_workers=1))
+    with app:
+        assert app.send("flaky", "get").wait(timeout=5.0) == "ok"
+        assert app.backend_stats().retries == 2
+    assert len(attempts) == 3
+
+
+def test_retry_attempts_capped():
+    attempts = []
+
+    def dead(svc, payload):
+        attempts.append(1)
+        raise RuntimeError("permanent")
+        yield
+
+    pol = ResiliencePolicy(deadline=2.0, breakers=False,
+                           retry=RetryPolicy(max_attempts=3,
+                                             base_backoff=0.001))
+    app = App(backend="fiber", net_latency=0.0, resilience=pol)
+    app.add_service(ServiceSpec("dead", {"get": dead}, n_workers=1))
+    with app:
+        with pytest.raises(RuntimeError, match="permanent"):
+            app.send("dead", "get").wait(timeout=5.0)
+    assert len(attempts) == 3  # first try + 2 retries, then give up
+
+
+def test_retry_budget_extinguishes_storm():
+    """Under a hard outage the token bucket drains and retries dry up:
+    total attempts stay bounded by sends + budget, not sends x attempts."""
+    attempts = []
+
+    def dead(svc, payload):
+        attempts.append(1)
+        raise RuntimeError("outage")
+        yield
+
+    pol = ResiliencePolicy(
+        deadline=5.0, breakers=False,
+        retry=RetryPolicy(max_attempts=4, base_backoff=0.0005,
+                          budget_initial=3.0, budget_ratio=0.0))
+    app = App(backend="fiber", net_latency=0.0, resilience=pol)
+    app.add_service(ServiceSpec("dead", {"get": dead}, n_workers=1))
+    with app:
+        futs = [app.send("dead", "get") for _ in range(10)]
+        for f in futs:
+            with pytest.raises(RuntimeError):
+                f.wait(timeout=5.0)
+        stats = app.backend_stats()
+    # 10 first tries + at most 3 budget tokens of retries
+    assert len(attempts) <= 13, len(attempts)
+    assert stats.retries <= 3, stats.retries
+
+
+def test_deadline_exceeded_is_not_retried():
+    pol = ResiliencePolicy(deadline=0.02, breakers=False,
+                           retry=RetryPolicy(max_attempts=5,
+                                             base_backoff=0.001))
+    app = _sleepy_app("fiber", leaf_sleep=0.3, resilience=pol)
+    with app:
+        with pytest.raises(DeadlineExceeded):
+            app.send("root", "get").wait(timeout=5.0)
+        assert app.backend_stats().retries == 0
+
+
+def test_retry_budget_unit():
+    budget = RetryBudget(RetryPolicy(budget_initial=2.0, budget_ratio=0.5,
+                                     budget_cap=3.0))
+    assert budget.try_spend() and budget.try_spend()
+    assert not budget.try_spend()          # drained
+    for _ in range(10):
+        budget.credit()                    # successes refill, capped
+    assert budget.tokens == 3.0
+    assert budget.try_spend()
+
+
+def test_backoff_bounds():
+    pol = RetryPolicy(base_backoff=0.002, max_backoff=0.05, jitter=0.5)
+    for attempt in range(1, 12):
+        d = pol.backoff_for(attempt)
+        assert 0.0 <= d <= 0.05 * 1.5, (attempt, d)
+
+
+# ------------------------------------------------------------------- breakers
+def test_breaker_state_transitions_fake_clock():
+    now = [0.0]
+    br = CircuitBreaker(threshold=0.5, window=8, min_volume=4,
+                        reset_timeout=1.0, clock=lambda: now[0])
+    assert br.state == "closed"
+    for _ in range(4):
+        assert br.allow()
+        br.record(False)
+    assert br.state == "open"
+    assert br.opens == 1
+    assert not br.allow()                  # fail-fast while open
+    now[0] = 0.5
+    assert not br.allow()                  # still inside reset_timeout
+    now[0] = 1.5
+    assert br.allow()                      # admits the half-open probe
+    assert br.state == "half-open"
+    assert not br.allow()                  # ...but only one probe at a time
+    br.record(False)                       # probe failed -> reopen
+    assert br.state == "open"
+    assert br.opens == 2
+    now[0] = 3.0
+    assert br.allow()
+    br.record(True)                        # probe succeeded -> close
+    assert br.state == "closed"
+    for _ in range(4):                     # window was cleared on close
+        assert br.allow()
+        br.record(True)
+    assert br.state == "closed"
+
+
+def test_breaker_abort_probe_releases_slot():
+    """A half-open probe aborted by a downstream open circuit must free
+    the probe slot; otherwise the breaker is stuck half-open forever and
+    the graph can never heal (regression: whole-app recovery deadlock)."""
+    now = [0.0]
+    br = CircuitBreaker(threshold=0.5, window=8, min_volume=4,
+                        reset_timeout=1.0, clock=lambda: now[0])
+    for _ in range(4):
+        br.allow()
+        br.record(False)
+    now[0] = 2.0
+    assert br.allow()                      # half-open probe admitted
+    assert not br.allow()
+    br.abort_probe()                       # probe died on a downstream edge
+    assert br.state == "half-open"
+    assert br.allow()                      # a fresh probe may go
+    br.record(True)
+    assert br.state == "closed"
+    br.abort_probe()                       # no-op outside half-open
+    assert br.state == "closed"
+
+
+def test_breaker_graph_heals_after_outage():
+    """Chain root->leaf: a leaf outage opens both edges (the root edge via
+    the propagated real errors).  Once the leaf heals, the whole chain must
+    close again within a few reset timeouts — half-open probes aborted by
+    the still-open leaf edge must not wedge the root edge (regression:
+    stuck half-open, ok-rate pinned at zero forever)."""
+    healthy = threading.Event()
+
+    def leaf(svc, payload):
+        if not healthy.is_set():
+            raise RuntimeError("outage")
+        return "ok"
+        yield
+
+    def root(svc, payload):
+        f = yield AsyncRpc("leaf", "get", payload)
+        return (yield Wait(f))
+
+    pol = ResiliencePolicy(deadline=2.0, breakers=True,
+                           breaker_min_volume=4, breaker_window=8,
+                           breaker_reset=0.05)
+    app = App(backend="fiber", net_latency=0.0, resilience=pol)
+    app.add_service(ServiceSpec("leaf", {"get": leaf}, n_workers=1))
+    app.add_service(ServiceSpec("root", {"get": root}, n_workers=1))
+    with app:
+        for _ in range(30):  # drive both edges open
+            try:
+                app.send("root", "get").wait(timeout=5.0)
+            except RuntimeError:  # includes CircuitOpenError
+                pass
+        assert app._breakers["leaf"].state != "closed"
+        healthy.set()
+        deadline = time.monotonic() + 5.0
+        recovered = False
+        while time.monotonic() < deadline:
+            try:
+                if app.send("root", "get").wait(timeout=5.0) == "ok":
+                    recovered = True
+                    break
+            except RuntimeError:
+                time.sleep(0.01)
+        assert recovered
+        assert app._breakers["leaf"].state == "closed"
+
+
+@pytest.mark.parametrize("backend", BACKEND_NAMES)
+def test_breaker_fail_fast_on_every_backend(backend):
+    """A persistently failing destination must trip its per-edge breaker
+    and subsequent sends must fail fast with CircuitOpenError — on all 8
+    backends."""
+    def bad(svc, payload):
+        raise RuntimeError("always fails")
+        yield
+
+    pol = ResiliencePolicy(deadline=2.0, breakers=True,
+                           breaker_min_volume=4, breaker_window=8,
+                           breaker_reset=30.0)
+    app = App(backend=backend, net_latency=0.0, resilience=pol)
+    app.add_service(ServiceSpec("bad", {"get": bad}, n_workers=1))
+    with app:
+        opened = False
+        for _ in range(30):
+            try:
+                app.send("bad", "get").wait(timeout=5.0)
+            except CircuitOpenError:
+                opened = True
+                break
+            except RuntimeError:
+                continue
+        assert opened
+        assert app.backend_stats().breaker_opens >= 1
+        # while open, the edge stays fail-fast
+        with pytest.raises(CircuitOpenError):
+            app.send("bad", "get").wait(timeout=5.0)
+
+
+def test_downstream_open_circuit_does_not_trip_upstream():
+    """CircuitOpenError raised by a downstream edge propagates to the
+    caller but is NOT recorded as a failure of the upstream edge — open
+    circuits must not cascade up the call graph."""
+    def bad(svc, payload):
+        raise RuntimeError("always fails")
+        yield
+
+    def mid(svc, payload):
+        f = yield AsyncRpc("bad", "get", payload)
+        try:
+            return (yield Wait(f))
+        except CircuitOpenError:
+            raise  # downstream failing fast: surface it to the caller
+        except RuntimeError:
+            return "degraded"  # real downstream errors are handled here
+
+    pol = ResiliencePolicy(deadline=2.0, breakers=True,
+                           breaker_min_volume=4, breaker_window=8,
+                           breaker_reset=30.0)
+    app = App(backend="fiber", net_latency=0.0, resilience=pol)
+    app.add_service(ServiceSpec("bad", {"get": bad}, n_workers=1))
+    app.add_service(ServiceSpec("mid", {"get": mid}, n_workers=1))
+    with app:
+        saw_open = 0
+        for _ in range(40):
+            try:
+                app.send("mid", "get").wait(timeout=5.0)
+            except CircuitOpenError:
+                saw_open += 1
+        breakers = app._breakers
+        assert breakers["bad"].state == "open"
+        assert saw_open > 0  # the open downstream circuit did reach callers
+        # ...but those CircuitOpenError replies must not count against the
+        # mid edge: only 'bad' trips
+        assert breakers["mid"].state == "closed"
+        assert app.backend_stats().breaker_opens == breakers["bad"].opens
+
+
+# ---------------------------------------------------------------- load level
+def test_bounded_mailbox_rejects_excess():
+    def slow(svc, payload):
+        yield Sleep(0.2)
+        return "ok"
+
+    pol = ResiliencePolicy(deadline=5.0, breakers=False, mailbox_bound=2)
+    app = App(backend="thread", net_latency=0.0, resilience=pol)
+    app.add_service(ServiceSpec("slow", {"get": slow}, n_workers=4))
+    with app:
+        futs = [app.send("slow", "get") for _ in range(8)]
+        outcomes = []
+        for f in futs:
+            try:
+                outcomes.append(f.wait(timeout=5.0))
+            except Rejected:
+                outcomes.append("rejected")
+        stats = app.backend_stats()
+    assert outcomes.count("ok") == 2
+    assert outcomes.count("rejected") == 6
+    assert stats.rejections == 6
+
+
+# -------------------------------------------------------------- timer thread
+def test_timer_thread_orders_and_restarts():
+    fired = []
+    cond = threading.Condition()
+    t = TimerThread(name="test-timer")
+
+    def mark(tag):
+        with cond:
+            fired.append(tag)
+            cond.notify()
+
+    now = time.monotonic()
+    t.push(now + 0.05, lambda: mark("late"))
+    t.push(now + 0.01, lambda: mark("early"))
+    with cond:
+        assert cond.wait_for(lambda: len(fired) == 2, timeout=5.0)
+    assert fired == ["early", "late"]
+    t.stop()
+    t.stop()  # idempotent
+    # restartable: a push after stop lazily brings the thread back
+    t.push(time.monotonic() + 0.01, lambda: mark("again"))
+    with cond:
+        assert cond.wait_for(lambda: len(fired) == 3, timeout=5.0)
+    t.stop()
+
+
+def test_timer_thread_callback_exception_does_not_kill_loop():
+    fired = []
+    cond = threading.Condition()
+    t = TimerThread(name="test-timer-exc")
+
+    def boom():
+        raise RuntimeError("callback bug")
+
+    def mark():
+        with cond:
+            fired.append(1)
+            cond.notify()
+
+    now = time.monotonic()
+    t.push(now + 0.005, boom)
+    t.push(now + 0.02, mark)
+    with cond:
+        assert cond.wait_for(lambda: fired, timeout=5.0)
+    t.stop()
+
+
+# ------------------------------------------------------------- goodput/overload
+def test_goodput_classification():
+    """Completions slower than the trial deadline are completed but not
+    good; goodput excludes them without enforcement."""
+    def slow(svc, payload):
+        yield Sleep(0.05)
+        return "ok"
+
+    app = App(backend="fiber", net_latency=0.0)
+    app.add_service(ServiceSpec("slow", {"get": slow}, n_workers=1))
+    with app:
+        tr = run_trial(app, lambda rng: ("slow", "get", None), rate=50,
+                       duration=0.3, seed=11, deadline=0.01)
+    assert tr.completed > 0, tr.row()
+    assert tr.good == 0, tr.row()
+    assert tr.goodput_rps == 0.0, tr.row()
+    assert tr.offered >= tr.completed, tr.row()
+
+
+def test_run_overload_smoke():
+    """End-to-end overload harness on a tiny app: drives past the peak,
+    reports goodput and recovers."""
+    def fast(svc, payload):
+        yield Compute(0.0)
+        return "ok"
+
+    pol = ResiliencePolicy(deadline=0.05, breakers=True,
+                           retry=RetryPolicy(base_backoff=0.001))
+    app = App(backend="fiber", net_latency=0.0, resilience=pol)
+    app.add_service(ServiceSpec("fast", {"get": fast}, n_workers=1))
+    with app:
+        res = run_overload(app, lambda rng: ("fast", "get", None),
+                           peak_rps=300.0, deadline=0.05, multiple=3.0,
+                           duration=0.3, recovery_duration=0.15,
+                           recovery_timeout=3.0, seed=12)
+    assert res.overload_rps == pytest.approx(900.0)
+    assert res.overload.offered > 0
+    assert res.overload.goodput_rps >= 0.0
+    assert res.recovered, res
+    assert res.recovery_time < 3.0
+    assert res.probes
+
+
+def test_trial_row_mentions_resilience_counters():
+    """The human row surfaces the new counters when they fire."""
+    pol = ResiliencePolicy(deadline=0.01, breakers=False)
+    app = _sleepy_app("fiber", leaf_sleep=0.2, resilience=pol)
+    with app:
+        tr = run_trial(app, lambda rng: ("root", "get", None), rate=30,
+                       duration=0.2, seed=13, deadline=0.01,
+                       enforce_deadline=True, drain=1.0)
+    assert tr.errors > 0, tr.row()
+    assert "to=" in tr.row(), tr.row()

@@ -226,11 +226,17 @@ def test_committed_baseline_is_current_schema():
     assert baseline["records"], "committed baseline has no records"
     keys = {r["key"] for r in baseline["records"]}
     # full matrix: every registered app x backend cell contributes an rps
-    # AND a p99 record, and the rpc-path micro one record per backend
+    # AND a p99 record, the rpc-path micro one record per backend, and the
+    # overload probe its two paired goodput cells
+    from benchmarks.bench_smoke import (OVERLOAD_PROBE_APP,
+                                        OVERLOAD_PROBE_BACKEND)
     from repro.apps import APP_NAMES, BENCH_BACKENDS
     expected = {f"{a}/{b}" for a in APP_NAMES for b in BENCH_BACKENDS}
     expected |= {f"{a}/{b}/p99" for a in APP_NAMES for b in BENCH_BACKENDS}
     expected |= {f"rpc_path/{b}" for b in BENCH_BACKENDS}
+    expected |= {
+        f"overload/{OVERLOAD_PROBE_APP}/{OVERLOAD_PROBE_BACKEND}/{label}"
+        for label in ("breakers-off", "breakers-on")}
     assert keys == expected
     # self-diff passes trivially
     report = trend.compare(baseline, baseline)
@@ -321,6 +327,48 @@ def test_warn_only_cells_surface_loudly_but_never_fail():
     (row,) = [r for r in report["rows"]
               if r["key"] == "socialnetwork/fiber/p99"]
     assert row["status"] == "warn"
+
+
+def test_overload_cells_get_wide_band_and_warn_only():
+    """Goodput-past-peak cells: noise "overload" widens the band (a 0.45x
+    drop that would fail an ordinary rps cell stays a warning), and the
+    warn-only tag keeps even a collapse beyond the 0.90 cap from failing
+    the run — bimodal breaker-trip behavior cannot support a hard gate."""
+    def overload_art(value, gate=None):
+        rec = {"key": "overload/socialnetwork/fiber/breakers-on",
+               "app": "socialnetwork", "backend": "fiber",
+               "metric": "goodput_rps", "unit": "rps",
+               "direction": "higher", "noise": "overload",
+               "value": value, "errors": 0}
+        if gate:
+            rec["gate"] = gate
+        return {"schema_version": trend.SCHEMA_VERSION,
+                "apps": ["socialnetwork"], "records": [rec]}
+
+    # 0.55 ratio: outside the plain 0.35 floor, inside the overload 0.50
+    report = trend.compare(overload_art(550.0), overload_art(1000.0))
+    assert report["regressions"] == []
+    assert len(report["warnings"]) == 1
+    # 0.05 ratio: beyond even the 0.90 cap — warn-only still never fails
+    report = trend.compare(overload_art(50.0, gate="warn-only"),
+                           overload_art(1000.0, gate="warn-only"))
+    assert report["regressions"] == []
+    assert any("warn-only" in w for w in report["warnings"])
+    # untagged collapse beyond the cap does fail (the band has a floor)
+    report = trend.compare(overload_art(50.0), overload_art(1000.0))
+    assert len(report["regressions"]) == 1
+
+
+def test_smoke_overload_records_are_warn_only():
+    """The committed baseline's overload cells must carry the warn-only
+    tag bench_smoke writes."""
+    path = REPO / "launch_results" / "baseline_smoke.json"
+    records = json.loads(path.read_text())["records"]
+    overload = [r for r in records if r["key"].startswith("overload/")]
+    assert len(overload) == 2
+    for r in overload:
+        assert r.get("gate") == "warn-only", r["key"]
+        assert r.get("noise") == "overload", r["key"]
 
 
 def test_smoke_p99_records_are_warn_only_and_rpc_records_micro():
