@@ -2,38 +2,63 @@
 
 The paper's protocol stops at the peak — "increase the request rate until
 processed requests per second does not increase anymore".  This table asks
-what happens *past* it: every app × backend cell is driven at a fixed
-multiple of its own measured peak with per-request deadlines enforced, and
-scored on
+what happens *past* it, in three movements:
 
-* **goodput** — completions within the deadline per second (raw rps past
-  the peak rewards finishing requests nobody is still waiting for), and
-* **recovery time** — after the overload window, how long until a
+* **collapse-knee sweep** — every app × backend cell is driven at 2x, 3x,
+  4x and 5x its own measured peak with per-request deadlines enforced,
+  producing a goodput-vs-offered curve.  The **knee** is the largest
+  multiple whose goodput still holds ``KNEE_FRACTION`` of the cell's best
+  goodput across the sweep: the last sustainable point before congestion
+  collapse.  A cell whose goodput never drops below the fraction reports
+  the top of the sweep range (``collapsed=no`` — its knee is >= 5x).
+* **recovery** — after a 3x overload window, how long until a
   comfortably-sustainable probe rate is served at healthy goodput again
-  (how fast the backlog drains).
+  (how fast the backlog drains; same protocol as PR 6).
+* **retry storm** — one app driven past its peak with an effectively
+  *uncapped* retry budget and no breakers: the metastable-failure
+  ingredient.  Scored on **amplification** (delivered attempts per offered
+  request, ``1 + retries/offered``) per queueing discipline — the
+  mailbox/carrier design each backend uses is exactly what shapes how a
+  storm feeds on itself.
 
-Each cell runs with the full resilience layer (``repro.core.resilience``):
-per-hop deadline propagation, budgeted retries, per-edge circuit breakers.
-The breakers-on-vs-off A/B comparison (interleaved paired rounds, same
-runner weather) lives in ``bench_smoke._overload_probe`` so CI re-measures
-it every run.
+Each sweep/recovery cell runs the full resilience layer
+(``repro.core.resilience``): per-hop deadline propagation, budgeted
+retries, per-edge circuit breakers.  The breakers-on-vs-off A/B comparison
+(interleaved paired rounds, same runner weather) lives in
+``bench_smoke._overload_probe``; the smoke lane also records a warn-only
+knee trend cell via ``measure_collapse_sweep`` at smoke scale.
 
 Rows follow the harness convention (``name,us_per_call,derived``): goodput
 rows report ``1e6 / goodput`` in the us column with ``goodput_rps=`` in
-derived; recovery rows report the recovery time in us with ``s=`` derived
-(``inf`` recovery is reported as 0 goodput-style sentinel ``recovered=no``).
+derived (one row per sweep multiple, plus the legacy bare ``goodput`` row
+for the 3x point); ``knee`` rows put the knee *multiple* in the value
+column; recovery rows report the recovery time in us with ``s=`` derived
+(``inf`` recovery is reported as 0 goodput-style sentinel
+``recovered=no``); ``retry_storm`` rows put the amplification factor in
+the value column.  The whole sweep is also written as a JSON artifact
+(default ``launch_results/overload_sweep.json``) so the curves survive
+with more structure than the CSV rows carry.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.apps import (APP_NAMES, BENCH_BACKENDS, build_bench_app,
                         get_app_def)
 from repro.core import (ResiliencePolicy, RetryPolicy, find_peak_throughput,
-                        run_overload, warmup)
+                        run_overload, run_trial, warmup)
 
-MULTIPLE = 3.0        # overload rate = MULTIPLE x the cell's measured peak
+MULTIPLE = 3.0        # the recovery phase's overload rate (PR 6 protocol)
+SWEEP_MULTIPLES = (2.0, 3.0, 4.0, 5.0)
+KNEE_FRACTION = 0.7   # goodput >= this fraction of the sweep's best => held
 WORKLOAD = "mixed"
+STORM_APP = "socialnetwork"   # the retry storm runs on one app, per backend
+
+ARTIFACT_DEFAULT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "launch_results", "overload_sweep.json")
 
 
 def _policy(deadline: float) -> ResiliencePolicy:
@@ -41,35 +66,137 @@ def _policy(deadline: float) -> ResiliencePolicy:
                             breakers=True)
 
 
-def measure_overload(app_name: str, backend: str, *,
-                     workload: str = WORKLOAD, multiple: float = MULTIPLE,
-                     peak_duration: float = 0.4, duration: float = 1.0,
-                     recovery_timeout: float = 5.0,
-                     verbose: bool = False):
-    """One cell: quick peak ramp, then ``multiple``x overload + recovery."""
-    d = get_app_def(app_name)
-    factory = d.make_request_factory(workload)
-    deadline = d.deadlines.get(workload, 0.08)
+def _storm_policy(deadline: float) -> ResiliencePolicy:
+    """The metastable configuration: bounded mailboxes + retries with an
+    effectively unbounded token budget and no breakers.  Deadline expiries
+    are never retried by design, so an *unbounded* queue under overload
+    produces no retry traffic at all; the bound converts excess arrivals
+    into ``Rejected`` — a retryable failure — and with the budget
+    uncapped every rejection is re-sent up to the attempt cap.  Nothing
+    fails fast, nothing extinguishes the storm: each retry is another
+    arrival at the same full mailbox."""
+    return ResiliencePolicy(
+        deadline=deadline, breakers=False, mailbox_bound=128,
+        retry=RetryPolicy(max_attempts=4, base_backoff=0.001,
+                          max_backoff=0.004,
+                          budget_initial=1e9, budget_ratio=1.0,
+                          budget_cap=1e9))
+
+
+def _measure_peak(app_name: str, backend: str, policy: ResiliencePolicy,
+                  factory, *, peak_duration: float,
+                  verbose: bool = False) -> float:
     # peak measured on the app under test — the resilience-configured one.
-    # A policy with breakers/retries routes nested hops through App.send
-    # (per-edge accounting; tier-1 inlining steps aside), so its peak is
-    # genuinely lower than the plain app's: overloading at a multiple of
-    # the *plain* peak would start several-x past this system's capacity
-    # and the recovery probe would never be sustainable.  3x *its own*
-    # peak is the protocol; the plain-vs-policy capacity gap is quoted by
-    # the ordinary peak_throughput table.
-    with build_bench_app(app_name, backend,
-                         resilience=_policy(deadline)) as app:
+    # Overloading at a multiple of the *plain* peak would start several-x
+    # past this system's capacity; the plain-vs-policy capacity gap is
+    # quoted by the ordinary peak_throughput table.
+    with build_bench_app(app_name, backend, resilience=policy) as app:
         warmup(app, factory)
         pk = find_peak_throughput(app, factory, start_rate=200, growth=1.7,
                                   duration=peak_duration, max_trials=10,
                                   verbose=verbose)
+    return pk.peak_rps
+
+
+def collapse_knee(curve: List[Dict[str, Any]],
+                  fraction: float = KNEE_FRACTION) -> Tuple[float, bool]:
+    """Locate the collapse knee on a goodput-vs-offered curve.
+
+    ``curve`` is a list of ``{"multiple", "goodput_rps", ...}`` points.
+    Returns ``(knee_multiple, collapsed)``: the largest multiple whose
+    goodput holds ``fraction`` of the best goodput anywhere on the sweep,
+    and whether any point fell below it (``collapsed=False`` means the
+    knee lies at or beyond the top of the sweep range).  If even the
+    lowest multiple is below the fraction (a cell already drowning at 2x),
+    the knee reports one notch *below* the sweep — the smallest multiple
+    minus 1 — so the artifact still carries a number and the trend line
+    still moves when the cell degrades further.
+    """
+    if not curve:
+        return float("nan"), False
+    best = max(p["goodput_rps"] for p in curve)
+    held = [p["multiple"] for p in curve
+            if best > 0 and p["goodput_rps"] >= fraction * best]
+    collapsed = len(held) < len(curve)
+    if not held:
+        return min(p["multiple"] for p in curve) - 1.0, True
+    return max(held), collapsed
+
+
+def measure_collapse_sweep(app_name: str, backend: str, *,
+                           workload: str = WORKLOAD,
+                           multiples: Sequence[float] = SWEEP_MULTIPLES,
+                           peak_duration: float = 0.4, duration: float = 1.0,
+                           verbose: bool = False) -> Dict[str, Any]:
+    """One cell's goodput-vs-offered curve + knee.
+
+    Each multiple runs on a *fresh* app (same build, same policy): breaker
+    state and executor counters from one overload point must not leak into
+    the next, and the curve should be four independent measurements of
+    "what does this system do at m x peak", not a history-dependent ramp.
+    """
+    d = get_app_def(app_name)
+    factory = d.make_request_factory(workload)
+    deadline = d.deadlines.get(workload, 0.08)
+    peak = _measure_peak(app_name, backend, _policy(deadline), factory,
+                         peak_duration=peak_duration, verbose=verbose)
+    curve: List[Dict[str, Any]] = []
+    for m in multiples:
+        with build_bench_app(app_name, backend,
+                             resilience=_policy(deadline)) as app:
+            warmup(app, factory)
+            tr = run_trial(app, factory, m * peak, duration, seed=7,
+                           drain=0.25, deadline=deadline,
+                           enforce_deadline=True, settle=1.0)
+        bs = tr.backend_stats
+        curve.append({
+            "multiple": m,
+            "offered_rps": round(m * peak, 1),
+            "achieved_rps": round(tr.achieved_rps, 1),
+            "goodput_rps": round(tr.goodput_rps, 1),
+            "timeouts": int(bs.get("timeouts", 0)),
+            "retries": int(bs.get("retries", 0)),
+            "breaker_opens": int(bs.get("breaker_opens", 0)),
+            "rejections": int(bs.get("rejections", 0)),
+            "bulkhead_rejections": int(bs.get("bulkhead_rejections", 0)),
+        })
+        if verbose:
+            print(f"    sweep {m:g}x", tr.row(), flush=True)
+    knee, collapsed = collapse_knee(curve)
+    return {
+        "app": app_name,
+        "backend": backend,
+        "workload": workload,
+        "peak_rps": round(peak, 1),
+        "deadline_s": deadline,
+        "knee_fraction": KNEE_FRACTION,
+        "curve": curve,
+        "knee_multiple": knee,
+        "collapsed": collapsed,
+    }
+
+
+def measure_overload(app_name: str, backend: str, *,
+                     workload: str = WORKLOAD, multiple: float = MULTIPLE,
+                     peak_duration: float = 0.4, duration: float = 1.0,
+                     recovery_timeout: float = 5.0,
+                     peak_rps: Optional[float] = None,
+                     verbose: bool = False):
+    """One cell: ``multiple``x overload + recovery (quick peak ramp first
+    unless the caller already measured ``peak_rps``)."""
+    d = get_app_def(app_name)
+    factory = d.make_request_factory(workload)
+    deadline = d.deadlines.get(workload, 0.08)
+    if peak_rps is None:
+        peak_rps = _measure_peak(app_name, backend, _policy(deadline),
+                                 factory, peak_duration=peak_duration,
+                                 verbose=verbose)
     # fresh app for the overload phase: ramp-phase breaker state and
     # counters must not leak into the reported cell
     with build_bench_app(app_name, backend,
                          resilience=_policy(deadline)) as app:
         warmup(app, factory)
-        res = run_overload(app, factory, peak_rps=pk.peak_rps,
+        res = run_overload(app, factory, peak_rps=peak_rps,
                            deadline=deadline, multiple=multiple,
                            duration=duration,
                            recovery_timeout=recovery_timeout,
@@ -78,32 +205,129 @@ def measure_overload(app_name: str, backend: str, *,
     return res, stats
 
 
+def measure_retry_storm(app_name: str, backend: str, *,
+                        workload: str = WORKLOAD, multiple: float = MULTIPLE,
+                        peak_duration: float = 0.4, duration: float = 1.0,
+                        verbose: bool = False) -> Dict[str, Any]:
+    """Retry amplification past the peak with an uncapped budget.
+
+    Amplification = delivered attempts per offered request
+    (``1 + retries / offered``).  With the token budget effectively
+    infinite, the only damper left is the attempt cap — how close each
+    queueing discipline gets to that ceiling under the same overload is
+    the metastability exposure being measured.
+    """
+    d = get_app_def(app_name)
+    factory = d.make_request_factory(workload)
+    deadline = d.deadlines.get(workload, 0.08)
+    peak = _measure_peak(app_name, backend, _storm_policy(deadline), factory,
+                         peak_duration=peak_duration, verbose=verbose)
+    with build_bench_app(app_name, backend,
+                         resilience=_storm_policy(deadline)) as app:
+        warmup(app, factory)
+        tr = run_trial(app, factory, multiple * peak, duration, seed=9,
+                       drain=0.25, deadline=deadline,
+                       enforce_deadline=True, settle=1.0)
+    bs = tr.backend_stats
+    retries = int(bs.get("retries", 0))
+    offered = max(tr.offered, 1)
+    return {
+        "app": app_name,
+        "backend": backend,
+        "workload": workload,
+        "peak_rps": round(peak, 1),
+        "multiple": multiple,
+        "offered": tr.offered,
+        "retries": retries,
+        "timeouts": int(bs.get("timeouts", 0)),
+        "amplification": round(1.0 + retries / offered, 3),
+        "goodput_rps": round(tr.goodput_rps, 1),
+    }
+
+
 def run(quick: bool = False,
-        apps: Optional[Sequence[str]] = None) -> List[str]:
+        apps: Optional[Sequence[str]] = None,
+        json_path: Optional[str] = ARTIFACT_DEFAULT) -> List[str]:
     peak_duration = 0.25 if quick else 0.4
     duration = 0.5 if quick else 1.0
     recovery_timeout = 3.0 if quick else 5.0
     apps = list(apps) if apps else list(APP_NAMES)
     rows: List[str] = []
+    artifact: Dict[str, Any] = {
+        "schema_version": 1,
+        "workload": WORKLOAD,
+        "multiples": list(SWEEP_MULTIPLES),
+        "knee_fraction": KNEE_FRACTION,
+        "cells": {},
+        "retry_storm": {},
+    }
     for app_name in apps:
         for backend in BENCH_BACKENDS:
-            res, stats = measure_overload(
+            cell = measure_collapse_sweep(
                 app_name, backend, peak_duration=peak_duration,
-                duration=duration, recovery_timeout=recovery_timeout)
-            g = res.overload.goodput_rps
-            derived = (f"goodput_rps={g:.0f};peak_rps={res.peak_rps:.0f};"
-                       f"offered_rps={res.overload_rps:.0f};"
-                       f"to={stats.timeouts};rtry={stats.retries};"
-                       f"brko={stats.breaker_opens};rej={stats.rejections}")
-            rows.append(f"overload/{app_name}/{WORKLOAD}/{backend}/goodput,"
-                        f"{1e6 / max(g, 1e-9):.2f},{derived}")
+                duration=duration)
+            key = f"{app_name}/{backend}"
+            base = f"overload/{app_name}/{WORKLOAD}/{backend}"
+            for p in cell["curve"]:
+                g = p["goodput_rps"]
+                derived = (f"goodput_rps={g:.0f};"
+                           f"peak_rps={cell['peak_rps']:.0f};"
+                           f"offered_rps={p['offered_rps']:.0f};"
+                           f"to={p['timeouts']};rtry={p['retries']};"
+                           f"brko={p['breaker_opens']};"
+                           f"rej={p['rejections']};"
+                           f"bhrej={p['bulkhead_rejections']}")
+                rows.append(f"{base}/goodput@{p['multiple']:g}x,"
+                            f"{1e6 / max(g, 1e-9):.2f},{derived}")
+                if p["multiple"] == MULTIPLE:
+                    # legacy PR 6 row name for CSV continuity
+                    rows.append(f"{base}/goodput,"
+                                f"{1e6 / max(g, 1e-9):.2f},{derived}")
+            knee_derived = (f"knee_multiple={cell['knee_multiple']:g};"
+                            f"collapsed="
+                            f"{'yes' if cell['collapsed'] else 'no'};"
+                            f"curve=" + "|".join(
+                                f"{p['multiple']:g}:{p['goodput_rps']:.0f}"
+                                for p in cell["curve"]))
+            rows.append(f"{base}/knee,{cell['knee_multiple']:g},"
+                        f"{knee_derived}")
+            # recovery continuity row (3x overload + probe-until-healthy),
+            # reusing the sweep's peak so the ramp is paid once per cell
+            res, stats = measure_overload(
+                app_name, backend, duration=duration,
+                recovery_timeout=recovery_timeout,
+                peak_rps=cell["peak_rps"])
             rec = res.recovery_time if res.recovered else float("inf")
             rec_derived = (f"s={rec:.3f};recovered="
                            f"{'yes' if res.recovered else 'no'};"
                            f"probes={len(res.probes)}")
             rec_us = rec * 1e6 if res.recovered else 0.0
-            rows.append(f"overload/{app_name}/{WORKLOAD}/{backend}/recovery,"
-                        f"{rec_us:.0f},{rec_derived}")
+            rows.append(f"{base}/recovery,{rec_us:.0f},{rec_derived}")
+            cell["recovery"] = {
+                "recovered": res.recovered,
+                "recovery_time_s": (round(res.recovery_time, 3)
+                                    if res.recovered else None),
+                "probes": len(res.probes),
+                "overload_goodput_rps": round(res.overload.goodput_rps, 1),
+            }
+            artifact["cells"][key] = cell
+    if STORM_APP in apps:
+        for backend in BENCH_BACKENDS:
+            storm = measure_retry_storm(
+                STORM_APP, backend, peak_duration=peak_duration,
+                duration=duration)
+            rows.append(
+                f"overload/{STORM_APP}/{WORKLOAD}/{backend}/retry_storm,"
+                f"{storm['amplification']:.3f},"
+                f"amplification={storm['amplification']:.3f};"
+                f"retries={storm['retries']};offered={storm['offered']};"
+                f"to={storm['timeouts']};"
+                f"goodput_rps={storm['goodput_rps']:.0f}")
+            artifact["retry_storm"][backend] = storm
+    if json_path:
+        os.makedirs(os.path.dirname(json_path), exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
     return rows
 
 

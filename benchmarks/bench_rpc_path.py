@@ -14,17 +14,26 @@ CSV rows (``name,us_per_call,derived``):
     rpc_path/fiber,1.85,ns=1850 inline=20480 spawns=0
     rpc_path/fiber+noinline,31.40,ns=31398 inline=0 spawns=20480
     rpc_path/fiber_fastpath_speedup,16.97,x_vs_noinline
+    rpc_path/fiber+resilient,3.90,ns=3902 inline=20480 spawns=0
+    rpc_path/fiber_resilient_overhead,2.11,x_vs_plain
 
 The ``*_fastpath_speedup`` rows are the acceptance metric for PR 4:
 inlined cooperative calls must come in >= 2x cheaper than the same
-backend's carrier path.
+backend's carrier path.  The ``+resilient`` rows (PR 7) rerun the inline
+configuration with a full breakers + budgeted-retry + bulkhead policy:
+since the fast path became breaker-aware, the policy adds per-call
+bookkeeping (deadline stamp, breaker window, bulkhead slot) instead of
+forcing the carrier path, and the ``*_resilient_overhead`` ratio quotes
+that bookkeeping — the PR 7 acceptance bound is <= 3x the plain ns/call,
+with ``inline=`` proving the fast path stayed engaged.
 """
 from __future__ import annotations
 
 import time
 from typing import Dict, List, Optional
 
-from repro.core import (App, AsyncRpc, BACKEND_NAMES, ServiceSpec, Wait)
+from repro.core import (App, AsyncRpc, BACKEND_NAMES, ResiliencePolicy,
+                        RetryPolicy, ServiceSpec, Wait)
 
 # backends whose AsyncRpc path the fast path accelerates.  Thread-family
 # backends keep the full carrier path by design; fiber-batch and
@@ -48,8 +57,17 @@ def _chain(svc, payload):
     return acc
 
 
-def _build(backend: str, inline: bool) -> App:
-    app = App(backend=backend)
+def resilient_policy() -> ResiliencePolicy:
+    """The policy priced by the ``+resilient`` rows: breakers + budgeted
+    retries + a bulkhead, with a deadline far above the per-call cost so
+    the measurement never trips the machinery it is pricing."""
+    return ResiliencePolicy(deadline=5.0, breakers=True, bulkhead=1024,
+                            retry=RetryPolicy())
+
+
+def _build(backend: str, inline: bool,
+           resilience: Optional[ResiliencePolicy] = None) -> App:
+    app = App(backend=backend, resilience=resilience)
     if not inline:
         app.inline_budget = 0  # PR 3 carrier path
     app.add_service(ServiceSpec("leaf", {"echo": _leaf}, n_workers=1))
@@ -58,10 +76,11 @@ def _build(backend: str, inline: bool) -> App:
 
 
 def measure_rpc_cost(backend: str, *, inline: bool = True,
+                     resilience: Optional[ResiliencePolicy] = None,
                      calls_per_req: int = 64, iters: int = 20,
                      warmup_iters: int = 3) -> Dict[str, float]:
     """Wall time per synchronous leaf RPC issued from inside a handler."""
-    with _build(backend, inline) as app:
+    with _build(backend, inline, resilience) as app:
         for _ in range(warmup_iters):
             app.send("driver", "run", calls_per_req).wait(timeout=30)
         t0 = time.perf_counter()
@@ -105,6 +124,21 @@ def run(quick: bool = False,
             res[backend]["ns_per_call"], 1e-9)
         rows.append(f"rpc_path/{backend}_fastpath_speedup,"
                     f"{speedup:.2f},x_vs_noinline")
+    for backend in backends:
+        if backend not in INLINE_BACKENDS:
+            continue
+        r = measure_rpc_cost(backend, resilience=resilient_policy(),
+                             iters=iters)
+        res[backend + "+resilient"] = r
+        rows.append(f"rpc_path/{backend}+resilient,"
+                    f"{r['ns_per_call'] / 1e3:.2f},"
+                    f"ns={r['ns_per_call']:.0f}"
+                    f" inline={r['inline_calls']:.0f}"
+                    f" spawns={r['spawns']:.0f}")
+        overhead = r["ns_per_call"] / max(
+            res[backend]["ns_per_call"], 1e-9)
+        rows.append(f"rpc_path/{backend}_resilient_overhead,"
+                    f"{overhead:.2f},x_vs_plain")
     return rows
 
 

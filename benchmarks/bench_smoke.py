@@ -44,7 +44,16 @@ Compute-serialization ceiling).
 It also runs one **overload probe** (breakers-on vs breakers-off on
 socialnetwork at ``OVERLOAD_MULTIPLE``x the measured peak, scored on
 goodput — see ``_overload_probe``); its goodput records enter the trend
-gate with their own wide ``overload`` noise band.
+gate with their own wide ``overload`` noise band.  A **collapse-knee
+probe** (PR 7) runs ``bench_overload.measure_collapse_sweep`` at smoke
+scale on the same app and records the knee multiple as a warn-only trend
+cell — at smoke scale the knee is as bimodal as the goodput it derives
+from, so it is surfaced, never gated; the per-cell knees live in the full
+bench's ``launch_results/overload_sweep.json`` artifact.  The rpc_path
+records additionally include a ``+resilient`` cell per cooperative
+backend (full breakers + retry + bulkhead policy with the fast path
+engaged), giving the breaker-aware inline admission cost its own trend
+line next to the plain ns/call.
 
 The process exits non-zero iff a cell errors or parity is violated — the
 steal/design/overload probes and the raw numbers are artifact data, not
@@ -325,32 +334,53 @@ def _overload_probe(max_rounds: int = PROBE_MAX_ROUNDS) -> Dict[str, Any]:
     return probe
 
 
+def _knee_probe() -> Dict[str, Any]:
+    """Smoke-scale collapse-knee sweep (see ``bench_overload``): one cell
+    (the overload probe's app x backend), 2-5x the measured peak, reported
+    as the knee multiple.  Warn-only trend data — at smoke scale the knee
+    inherits the goodput bimodality of its parent metric."""
+    from .bench_overload import measure_collapse_sweep
+    return measure_collapse_sweep(OVERLOAD_PROBE_APP,
+                                  OVERLOAD_PROBE_BACKEND,
+                                  peak_duration=0.25, duration=0.3)
+
+
 def _rpc_path_records(out: Dict[str, Any]) -> None:
     """Per-RPC dispatch cost trend line: one cheap paired micro trial per
     backend (see bench_rpc_path.py), recorded like any other cell so
-    benchmarks/trend.py inherits a ns/call regression gate.  Errors are
-    smoke failures — the microbenchmark exercising the fast path must not
-    rot silently."""
-    from .bench_rpc_path import measure_rpc_cost
+    benchmarks/trend.py inherits a ns/call regression gate.  The
+    cooperative backends get a second ``+resilient`` cell — the same
+    inline configuration under a full breakers + retry + bulkhead policy —
+    so the breaker-aware admission cost (PR 7) has its own trend line.
+    Errors are smoke failures — the microbenchmark exercising the fast
+    path must not rot silently."""
+    from .bench_rpc_path import (INLINE_BACKENDS, measure_rpc_cost,
+                                 resilient_policy)
     out["rpc_path"] = {}
-    for backend in BENCH_BACKENDS:
+    variants = [(backend, None) for backend in BENCH_BACKENDS]
+    variants += [(backend, "resilient") for backend in BENCH_BACKENDS
+                 if backend in INLINE_BACKENDS]
+    for backend, variant in variants:
+        label = backend if variant is None else f"{backend}+{variant}"
+        pol = None if variant is None else resilient_policy()
         try:
             # best-of-3 (vs SMOKE_TRIALS=2 elsewhere): the micro is cheap
             # (~tens of ms per trial) and min-of-3 stabilizes the
             # machine-absolute ns figure considerably
             trials = [round(measure_rpc_cost(
-                backend, iters=4, calls_per_req=32)["ns_per_call"], 1)
+                backend, resilience=pol, iters=4,
+                calls_per_req=32)["ns_per_call"], 1)
                 for _ in range(max(SMOKE_TRIALS, 3))]
         except Exception as exc:  # noqa: BLE001 - cell isolation
-            out["rpc_path"][backend] = {"status": "error",
-                                        "error": repr(exc)}
-            out["failures"].append(f"rpc_path/{backend}: {exc!r}")
+            out["rpc_path"][label] = {"status": "error",
+                                      "error": repr(exc)}
+            out["failures"].append(f"rpc_path/{label}: {exc!r}")
             continue
         best = min(trials)  # lower is better: best-of mirrors the rps cells
-        out["rpc_path"][backend] = {"status": "ok", "ns_per_call": best,
-                                    "trials": trials}
+        out["rpc_path"][label] = {"status": "ok", "ns_per_call": best,
+                                  "trials": trials}
         out["records"].append({
-            "key": f"rpc_path/{backend}",
+            "key": f"rpc_path/{label}",
             "app": "_rpc_path",   # not a registry app: micro, app-agnostic
             "backend": backend,
             "metric": "ns_per_call",
@@ -361,7 +391,7 @@ def _rpc_path_records(out: Dict[str, Any]) -> None:
             "trials": trials,
             "errors": 0,
         })
-        print(f"rpc_path {backend}: ns/call={best} trials={trials}",
+        print(f"rpc_path {label}: ns/call={best} trials={trials}",
               flush=True)
 
 
@@ -531,6 +561,34 @@ def run_smoke(apps: Optional[Sequence[str]] = None,
                   f"(opens={probe['breaker_opens']} "
                   f"to={probe['timeouts']} rtry={probe['retries']}, "
                   f"rounds={probe['rounds']})", flush=True)
+        try:
+            knee = _knee_probe()
+        except Exception as exc:  # noqa: BLE001 - keep the artifact
+            knee = {"status": "error", "error": repr(exc)}
+            out["failures"].append(f"knee_probe: {exc!r}")
+        out["knee_probe"] = knee
+        if "knee_multiple" in knee:
+            out["records"].append({
+                "key": f"overload/{OVERLOAD_PROBE_APP}/"
+                       f"{OVERLOAD_PROBE_BACKEND}/knee",
+                "app": OVERLOAD_PROBE_APP,
+                "backend": OVERLOAD_PROBE_BACKEND,
+                "metric": "knee_multiple",
+                "unit": "x",
+                "direction": "higher",
+                "noise": "overload",
+                # the knee derives from goodput past the peak, which is
+                # bimodal at smoke scale — surface moves, never gate
+                "gate": "warn-only",
+                "value": knee["knee_multiple"],
+                "errors": 0,
+            })
+            print(f"knee probe {OVERLOAD_PROBE_APP} "
+                  f"[{OVERLOAD_PROBE_BACKEND}]: "
+                  f"knee={knee['knee_multiple']:g}x "
+                  f"collapsed={knee['collapsed']} curve="
+                  + "|".join(f"{p['multiple']:g}:{p['goodput_rps']:.0f}"
+                             for p in knee["curve"]), flush=True)
     _rpc_path_records(out)
     if json_path:
         with open(json_path, "w") as f:

@@ -7,8 +7,11 @@ Tables:
   2. rpc_path         — per-RPC dispatch cost, zero-handoff fast path on/off
   3. peak_throughput  — paper Figure 1 (peak rps, app x workload x backend)
   4. p99_latency      — paper Figure 2 (p99 vs offered rate)
-  5. overload         — beyond-peak goodput + time-to-recover, resilience
-                        layer on (deadlines/retries/breakers; bench_overload)
+  5. overload         — 2-5x collapse-knee sweep (goodput-vs-offered curve
+                        + knee multiple per cell), time-to-recover, and the
+                        uncapped-budget retry-storm amplification table,
+                        resilience layer on (bench_overload; also writes
+                        launch_results/overload_sweep.json)
   6. serving          — beyond-paper: LLM serving engine, thread vs fiber
   7. roofline         — dry-run roofline terms (reads launch/dryrun results)
 

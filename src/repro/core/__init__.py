@@ -11,8 +11,9 @@ from .future import CompletedFuture, Future, Once
 from .loadgen import (OverloadResult, RequestFactory, find_peak_throughput,
                       latency_sweep, run_overload, run_trial, warmup)
 from .metrics import BackendStats, LatencyRecorder, PeakResult, TrialResult
-from .resilience import (CircuitBreaker, CircuitOpenError, DeadlineExceeded,
-                         Rejected, ResiliencePolicy, RetryPolicy)
+from .resilience import (Bulkhead, CircuitBreaker, CircuitOpenError,
+                         DeadlineExceeded, Rejected, ResiliencePolicy,
+                         RetryBudget, RetryPolicy)
 from .service import App, Service, ServiceSpec
 
 __all__ = [
@@ -24,5 +25,6 @@ __all__ = [
     "run_overload", "OverloadResult", "RequestFactory",
     "LatencyRecorder", "TrialResult", "PeakResult",
     "DeadlineExceeded", "CircuitOpenError", "Rejected",
-    "RetryPolicy", "CircuitBreaker", "ResiliencePolicy",
+    "RetryPolicy", "RetryBudget", "CircuitBreaker", "Bulkhead",
+    "ResiliencePolicy",
 ]

@@ -35,11 +35,15 @@ from typing import Any, Callable, List, Optional, Tuple
 
 
 class Effect:
+    """Marker base class for everything a handler may ``yield``."""
+
     __slots__ = ()
 
 
 @dataclass
 class AsyncRpc(Effect):
+    """Fire an async RPC; resumes immediately with the reply Future."""
+
     dest: str
     method: str
     payload: Any = None
@@ -52,32 +56,46 @@ class AsyncRpc(Effect):
 
 @dataclass
 class Wait(Effect):
+    """Join one future; resumes with its result (or raises its error)."""
+
     future: Any
 
 
 @dataclass
 class WaitAll(Effect):
+    """Join a list of futures; resumes with their results, in order."""
+
     futures: List[Any]
 
 
 @dataclass
 class Sleep(Effect):
+    """Wait-dominated I/O time (DB/network); never burns CPU."""
+
     seconds: float
 
 
 @dataclass
 class Compute(Effect):
+    """Calibrated *real* CPU burn — the service's on-CPU work."""
+
     seconds: float
 
 
 @dataclass
 class Offload(Effect):
+    """Run a blocking callable on the shared offload pool; resumes with a
+    Future."""
+
     fn: Callable[..., Any]
     args: Tuple[Any, ...] = field(default_factory=tuple)
 
 
 @dataclass
 class SpawnLocal(Effect):
+    """Run another handler generator async on the *same* service (no
+    transport); resumes with a Future."""
+
     genfn: Callable[..., Any]
     args: Tuple[Any, ...] = field(default_factory=tuple)
 

@@ -115,12 +115,14 @@ class EventLoopExecutor:
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> None:
+        """Start the loop thread."""
         self._stop = False
         self._thread = threading.Thread(target=self._loop,
                                         name=f"{self.name}-loop", daemon=True)
         self._thread.start()
 
     def stop(self) -> None:
+        """Signal the loop thread to exit and join it (bounded)."""
         with self._cond:
             self._stop = True
             self._cond.notify()
@@ -129,6 +131,7 @@ class EventLoopExecutor:
 
     def deliver(self, gen: Generator, reply: Future,
                 deadline: Optional[float] = None) -> None:
+        """Inject the request as a continuation on the loop's inbox."""
         self._inject(gen, reply, None, deadline)
 
     # ------------------------------------------------------------ injection
@@ -277,8 +280,9 @@ class EventLoopExecutor:
                     and app.inline_budget > 0:
                 # zero-handoff fast path: inline the cooperative callee,
                 # else elide the carrier (the reply future IS the result —
-                # see FiberScheduler._interpret for the two tiers).  Inline
-                # is skipped when the policy needs per-edge accounting.
+                # see FiberScheduler._interpret for the two tiers).
+                # Breaker/retry/bulkhead policies inline with per-edge
+                # accounting; only a mailbox bound skips the inline tier.
                 fut = (self._try_inline(eff, app, dl)
                        if app._inline_rpc_ok else None)
                 if fut is not None:
@@ -311,24 +315,28 @@ class EventLoopExecutor:
     def _try_inline(self, eff: Any, app: Any,
                     deadline: Optional[float] = None) -> Optional[Future]:
         """Same-carrier call inlining on the loop thread; see
-        FiberScheduler._try_inline for the contract."""
+        FiberScheduler._try_inline for the contract.  Policy admission and
+        outcome recording live in ``App._inline_call``; the loop gates only
+        its own depth budget."""
         if self._inline_depth >= app.inline_budget:
             return None
-        svc = app.services.get(eff.dest)
-        if svc is None:
-            return None
-        handler = svc.inline_handler(eff.method)
-        if handler is None:
-            return None
-        svc.count_request()
+        return app._inline_call(eff.dest, eff.method, eff.payload, deadline,
+                                self._inline_drive)
+
+    def _inline_drive(self, gen: Generator,
+                      deadline: Optional[float]) -> Future:
+        """Loop-side bookkeeping around :meth:`_drive_inline` (mirror of
+        ``FiberScheduler._inline_drive``): inline counters plus the
+        ``_cur_deadline`` save/restore so the callee's nested hops tighten
+        against the inline call's effective bound."""
         self.inline_calls += 1
         self._inline_depth += 1
         if self._inline_depth > self.inline_depth_hwm:
             self.inline_depth_hwm = self._inline_depth
         prev_deadline = self._cur_deadline
-        self._cur_deadline = deadline  # callee's hops tighten against it
+        self._cur_deadline = deadline
         try:
-            return self._drive_inline(handler(svc, eff.payload), deadline)
+            return self._drive_inline(gen, deadline)
         finally:
             self._cur_deadline = prev_deadline
             self._inline_depth -= 1
@@ -429,6 +437,7 @@ class EventLoopExecutor:
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> BackendStats:
+        """Snapshot this loop's counters."""
         return BackendStats(spawns=self.spawns, switches=self.switches,
                             queue_depth_hwm=self.queue_depth_hwm,
                             inline_calls=self.inline_calls,
@@ -480,15 +489,18 @@ class ShardedEventLoopExecutor:
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> None:
+        """Start every shard loop."""
         for s in self._shards:
             s.start()
 
     def stop(self) -> None:
+        """Stop every shard loop."""
         for s in self._shards:
             s.stop()
 
     def deliver(self, gen: Generator, reply: Future,
                 deadline: Optional[float] = None) -> None:
+        """Hash the request onto its shard (pinned for life)."""
         shard = self.shard_for(next(self._ticket), self.n_shards)
         if deadline is None:  # common path keeps the pre-deadline signature
             self._shards[shard].deliver(gen, reply)
@@ -498,9 +510,11 @@ class ShardedEventLoopExecutor:
     # ---------------------------------------------------------------- stats
     @property
     def spawns(self) -> int:
+        """Spawns across shards (always 0: loops spawn no carriers)."""
         return sum(s.spawns for s in self._shards)
 
     def stats(self) -> BackendStats:
+        """Aggregate counters across shards (+ the shard-width gauge)."""
         agg = BackendStats()
         for s in self._shards:
             agg.add(s.stats())

@@ -65,7 +65,14 @@ by ``App.inline_budget``), returning a pre-resolved ``CompletedFuture`` when
 it never suspends; calls that cannot inline still skip the carrier spawn by
 returning the transport reply future directly (carrier elision).  Thread
 backends keep the full carrier path — their kernel dispatch cost is the
-baseline under study.  See ``fiber.FiberScheduler._try_inline``.
+baseline under study.  The fast path is **breaker-aware** (PR 7):
+interpreters only gate on the inline depth budget and then delegate
+admission to ``service.App._inline_call``, which applies the same
+deadline-stamping, circuit-breaker and bulkhead checks as the carrier path
+and records inline outcomes into the same per-edge windows — only a bounded
+service mailbox (``ResiliencePolicy.mailbox_bound``) forces the carrier
+path, because an inlined call never occupies a mailbox slot.  See
+``fiber.FiberScheduler._try_inline`` and ``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 
@@ -106,6 +113,7 @@ class Executor:
 
     def deliver(self, gen: Generator, reply: Future,
                 deadline: Optional[float] = None) -> None:
+        """Accept one handler generator; resolve ``reply`` when it finishes."""
         raise NotImplementedError
 
     def _count_timeout(self) -> None:
@@ -114,9 +122,11 @@ class Executor:
             app._res_stats.timeout()
 
     def start(self) -> None:
+        """Bring up dispatcher threads/schedulers."""
         raise NotImplementedError
 
     def stop(self) -> None:
+        """Tear down (bounded joins; pending work is abandoned)."""
         raise NotImplementedError
 
     # instrumentation
@@ -144,6 +154,7 @@ class ThreadExecutor(Executor):
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> None:
+        """Spawn the dispatcher threads that drain the mailbox."""
         for i in range(self.n_workers):
             t = threading.Thread(target=self._dispatch_loop,
                                  name=f"{self.name}-disp{i}", daemon=True)
@@ -151,6 +162,7 @@ class ThreadExecutor(Executor):
             self._threads.append(t)
 
     def stop(self) -> None:
+        """Poison and join every dispatcher."""
         for _ in self._threads:
             self._mailbox.put(_SHUTDOWN)
         for t in self._threads:
@@ -159,6 +171,7 @@ class ThreadExecutor(Executor):
 
     def deliver(self, gen: Generator, reply: Future,
                 deadline: Optional[float] = None) -> None:
+        """Queue the request on the shared dispatcher mailbox."""
         self._mailbox.put((gen, reply, deadline))
 
     # ------------------------------------------------------------- dispatch
@@ -292,6 +305,7 @@ class ThreadExecutor(Executor):
             self.spawn_seconds += time.perf_counter() - t0
 
     def stats(self) -> BackendStats:
+        """Snapshot this executor's counters."""
         with self._lock:
             return BackendStats(spawns=self.spawns,
                                 spawn_seconds=self.spawn_seconds,
@@ -355,6 +369,7 @@ class PooledThreadExecutor(ThreadExecutor):
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> None:
+        """Spawn dispatchers plus the bounded carrier pool."""
         super().start()  # dispatchers
         self._shutdown = False
         for i in range(self.pool_size):
@@ -365,6 +380,7 @@ class PooledThreadExecutor(ThreadExecutor):
             self._pool_ids.add(t.ident)
 
     def stop(self) -> None:
+        """Stop dispatchers, then drain and join the pool."""
         super().stop()  # dispatchers first: no new submissions
         with self._qlock:
             self._shutdown = True
@@ -593,6 +609,7 @@ class PooledThreadExecutor(ThreadExecutor):
                 self._drive(gen, fut, deadline)
 
     def stats(self) -> BackendStats:
+        """Snapshot counters, including pool backpressure gauges."""
         with self._lock:
             return BackendStats(spawns=self.spawns,
                                 spawn_seconds=self.spawn_seconds,
@@ -664,26 +681,32 @@ class FiberExecutor(Executor):
 
     @property
     def spawns(self) -> int:  # type: ignore[override]
+        """Fibers spawned across this executor's schedulers."""
         return sum(s.fibers_spawned for s in self._scheds)
 
     @property
     def switches(self) -> int:
+        """Fiber context switches across schedulers."""
         return sum(s.switches for s in self._scheds)
 
     @property
     def steals(self) -> int:
+        """Fibers stolen by idle schedulers (steal mode only)."""
         return sum(s.steals for s in self._scheds)
 
     def start(self) -> None:
+        """Start every scheduler thread."""
         for s in self._scheds:
             s.start()
 
     def stop(self) -> None:
+        """Stop every scheduler thread (bounded joins)."""
         for s in self._scheds:
             s.stop()
 
     def deliver(self, gen: Generator, reply: Future,
                 deadline: Optional[float] = None) -> None:
+        """Place the request on a scheduler (round-robin)."""
         # Round-robin placement in both modes (as in boost, whose
         # work_stealing algorithm also keeps naive local placement and lets
         # the steal path fix imbalance).  A least-loaded placement variant
@@ -697,6 +720,7 @@ class FiberExecutor(Executor):
             s.spawn_external(gen, reply, deadline=deadline)
 
     def stats(self) -> BackendStats:
+        """Aggregate counters across schedulers (rings included)."""
         # ring counters exist only on the batch/cq scheduler subclasses;
         # getattr keeps one aggregation path for all four fiber variants.
         def agg(field: str) -> int:
@@ -747,6 +771,7 @@ BACKEND_NAMES = tuple(BACKEND_FACTORIES)
 
 def make_executor(backend: str, app: Any, name: str,
                   n_workers: int) -> Executor:
+    """Build the executor registered under ``backend`` for one service."""
     try:
         factory = BACKEND_FACTORIES[backend]
     except KeyError:

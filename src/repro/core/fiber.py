@@ -91,13 +91,16 @@ class StealGroup:
         self._idle: "set[FiberScheduler]" = set()
 
     def attach(self, sched: "FiberScheduler") -> None:
+        """Add a scheduler to the steal group."""
         self.members.append(sched)
 
     def register_idle(self, sched: "FiberScheduler") -> None:
+        """Mark a scheduler as out of ready fibers (steal target picker)."""
         with self._lock:
             self._idle.add(sched)
 
     def unregister_idle(self, sched: "FiberScheduler") -> None:
+        """Mark a scheduler busy again."""
         with self._lock:
             self._idle.discard(sched)
 
@@ -183,6 +186,7 @@ class FiberScheduler:
             self._cond.notify()
 
     def start(self) -> None:
+        """Start (or restart) the scheduler's owner thread."""
         # reset the stop latch so a stopped scheduler can be restarted (an
         # App stop()->start() round trip re-enters every executor); without
         # this the fresh thread would observe the stale flag and exit at
@@ -194,6 +198,7 @@ class FiberScheduler:
         self._thread.start()
 
     def stop(self) -> None:
+        """Signal the owner thread to exit and join it (bounded)."""
         with self._cond:
             self._stop = True
             self._cond.notify()
@@ -202,6 +207,7 @@ class FiberScheduler:
 
     # ----------------------------------------------------------- main loop
     def run(self) -> None:
+        """Owner-thread main loop: inject, drive ready fibers, idle-park."""
         self._ident = threading.get_ident()  # owner ident for this life
         while True:
             # 1. pull external events / decide idle sleep under the lock
@@ -417,9 +423,11 @@ class FiberScheduler:
             if app is not None and app.net_latency == 0 \
                     and app.inline_budget > 0:
                 # Zero-handoff fast path.  Tier 1: run the callee handler
-                # inline (no mailbox, no carrier, no handoff at all) — unless
-                # the resilience policy needs per-edge accounting, in which
-                # case the hop must go through App.send (tier 2 below).
+                # inline (no mailbox, no carrier, no handoff at all).
+                # Breaker/retry/bulkhead policies inline with per-edge
+                # accounting (App._inline_resilient); only a mailbox-bound
+                # policy forces the hop through App.send (tier 2 below),
+                # because inlining would bypass the bounded queue itself.
                 fut = (self._try_inline(eff, app, dl)
                        if app._inline_rpc_ok else None)
                 if fut is not None:
@@ -521,16 +529,22 @@ class FiberScheduler:
         calling fiber — skipping the reply-future handoff, the mailbox, the
         carrier spawn and the park/wake round trip.  Returns the call's
         future, or None when the call must take the slow path (budget
-        exhausted, unknown service/method, thread-family callee)."""
+        exhausted, unknown service/method, thread-family callee).  Policy
+        admission — breaker ``allow()``, bulkhead slots, outcome recording
+        — is the App's job (``App._inline_call``); this scheduler only
+        gates its own depth budget and drives the admitted generator."""
         if self._inline_depth >= app.inline_budget:
             return None
-        svc = app.services.get(eff.dest)
-        if svc is None:
-            return None
-        handler = svc.inline_handler(eff.method)
-        if handler is None:
-            return None
-        svc.count_request()
+        return app._inline_call(eff.dest, eff.method, eff.payload, deadline,
+                                self._inline_drive)
+
+    def _inline_drive(self, gen: Generator,
+                      deadline: Optional[float]) -> Future:
+        """Scheduler-side bookkeeping around :meth:`_drive_inline`: inline
+        counters, depth high-water, and the ambient-deadline save/restore
+        that lets nested inlined hops tighten against the caller's bound.
+        Owner-thread-only (``App._inline_call`` invokes it synchronously on
+        the driving scheduler thread)."""
         self.inline_calls += 1
         self._inline_depth += 1
         if self._inline_depth > self.inline_depth_hwm:
@@ -538,7 +552,7 @@ class FiberScheduler:
         prev_deadline = self._inline_deadline
         self._inline_deadline = deadline
         try:
-            return self._drive_inline(handler(svc, eff.payload), deadline)
+            return self._drive_inline(gen, deadline)
         finally:
             self._inline_deadline = prev_deadline
             self._inline_depth -= 1
@@ -836,6 +850,7 @@ class CompletionRing:
 
     @property
     def gen(self) -> int:
+        """Flush generation (bumps per drain; timeout entries check it)."""
         return self._gen
 
     def __len__(self) -> int:
@@ -886,6 +901,7 @@ class CQBatchFiberScheduler(BatchFiberScheduler):
     def spawn_external(self, gen: Generator, future: Optional[Future] = None,
                        name: str = "",
                        deadline: Optional[float] = None) -> Future:
+        """Cross-thread delivery via the completion ring (one doorbell)."""
         fib = Fiber(gen, future, name, deadline)
         self._complete(fib, None)
         return fib.future
@@ -949,20 +965,25 @@ class CQBatchFiberScheduler(BatchFiberScheduler):
     # ------------------------------------------------------ stats plumbing
     @property
     def completions_batched(self) -> int:
+        """Cross-thread events that rode the completion ring."""
         return self._cq.completions_batched
 
     @property
     def cq_flushes_size(self) -> int:
+        """Ring drains triggered by the ring filling."""
         return self._cq.flushes_size
 
     @property
     def cq_flushes_timeout(self) -> int:
+        """Ring drains triggered by the flush deadline."""
         return self._cq.flushes_timeout
 
     @property
     def cq_flushes_idle(self) -> int:
+        """Ring drains triggered by the owner running out of work."""
         return self._cq.flushes_idle
 
     @property
     def cq_hwm(self) -> int:
+        """Completion-ring occupancy high-water mark."""
         return self._cq.hwm

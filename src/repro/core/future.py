@@ -41,7 +41,7 @@ _COND_LOCK = threading.Lock()
 
 
 class FutureError(RuntimeError):
-    pass
+    """Misuse of a Future (e.g. resolving an already-resolved one)."""
 
 
 class Future:
@@ -59,6 +59,7 @@ class Future:
 
     # ---------------------------------------------------------------- write
     def set_result(self, value: Any) -> None:
+        """Resolve with ``value``; fires callbacks and wakes blocked waiters."""
         if self._done:
             raise FutureError("Future already resolved")
         self._value = value
@@ -66,6 +67,7 @@ class Future:
         self._on_resolved()
 
     def set_exception(self, exc: BaseException) -> None:
+        """Resolve with ``exc``; every waiter re-raises it."""
         if self._done:
             raise FutureError("Future already resolved")
         self._exc = exc
@@ -105,6 +107,7 @@ class Future:
     # ----------------------------------------------------------------- read
     @property
     def done(self) -> bool:
+        """True once resolved (lock-free read; safe from any thread)."""
         return self._done
 
     def blocking_waited(self) -> bool:
@@ -144,6 +147,14 @@ class Future:
         cond = self._materialize_cond()
         with cond:
             return cond.wait_for(lambda: self._done, timeout=timeout)
+
+    def exception(self) -> Optional[BaseException]:
+        """Non-raising outcome peek: the stored exception of a *resolved*
+        future, or None (success, or not yet resolved — check :attr:`done`
+        first).  The resilience layer's inline fast path uses this to
+        classify a completed attempt without paying a raise/except cycle
+        on every successful call."""
+        return self._exc
 
     def result(self) -> Any:
         """Non-blocking get; raises if not done."""
@@ -209,4 +220,5 @@ class Once:
 
 
 def all_done(futures: List[Future]) -> bool:
+    """True when every future in the list has resolved."""
     return all(f.done for f in futures)

@@ -71,6 +71,20 @@ def run_trial(app: App, make_request: RequestFactory, rate: float,
     they finish within it; with ``enforce_deadline=True`` it is also stamped
     onto every send, so the app's resilience layer fails slow requests
     instead of letting them queue forever.
+
+    Sever-point / leftovers contract (the trial-isolation guarantee):
+
+    * After the offered window, in-flight requests get a bounded ``drain``
+      window to finish.  When it closes, the trial is **severed** under the
+      trial lock: the liveness flag flips, and from that instant no late
+      completion can touch this trial's recorder, counters, or the
+      ``BackendStats`` delta — the summary below reads frozen state.
+    * Requests still in flight at the sever are reported as ``abandoned``
+      (never silently dropped) and parked on ``app._loadgen_leftovers``.
+    * The *next* trial on the same app settles on those leftovers first
+      (:func:`_settle`, bounded by ``settle`` seconds) before snapshotting
+      ``stats_before``, so one trial's stragglers can neither pollute its
+      successor's counter delta nor decrement a stale outstanding window.
     """
     rng = np.random.default_rng(seed)
     rec = LatencyRecorder()

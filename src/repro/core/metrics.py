@@ -55,7 +55,10 @@ class BackendStats:
     expiries, truncated sleeps — a single request can tick several hops);
     ``retries``: re-sends issued by the budgeted retry policy;
     ``breaker_opens``: circuit-breaker closed/half-open -> open transitions;
-    ``rejections``: arrivals refused by a bounded service mailbox.
+    ``rejections``: arrivals refused by a bounded service mailbox;
+    ``bulkhead_rejections``: attempts refused by a per-edge bulkhead on the
+    caller side (the edge was never exercised — distinct from mailbox
+    ``rejections``, which the destination refuses after transport).
     """
     spawns: int = 0
     spawn_seconds: float = 0.0
@@ -83,6 +86,7 @@ class BackendStats:
     retries: int = 0
     breaker_opens: int = 0
     rejections: int = 0
+    bulkhead_rejections: int = 0
 
     _GAUGES = ("queue_depth_hwm", "ring_hwm", "cq_hwm", "shards",
                "inline_depth_hwm")
@@ -108,6 +112,7 @@ class BackendStats:
         return out
 
     def as_dict(self) -> Dict[str, float]:
+        """All counters/gauges as a flat name -> value dict."""
         return {f.name: getattr(self, f.name) for f in fields(self)}
 
 
@@ -121,19 +126,23 @@ class LatencyRecorder:
         self.errors = 0
 
     def record(self, seconds: float) -> None:
+        """Record one completed request's latency."""
         with self._lock:
             self._samples.append(seconds)
             self.completed += 1
 
     def record_error(self) -> None:
+        """Count one errored request (no latency sample)."""
         with self._lock:
             self.errors += 1
 
     def snapshot(self) -> List[float]:
+        """Copy of the samples so far (safe to read while recording)."""
         with self._lock:
             return list(self._samples)
 
     def summary(self) -> Dict[str, float]:
+        """n/mean/p50/p90/p99 over the current samples (NaNs when empty)."""
         xs = np.asarray(self.snapshot(), dtype=np.float64)
         if xs.size == 0:
             return {"n": 0, "mean": float("nan"), "p50": float("nan"),
@@ -174,6 +183,8 @@ class TrialResult:
     abandoned: int = 0
 
     def row(self) -> str:
+        """One-line human-readable trial summary (counters appended only
+        when nonzero, e.g. ``to=/rtry=/brko=/rej=/bhrej=``)."""
         s = (f"offered={self.offered_rps:9.1f} achieved={self.achieved_rps:9.1f} "
              f"p50={self.p50 * 1e3:8.2f}ms p99={self.p99 * 1e3:8.2f}ms "
              f"n={self.completed} shed={self.shed}")
@@ -215,10 +226,14 @@ class TrialResult:
             s += f" brko={bs['breaker_opens']:.0f}"
         if bs.get("rejections"):
             s += f" rej={bs['rejections']:.0f}"
+        if bs.get("bulkhead_rejections"):
+            s += f" bhrej={bs['bulkhead_rejections']:.0f}"
         return s
 
 
 @dataclass
 class PeakResult:
+    """Outcome of the geometric peak-throughput ramp."""
+
     peak_rps: float
     trials: List[TrialResult] = field(default_factory=list)

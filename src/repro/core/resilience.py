@@ -14,12 +14,36 @@ holds the policy half of the resilience layer:
   discipline: a dead downstream earns no tokens, so retries dry up).
 * :class:`CircuitBreaker` — closed -> open -> half-open on error/timeout
   rate over a rolling window; fail-fast while open.
+* :class:`Bulkhead` — per-edge in-flight *attempt* cap (caller-side
+  admission), distinct from the service-side ``mailbox_bound``.
 * :class:`ResiliencePolicy` — the bundle an :class:`~repro.core.App` is
   built with; ``None`` keeps the pre-resilience fast path bit-for-bit.
 
-Enforcement (who *checks* a deadline, and when) lives in the executors:
-cooperative backends arm their timer wheel (no polling), thread backends
-use kernel-timed waits.  This module is deliberately stdlib-only.
+Which layer enforces what
+-------------------------
+This module is *policy only* — pure state machines, no scheduling.  The
+enforcement points live one layer up:
+
+* **Deadlines** are checked by the executors at discrete events, never by
+  polling: ``App.send`` / ``Service.deliver`` at admission, the
+  interpreters (``FiberScheduler._interpret`` /
+  ``EventLoopExecutor._interpret``) at every ``AsyncRpc`` hop, and parked
+  waits arm the expiry on the cooperative backends' timer wheel
+  (``repro.core.timers.TimerWheel``) or the thread family's kernel-timed
+  waits.  Docs: ``docs/RESILIENCE.md``.
+* **Breakers, retries and bulkheads** are driven by
+  ``App._send_resilient`` / ``App._drive_attempts`` on the carrier path
+  and by ``App._inline_resilient`` on the zero-handoff inline fast path —
+  both feed the *same* per-destination :class:`CircuitBreaker` window and
+  the same app-wide :class:`RetryBudget`, so inlining a call never changes
+  a breaker decision (the PR 7 breaker-aware-inlining contract, proven by
+  ``tests/test_inline_resilience.py``).
+* **Mailbox bounds** are enforced by ``Service.deliver`` at admission on
+  the destination's own queue; the inline fast path steps aside entirely
+  when a policy carries one (an inlined call never occupies the mailbox
+  the bound is leveling).
+
+This module is deliberately stdlib-only.
 """
 from __future__ import annotations
 
@@ -86,13 +110,16 @@ class RetryBudget:
 
     @property
     def tokens(self) -> float:
+        """Current token balance (racy read, for tests/telemetry)."""
         return self._tokens
 
     def credit(self) -> None:
+        """Earn ``ratio`` tokens for one successful reply (capped)."""
         with self._lock:
             self._tokens = min(self._cap, self._tokens + self._ratio)
 
     def try_spend(self) -> bool:
+        """Spend one token for a retry; False when the bucket is dry."""
         with self._lock:
             if self._tokens >= 1.0:
                 self._tokens -= 1.0
@@ -128,6 +155,7 @@ class CircuitBreaker:
 
     @property
     def state(self) -> str:
+        """One of ``"closed"`` / ``"open"`` / ``"half-open"``."""
         return self._state
 
     def allow(self) -> bool:
@@ -190,6 +218,52 @@ class CircuitBreaker:
         self._samples.clear()
 
 
+class Bulkhead:
+    """Per-edge in-flight concurrency cap (caller-side admission).
+
+    One bulkhead guards one ``App.send`` destination: every *attempt* —
+    first try, retry, or zero-handoff inlined call — must acquire a slot
+    before it runs and releases it when its reply future resolves.  An
+    attempt that finds the bulkhead full is rejected immediately
+    (:class:`Rejected`), without exercising the edge, so a slow or wedged
+    destination can pin at most ``limit`` of the caller's concurrency
+    instead of dragging the whole app down — the ship-compartment
+    isolation pattern.
+
+    Distinct from ``ResiliencePolicy.mailbox_bound``: the mailbox bound is
+    enforced by the *destination service* on its admitted queue depth (an
+    inlined call never enters that queue), while the bulkhead is enforced
+    by the *caller* on every attempt, inlined ones included, which is why
+    the zero-handoff fast path can keep running under a bulkhead policy.
+    """
+
+    __slots__ = ("limit", "_lock", "_inflight")
+
+    def __init__(self, limit: int) -> None:
+        self.limit = int(limit)
+        self._lock = threading.Lock()
+        self._inflight = 0
+
+    @property
+    def inflight(self) -> int:
+        """Attempts currently holding a slot (racy read, for tests)."""
+        return self._inflight
+
+    def try_acquire(self) -> bool:
+        """Claim one slot; False when all ``limit`` slots are in flight."""
+        with self._lock:
+            if self._inflight < self.limit:
+                self._inflight += 1
+                return True
+            return False
+
+    def release(self, _fut: object = None) -> None:
+        """Return a slot.  Accepts (and ignores) a future argument so it
+        can be registered directly as a reply's done-callback."""
+        with self._lock:
+            self._inflight -= 1
+
+
 @dataclass(frozen=True)
 class ResiliencePolicy:
     """Everything an :class:`App` needs to survive past peak.
@@ -198,9 +272,12 @@ class ResiliencePolicy:
     root sends that did not pass one explicitly; propagation downstream is
     automatic.  ``retry`` enables budgeted retry-with-backoff on every
     ``App.send`` edge.  ``breakers`` enables one :class:`CircuitBreaker`
-    per destination service.  ``mailbox_bound`` caps per-service admitted
-    in-flight requests; excess arrivals are rejected immediately
-    (queue-based load leveling) instead of building unbounded backlog.
+    per destination service.  ``bulkhead`` caps per-destination in-flight
+    attempts on the *caller* side (one :class:`Bulkhead` per destination;
+    inlined calls count).  ``mailbox_bound`` caps per-service admitted
+    in-flight requests on the *destination* side; excess arrivals are
+    rejected immediately (queue-based load leveling) instead of building
+    unbounded backlog.
     """
 
     deadline: Optional[float] = 0.05
@@ -210,11 +287,13 @@ class ResiliencePolicy:
     breaker_window: int = 32
     breaker_min_volume: int = 8
     breaker_reset: float = 0.25
+    bulkhead: Optional[int] = None
     mailbox_bound: Optional[int] = None
 
     def make_breaker(self,
                      clock: Callable[[], float] = time.monotonic
                      ) -> CircuitBreaker:
+        """Build one per-edge :class:`CircuitBreaker` from the policy knobs."""
         return CircuitBreaker(threshold=self.breaker_threshold,
                               window=self.breaker_window,
                               min_volume=self.breaker_min_volume,
@@ -231,12 +310,14 @@ class ResilienceStats:
     the next value back out of the counter's repr.
     """
 
-    __slots__ = ("_timeouts", "_retries", "_rejections")
+    __slots__ = ("_timeouts", "_retries", "_rejections",
+                 "_bulkhead_rejections")
 
     def __init__(self) -> None:
         self._timeouts = itertools.count(1)
         self._retries = itertools.count(1)
         self._rejections = itertools.count(1)
+        self._bulkhead_rejections = itertools.count(1)
 
     @staticmethod
     def _read(counter: "itertools.count") -> int:
@@ -244,22 +325,37 @@ class ResilienceStats:
         return int(r[r.index("(") + 1:-1]) - 1
 
     def timeout(self) -> None:
+        """Count one deadline expiry."""
         next(self._timeouts)
 
     def retry(self) -> None:
+        """Count one scheduled retry attempt."""
         next(self._retries)
 
     def rejection(self) -> None:
+        """Count one bounded-mailbox rejection."""
         next(self._rejections)
+
+    def bulkhead_rejection(self) -> None:
+        """Count one caller-side bulkhead rejection."""
+        next(self._bulkhead_rejections)
 
     @property
     def timeouts(self) -> int:
+        """Deadline expiries so far."""
         return self._read(self._timeouts)
 
     @property
     def retries(self) -> int:
+        """Retry attempts scheduled so far."""
         return self._read(self._retries)
 
     @property
     def rejections(self) -> int:
+        """Bounded-mailbox rejections so far."""
         return self._read(self._rejections)
+
+    @property
+    def bulkhead_rejections(self) -> int:
+        """Caller-side bulkhead rejections so far."""
+        return self._read(self._bulkhead_rejections)

@@ -17,10 +17,10 @@ from typing import Any, Callable, Dict, Generator, List, Optional
 
 from .effects import Sleep, Wait
 from .executor import Executor, make_executor
-from .future import Future
-from .resilience import (CircuitBreaker, CircuitOpenError, DeadlineExceeded,
-                         Rejected, ResiliencePolicy, ResilienceStats,
-                         RetryBudget)
+from .future import CompletedFuture, Future
+from .resilience import (Bulkhead, CircuitBreaker, CircuitOpenError,
+                         DeadlineExceeded, Rejected, ResiliencePolicy,
+                         ResilienceStats, RetryBudget)
 from .timers import TimerThread
 
 # Default inline-depth budget for the zero-handoff fast path: how many
@@ -35,6 +35,8 @@ INLINE_BUDGET_DEFAULT = 4
 
 @dataclass
 class ServiceSpec:
+    """Declarative service definition: handlers + sizing + backend pick."""
+
     name: str
     handlers: Dict[str, Callable[..., Generator]]
     n_workers: int = 2
@@ -43,6 +45,8 @@ class ServiceSpec:
 
 
 class Service:
+    """One microservice: a ServiceSpec bound to an executor instance."""
+
     def __init__(self, app: "App", spec: ServiceSpec, backend: str) -> None:
         self.app = app
         self.name = spec.name
@@ -72,10 +76,12 @@ class Service:
 
     @property
     def requests(self) -> int:
+        """Requests handled so far (exact, lock-free ticket-counter read)."""
         r = repr(self._req_ticket)          # e.g. "count(42)"
         return int(r[r.index("(") + 1:-1]) - 1
 
     def count_request(self) -> None:
+        """Count one handled request (called by every delivery/inline path)."""
         next(self._req_ticket)
 
     def _admission_release(self, _fut: Future) -> None:
@@ -84,6 +90,8 @@ class Service:
 
     def deliver(self, method: str, payload: Any, reply: Future,
                 deadline: Optional[float] = None) -> None:
+        """Transport hop: admit (deadline/mailbox-bound checks), simulate
+        the network, and hand the handler generator to the executor."""
         handler = self.handlers.get(method)
         if handler is None:
             reply.set_exception(KeyError(f"{self.name}: no method {method!r}"))
@@ -147,6 +155,7 @@ class OffloadPool:
         self._started = False
 
     def start(self) -> None:
+        """Spawn the worker threads (idempotent; replays queued work)."""
         if self._started:
             return
         # drain stale shutdown sentinels, preserving queued work in order:
@@ -170,6 +179,7 @@ class OffloadPool:
         self._started = True
 
     def stop(self) -> None:
+        """Stop the workers (idempotent; queued work survives a restart)."""
         if not self._started:
             return  # idempotent; a never-started pool must not be poisoned
         for _ in self._threads:
@@ -182,6 +192,7 @@ class OffloadPool:
         self._started = False
 
     def submit(self, fn: Callable[..., Any], *args: Any) -> Future:
+        """Queue ``fn(*args)`` for a worker; returns its reply Future."""
         fut = Future()
         self._q.put((fn, args, fut))
         return fut
@@ -228,9 +239,12 @@ class App:
     resilience:
         Optional :class:`~repro.core.resilience.ResiliencePolicy` enabling
         the overload-survival layer: default per-request deadlines, budgeted
-        retry-with-backoff, per-destination circuit breakers and bounded
-        service mailboxes.  ``None`` (the default) keeps the pre-resilience
-        send path bit-for-bit.
+        retry-with-backoff, per-destination circuit breakers, per-edge
+        bulkheads and bounded service mailboxes.  ``None`` (the default)
+        keeps the pre-resilience send path bit-for-bit.  Breaker / retry /
+        bulkhead policies keep the zero-handoff inline fast path (the
+        inlined attempt feeds the same per-edge accounting — see
+        ``_inline_resilient``); only ``mailbox_bound`` disables inlining.
     """
 
     def __init__(self, backend: str = "fiber", net_latency: float = 0.0,
@@ -241,23 +255,31 @@ class App:
         self.net_latency = net_latency
         self.inline_budget = inline_budget
         self.resilience = resilience
-        # Tier-1 call inlining runs the callee handler without touching the
-        # send path, which would bypass per-edge breakers, retries and
-        # mailbox bounds — only sound when the policy carries none of those
-        # (a bare default-deadline policy still inlines: deadlines ride the
-        # ambient propagation the interpreters already do).
-        self._inline_rpc_ok = resilience is None or (
+        # Tier-1 call inlining admission (see _inline_call).  Breaker,
+        # retry and bulkhead policies inline with full per-edge accounting
+        # (_inline_resilient feeds the same breaker windows and budgets as
+        # the carrier path — the PR 7 breaker-aware fast path); only a
+        # mailbox bound makes inlining step aside entirely, because an
+        # inlined call bypasses the destination queue that bound is
+        # leveling.  A policy-free app (or a bare default-deadline policy)
+        # takes the zero-bookkeeping plain path: deadlines ride the ambient
+        # propagation the interpreters already do.
+        self._inline_rpc_ok = (resilience is None
+                               or resilience.mailbox_bound is None)
+        self._inline_plain = resilience is None or (
             not resilience.breakers and resilience.retry is None
-            and resilience.mailbox_bound is None)
+            and resilience.bulkhead is None)
         self.services: Dict[str, Service] = {}
         self.offload_pool = OffloadPool(offload_threads)
         self._started = False
-        # resilience machinery: app-wide counters, per-destination breakers,
-        # a retry token bucket, and one kernel-timer thread for backoff
-        # firings and pool-suspend deadline expiries (lazily started).
+        # resilience machinery: app-wide counters, per-destination breakers
+        # and bulkheads, a retry token bucket, and one kernel-timer thread
+        # for backoff firings and pool-suspend deadline expiries (lazily
+        # started).
         self._res_stats = ResilienceStats()
         self._breakers: Dict[str, CircuitBreaker] = {}
         self._breaker_lock = threading.Lock()
+        self._bulkheads: Dict[str, Bulkhead] = {}
         self._retry_budget: Optional[RetryBudget] = (
             RetryBudget(resilience.retry)
             if resilience is not None and resilience.retry is not None
@@ -270,6 +292,7 @@ class App:
 
     # ------------------------------------------------------------- wiring
     def add_service(self, spec: ServiceSpec) -> Service:
+        """Register and build one service from its spec (before start())."""
         if spec.name in self.services:
             raise ValueError(f"duplicate service {spec.name!r}")
         svc = Service(self, spec, spec.backend or self.default_backend)
@@ -333,6 +356,9 @@ class App:
         return self._send_resilient(dest, method, payload, deadline)
 
     def _breaker(self, dest: str) -> CircuitBreaker:
+        """Per-destination circuit breaker, created on first use (shared by
+        the carrier send path and the inline fast path — one window per
+        edge, whichever mechanism exercised it)."""
         br = self._breakers.get(dest)
         if br is None:
             with self._breaker_lock:
@@ -342,10 +368,23 @@ class App:
                     self._breakers[dest] = br
         return br
 
+    def _bulkhead(self, dest: str) -> Bulkhead:
+        """Per-destination bulkhead, created on first use (same sharing
+        contract as :meth:`_breaker`: inlined and carrier attempts draw
+        from one slot pool)."""
+        bh = self._bulkheads.get(dest)
+        if bh is None:
+            with self._breaker_lock:
+                bh = self._bulkheads.get(dest)
+                if bh is None:
+                    bh = Bulkhead(self.resilience.bulkhead)
+                    self._bulkheads[dest] = bh
+        return bh
+
     def _send_resilient(self, dest: str, method: str, payload: Any,
                         deadline: Optional[float]) -> Future:
         """Policy-wrapped send: default deadline stamping, per-destination
-        circuit breaker, and budgeted retry-with-jittered-backoff.
+        circuit breaker + bulkhead, budgeted retry-with-jittered-backoff.
 
         The outer ``reply`` future is resolved exactly once, by whichever
         attempt concludes the call; each attempt uses its own inner future,
@@ -372,17 +411,61 @@ class App:
             return reply
         breaker = (self._breaker(dest)
                    if pol is not None and pol.breakers else None)
-        retry = pol.retry if pol is not None else None
         if breaker is not None and not breaker.allow():
             reply.set_exception(CircuitOpenError(
                 f"{dest}: circuit open, failing fast"))
             return reply
+        bulkhead = (self._bulkhead(dest)
+                    if pol is not None and pol.bulkhead is not None else None)
+        self._drive_attempts(svc, method, payload, deadline, breaker,
+                             bulkhead, reply, [0])
+        return reply
 
-        attempts = [0]
+    def _drive_attempts(self, svc: Service, method: str, payload: Any,
+                        deadline: Optional[float],
+                        breaker: Optional[CircuitBreaker],
+                        bulkhead: Optional[Bulkhead], reply: Future,
+                        attempts: List[int],
+                        first: Optional[Future] = None,
+                        prefail: Optional[BaseException] = None) -> None:
+        """Attempt loop shared by the carrier send path and the inline fast
+        path: launch (or adopt) attempts against ``svc`` until one
+        concludes the outer ``reply``.
+
+        ``attempts`` is the launched-attempt count (a one-element list so
+        closures can bump it); ``first`` is an already-launched attempt to
+        adopt — the inline fast path hands over its in-flight (or failed)
+        first attempt here with ``attempts == [1]``, so retry accounting is
+        identical whether attempt #1 was inlined or mailbox-delivered.
+        ``prefail`` seeds the loop with a first-attempt failure that must
+        NOT be recorded as breaker evidence (a bulkhead rejection: the edge
+        was never exercised) but may still be retried.
+        Retries always go through ``svc.deliver`` (never re-inline): the
+        backoff timer fires on the kernel :class:`TimerThread`, which is
+        not a scheduler thread, and the mailbox path is valid from any
+        thread.  Breaker/budget outcomes are recorded per *attempt*, so
+        the breaker window sees the same sequence either way."""
+        pol = self.resilience
+        retry = pol.retry if pol is not None else None
+        dest = svc.name
 
         def launch() -> None:
             attempts[0] += 1
+            if bulkhead is not None and not bulkhead.try_acquire():
+                # caller-side admission: the edge was never exercised, so
+                # this is neither breaker evidence nor a mailbox rejection
+                # — release any half-open probe slot and retry-or-fail.
+                self._res_stats.bulkhead_rejection()
+                if breaker is not None:
+                    breaker.abort_probe()
+                fail(Rejected(f"{dest}: bulkhead full "
+                              f"({bulkhead.limit} attempts in flight)"))
+                return
             inner = Future()
+            if bulkhead is not None:
+                # registered before on_done so a retry scheduled from
+                # on_done always sees this attempt's slot already freed
+                inner.add_done_callback(bulkhead.release)
             inner.add_done_callback(on_done)
             svc.deliver(method, payload, inner, deadline)
 
@@ -402,18 +485,23 @@ class App:
             except BaseException as exc:
                 if breaker is not None:
                     breaker.record(False)
-                delay = _retry_delay(exc)
-                if delay is None:
-                    reply.set_exception(exc)
-                    return
-                self._res_stats.retry()
-                self._timer.push(time.monotonic() + delay, retry_fire)
+                fail(exc)
                 return
             if breaker is not None:
                 breaker.record(True)
             if self._retry_budget is not None:
                 self._retry_budget.credit()
             reply.set_result(value)
+
+        def fail(exc: BaseException) -> None:
+            """Conclude a failed attempt: schedule a backoff retry when the
+            policy and budget allow, else resolve ``reply`` with ``exc``."""
+            delay = _retry_delay(exc)
+            if delay is None:
+                reply.set_exception(exc)
+                return
+            self._res_stats.retry()
+            self._timer.push(time.monotonic() + delay, retry_fire)
 
         def _retry_delay(exc: BaseException) -> Optional[float]:
             """Backoff before the next attempt, or None for no retry.
@@ -442,7 +530,104 @@ class App:
                 return
             launch()
 
-        launch()
+        if prefail is not None:
+            fail(prefail)
+        elif first is not None:
+            first.add_done_callback(on_done)
+        else:
+            launch()
+
+    # ------------------------------------------------ zero-handoff admission
+    def _inline_call(self, dest: str, method: str, payload: Any,
+                     deadline: Optional[float],
+                     drive: Callable[[Generator, Optional[float]], Future]
+                     ) -> Optional[Future]:
+        """Tier-1 fast-path admission: run ``dest.method`` as a direct
+        continuation of the calling scheduler, with full policy accounting.
+
+        ``drive`` is the calling interpreter's ``_inline_drive`` — it owns
+        the scheduler-side bookkeeping (inline counters, ambient deadline)
+        and runs the handler generator up to its first suspension point.
+        Returns None when the call cannot inline (unknown service, thread-
+        family callee, or no inlineable handler); the interpreter then
+        falls back to carrier elision via :meth:`send`.  The depth budget
+        is the interpreter's to check — it is per-scheduler state."""
+        svc = self.services.get(dest)
+        if svc is None:
+            return None
+        handler = svc.inline_handler(method)
+        if handler is None:
+            return None
+        if self._inline_plain:
+            # no per-edge policy bookkeeping: the pre-PR-6 path, bit-for-bit
+            svc.count_request()
+            return drive(handler(svc, payload), deadline)
+        return self._inline_resilient(svc, handler, method, payload,
+                                      deadline, drive)
+
+    def _inline_resilient(self, svc: Service,
+                          handler: Callable[..., Generator], method: str,
+                          payload: Any, deadline: Optional[float],
+                          drive: Callable[[Generator, Optional[float]],
+                                          Future]) -> Future:
+        """Breaker-aware inlining: the zero-handoff fast path under a
+        breakers/retry/bulkhead policy (PR 7).
+
+        The policy checks mirror :meth:`_send_resilient` *before* the
+        handler runs — default-deadline stamping, ``CircuitBreaker.allow``
+        (an open edge fails fast without running anything), bulkhead slot
+        acquisition — and the attempt's outcome is recorded into the same
+        per-edge breaker window and retry budget the carrier path feeds,
+        so inline-on vs inline-off produces identical breaker decisions
+        for the same fault script (tests/test_inline_resilience.py).
+
+        The hot path — attempt completes synchronously and succeeds —
+        returns the callee's :class:`~repro.core.future.CompletedFuture`
+        as-is after a ``record(True)``/``credit()``: no reply future, no
+        closures, no timer.  Failures and suspended attempts hand off to
+        :meth:`_drive_attempts` with ``attempts=[1]``; retries go through
+        the mailbox (never re-inline — see ``_drive_attempts``)."""
+        pol = self.resilience
+        if deadline is None and pol.deadline is not None:
+            deadline = time.monotonic() + pol.deadline
+        breaker = self._breaker(svc.name) if pol.breakers else None
+        if breaker is not None and not breaker.allow():
+            return CompletedFuture(exc=CircuitOpenError(
+                f"{svc.name}: circuit open, failing fast"))
+        bulkhead = self._bulkhead(svc.name) if pol.bulkhead is not None \
+            else None
+        if bulkhead is not None and not bulkhead.try_acquire():
+            # the edge was never exercised: no breaker evidence (but free a
+            # half-open probe slot), count it, and let the shared attempt
+            # loop decide retry-or-fail exactly like a carrier-path attempt
+            self._res_stats.bulkhead_rejection()
+            if breaker is not None:
+                breaker.abort_probe()
+            exc = Rejected(f"{svc.name}: bulkhead full "
+                           f"({bulkhead.limit} attempts in flight)")
+            if pol.retry is None:
+                return CompletedFuture(exc=exc)
+            reply = Future()
+            self._drive_attempts(svc, method, payload, deadline, breaker,
+                                 bulkhead, reply, [1], prefail=exc)
+            return reply
+        svc.count_request()
+        attempt = drive(handler(svc, payload), deadline)
+        if bulkhead is not None:
+            attempt.add_done_callback(bulkhead.release)
+        if attempt.done and attempt.exception() is None:
+            # hot path: the inlined callee completed without suspending
+            if breaker is not None:
+                breaker.record(True)
+            if self._retry_budget is not None:
+                self._retry_budget.credit()
+            return attempt
+        # slow path: the attempt suspended (resolve later) or failed —
+        # adopt it into the shared attempt loop for breaker recording and
+        # possible mailbox-path retries
+        reply = Future()
+        self._drive_attempts(svc, method, payload, deadline, breaker,
+                             bulkhead, reply, [1], first=attempt)
         return reply
 
     def rpc_carrier(self, dest: str, method: str, payload: Any,
@@ -457,10 +642,12 @@ class App:
         return value
 
     def offload(self, fn: Callable[..., Any], *args: Any) -> Future:
+        """Run a blocking callable on the shared offload pool."""
         return self.offload_pool.submit(fn, *args)
 
     # ------------------------------------------------------ instrumentation
     def total_spawns(self) -> int:
+        """Carrier spawns across all services (the paper's cost driver)."""
         return sum(s.executor.spawns for s in self.services.values())
 
     def backend_stats(self) -> "BackendStats":
@@ -473,5 +660,6 @@ class App:
         agg.timeouts = self._res_stats.timeouts
         agg.retries = self._res_stats.retries
         agg.rejections = self._res_stats.rejections
+        agg.bulkhead_rejections = self._res_stats.bulkhead_rejections
         agg.breaker_opens = sum(b.opens for b in self._breakers.values())
         return agg

@@ -97,6 +97,7 @@ class TimerThread:
                 self._cond.notify()  # may have become the new earliest
 
     def stop(self) -> None:
+        """Stop the timer thread (idempotent; pending entries are dropped)."""
         with self._cond:
             thread = self._thread
             self._stop = True

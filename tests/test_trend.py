@@ -226,17 +226,20 @@ def test_committed_baseline_is_current_schema():
     assert baseline["records"], "committed baseline has no records"
     keys = {r["key"] for r in baseline["records"]}
     # full matrix: every registered app x backend cell contributes an rps
-    # AND a p99 record, the rpc-path micro one record per backend, and the
-    # overload probe its two paired goodput cells
+    # AND a p99 record, the rpc-path micro one record per backend (plus a
+    # +resilient row per inline backend), the overload probe its two paired
+    # goodput cells, and the knee probe its knee-multiple cell
+    from benchmarks.bench_rpc_path import INLINE_BACKENDS
     from benchmarks.bench_smoke import (OVERLOAD_PROBE_APP,
                                         OVERLOAD_PROBE_BACKEND)
     from repro.apps import APP_NAMES, BENCH_BACKENDS
     expected = {f"{a}/{b}" for a in APP_NAMES for b in BENCH_BACKENDS}
     expected |= {f"{a}/{b}/p99" for a in APP_NAMES for b in BENCH_BACKENDS}
     expected |= {f"rpc_path/{b}" for b in BENCH_BACKENDS}
+    expected |= {f"rpc_path/{b}+resilient" for b in INLINE_BACKENDS}
     expected |= {
         f"overload/{OVERLOAD_PROBE_APP}/{OVERLOAD_PROBE_BACKEND}/{label}"
-        for label in ("breakers-off", "breakers-on")}
+        for label in ("breakers-off", "breakers-on", "knee")}
     assert keys == expected
     # self-diff passes trivially
     report = trend.compare(baseline, baseline)
@@ -365,7 +368,7 @@ def test_smoke_overload_records_are_warn_only():
     path = REPO / "launch_results" / "baseline_smoke.json"
     records = json.loads(path.read_text())["records"]
     overload = [r for r in records if r["key"].startswith("overload/")]
-    assert len(overload) == 2
+    assert len(overload) == 3  # breakers-off, breakers-on, knee
     for r in overload:
         assert r.get("gate") == "warn-only", r["key"]
         assert r.get("noise") == "overload", r["key"]
