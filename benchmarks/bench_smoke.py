@@ -55,9 +55,20 @@ backend (full breakers + retry + bulkhead policy with the fast path
 engaged), giving the breaker-aware inline admission cost its own trend
 line next to the plain ns/call.
 
+PR 8 adds the **skewed-cache cells**: every app × backend additionally
+runs the Zipfian session-affine ``cached`` workload (cache-aside tier with
+hit-rate-dependent service time) and records the per-cell
+``cache_hit_rate`` as a warn-only gauge — the hit rate is a property of
+the key distribution and the cache tier, not the scheduler, so a move
+flags a workload/cache change rather than a backend regression.  A
+**session-pinning probe** A/Bs ``event-loop-shard`` placement policy on
+the same workload: by-session (deterministic, state-affine routing on
+``RequestContext.session``) vs by-ticket (spread-everything), interleaved
+and peak-vs-peak like every other probe, recorded warn-only.
+
 The process exits non-zero iff a cell errors or parity is violated — the
-steal/design/overload probes and the raw numbers are artifact data, not
-gates.
+steal/design/overload/pinning probes and the raw numbers are artifact
+data, not gates.
 
 Usage (what .github/workflows/ci.yml runs):
     PYTHONPATH=src python -m benchmarks.run --smoke --json smoke.json \
@@ -72,7 +83,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.apps import APP_NAMES, BENCH_BACKENDS, get_app_def
-from repro.core import BackendStats, run_trial, warmup
+from repro.core import BackendStats, RequestContext, run_trial, warmup
 
 BASELINE = "thread"
 
@@ -111,8 +122,12 @@ def _smoke_cell(app_name: str, backend: str,
     d = get_app_def(app_name)
     factory = d.make_request_factory("mixed")
     with d.build(backend, n_workers=2, frontend_workers=4) as app:
-        results = [app.send(dest, method, payload).wait(timeout=30)
-                   for dest, method, payload in requests]
+        results = []
+        for req in requests:  # a 4-tuple request carries a session id
+            dest, method, payload = req[:3]
+            ctx = RequestContext(session=req[3]) if len(req) > 3 else None
+            results.append(app.send(dest, method, payload,
+                                    ctx=ctx).wait(timeout=30))
         warmup(app, factory)
         # monotonic counters are the delta across exactly the measured
         # trials — parity requests and warmup traffic excluded — so
@@ -141,6 +156,32 @@ def _smoke_cell(app_name: str, backend: str,
         "shed": sum(t.shed for t in trials),
         "backend_stats": {k: round(v, 6) for k, v in
                           stats.as_dict().items()},
+    }
+
+
+def _cache_cell(app_name: str, backend: str) -> Dict[str, Any]:
+    """One skewed-cache cell: the Zipfian session-affine ``cached``
+    workload at smoke scale.  Request errors are smoke failures like any
+    cell's; the hit rate enters the trend gate as a warn-only gauge (it
+    drifts with achieved rps — a slower run reuses hot keys less before
+    the trial window closes — so it can inform but not gate)."""
+    d = get_app_def(app_name)
+    factory = d.make_request_factory("cached")
+    with d.build(backend, n_workers=2, frontend_workers=4) as app:
+        warmup(app, factory)
+        stats_before = app.backend_stats()
+        tr = run_trial(app, factory, SMOKE_RATE, SMOKE_DURATION, seed=11)
+        stats = BackendStats.delta(stats_before, app.backend_stats())
+    hits, misses = int(stats.cache_hits), int(stats.cache_misses)
+    looked = hits + misses
+    return {
+        "status": "ok",
+        "achieved_rps": round(tr.achieved_rps, 1),
+        "completed": tr.completed,
+        "errors": tr.errors,
+        "cache_hits": hits,
+        "cache_misses": misses,
+        "hit_rate": round(hits / looked, 4) if looked else None,
     }
 
 
@@ -334,6 +375,53 @@ def _overload_probe(max_rounds: int = PROBE_MAX_ROUNDS) -> Dict[str, Any]:
     return probe
 
 
+# Session-pinning probe (PR 8): by-session vs by-ticket shard placement on
+# the event-loop-shard backend under the Zipfian ``cached`` workload — the
+# hot-shard regime, where session affinity concentrates the popular keys'
+# sessions on few shards.  Affinity buys shard-local per-session state and
+# deterministic placement; the probe measures what it costs (or wins) in
+# raw throughput against spread-everything ticket placement.  Probe data,
+# not a gate: a measured loss is recorded honestly, per the ROADMAP's A/B
+# discipline.
+PINNING_PROBE_APP = "socialnetwork"
+PINNING_PROBE_BACKEND = "event-loop-shard"
+
+
+def _pinning_probe(max_rounds: int = PROBE_MAX_ROUNDS) -> Dict[str, Any]:
+    from repro.apps import build_bench_app
+    from repro.core import find_peak_throughput
+
+    def build(label: str):
+        app = build_bench_app(PINNING_PROBE_APP, PINNING_PROBE_BACKEND)
+        # the A/B lever: deliver-time routing flag, same app otherwise
+        app.shard_by_session = (label == "by-session")
+        return app
+
+    # cheap peak ramp first (same pattern as the overload probe): the cached
+    # workload is sleep-dominated and very fast on this backend, so a fixed
+    # rate would sit far below saturation and pin both sides to the offered
+    # rate — a vacuous comparison.  Probing *at* the measured peak is where
+    # placement policy can actually move throughput.
+    d = get_app_def(PINNING_PROBE_APP)
+    factory = d.make_request_factory("cached")
+    with build("by-ticket") as app:
+        warmup(app, factory)
+        pk = find_peak_throughput(app, factory, start_rate=2000, growth=1.7,
+                                  duration=0.3, max_trials=10)
+
+    probe = _paired_probe(PINNING_PROBE_APP, "by-ticket", "by-session",
+                          workload="cached", rate=pk.peak_rps,
+                          max_outstanding=1024, max_rounds=max_rounds,
+                          build=build)
+    stats = probe.pop("_stats")
+    probe.update(backend=PINNING_PROBE_BACKEND,
+                 probe_rate=round(pk.peak_rps, 1),
+                 shards=stats["by-session"].shards,
+                 cache_hits=int(stats["by-session"].cache_hits),
+                 cache_misses=int(stats["by-session"].cache_misses))
+    return probe
+
+
 def _knee_probe() -> Dict[str, Any]:
     """Smoke-scale collapse-knee sweep (see ``bench_overload``): one cell
     (the overload probe's app x backend), 2-5x the measured peak, reported
@@ -478,6 +566,40 @@ def run_smoke(apps: Optional[Sequence[str]] = None,
                   f"rps={cell.get('achieved_rps')} "
                   f"trials={cell.get('trial_rps')} "
                   f"errors={cell.get('errors')}", flush=True)
+        # skewed-cache cells (PR 8): the Zipfian session-affine workload on
+        # every backend, with the cache-aside hit/miss counters surfaced.
+        # The hit rate is a property of the key distribution, not the
+        # scheduler, so it lands as a warn-only gauge: a move means the
+        # workload or the cache tier changed, not that a backend regressed.
+        for backend in BENCH_BACKENDS:
+            key = f"{app_name}/{backend}/cached"
+            try:
+                cell = _cache_cell(app_name, backend)
+            except Exception as exc:  # noqa: BLE001 - cell isolation
+                cell = {"status": "error", "error": repr(exc)}
+                out["failures"].append(f"{key}: {exc!r}")
+            else:
+                if cell["errors"]:
+                    out["failures"].append(
+                        f"{key}: {cell['errors']} request errors")
+            out["cells"][key] = cell
+            if cell.get("status") == "ok" and cell["hit_rate"] is not None:
+                out["records"].append({
+                    "key": f"{key}/hit_rate",
+                    "app": app_name,
+                    "backend": backend,
+                    "metric": "cache_hit_rate",
+                    "unit": "frac",
+                    "direction": "higher",
+                    "gate": "warn-only",
+                    "value": cell["hit_rate"],
+                    "errors": cell["errors"],
+                })
+            print(f"smoke {key}: {cell.get('status')} "
+                  f"rps={cell.get('achieved_rps')} "
+                  f"hit_rate={cell.get('hit_rate')} "
+                  f"(h={cell.get('cache_hits')} m={cell.get('cache_misses')}) "
+                  f"errors={cell.get('errors')}", flush=True)
         # parity: every backend must reproduce the thread baseline bit-for-bit
         if cells.get(BASELINE, {}).get("status") == "ok":
             base = cells[BASELINE]["results"]
@@ -589,6 +711,44 @@ def run_smoke(apps: Optional[Sequence[str]] = None,
                   f"collapsed={knee['collapsed']} curve="
                   + "|".join(f"{p['multiple']:g}:{p['goodput_rps']:.0f}"
                              for p in knee["curve"]), flush=True)
+    if steal_probe and PINNING_PROBE_APP in apps:
+        # paired A/B of shard placement policy under the hot-shard Zipfian
+        # workload: by-session (deterministic, state-affine) vs by-ticket
+        # (spread-everything).  Probe data, not a gate — affinity trades
+        # peak rps for placement determinism, and the honest number is the
+        # point (warn-only records feed the trend like the overload cells).
+        try:
+            probe = _pinning_probe(max_rounds=probe_rounds)
+        except Exception as exc:  # noqa: BLE001 - keep the artifact
+            probe = {"status": "error", "error": repr(exc)}
+            out["failures"].append(f"pinning_probe: {exc!r}")
+        out["pinning_probe"] = probe
+        if "cand_peak_rps" in probe:
+            for label, value in (("by-ticket", probe["base_peak_rps"]),
+                                 ("by-session", probe["cand_peak_rps"])):
+                out["records"].append({
+                    "key": f"pinning/{PINNING_PROBE_APP}/"
+                           f"{PINNING_PROBE_BACKEND}/{label}",
+                    "app": PINNING_PROBE_APP,
+                    "backend": PINNING_PROBE_BACKEND,
+                    "metric": "peak_rps",
+                    "unit": "rps",
+                    "direction": "higher",
+                    # a placement-policy A/B at smoke scale is a probe, and
+                    # the skew concentration it measures is seed-dependent —
+                    # surface moves in the trend, never fail the run
+                    "gate": "warn-only",
+                    "value": value,
+                    "errors": 0,
+                })
+            print(f"pinning probe {PINNING_PROBE_APP} "
+                  f"[{PINNING_PROBE_BACKEND}]: peak "
+                  f"by-ticket={probe['base_peak_rps']} "
+                  f"by-session={probe['cand_peak_rps']} "
+                  f"ratio={probe['ratio']} ok={probe['ok']} "
+                  f"(hits={probe['cache_hits']} "
+                  f"misses={probe['cache_misses']}, "
+                  f"rounds={probe['rounds']})", flush=True)
     _rpc_path_records(out)
     if json_path:
         with open(json_path, "w") as f:

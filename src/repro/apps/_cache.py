@@ -1,0 +1,103 @@
+"""Shared cache tier for the DeathStarBench-style apps (PR 8).
+
+DSB deployments front their MongoDB stores with memcached; until now the
+apps modelled that as a fixed ``Sleep(IO_CACHE)``.  This module makes the
+cache a real service with *state*: a ``cache`` service whose ``get`` is
+cache-aside — a hit costs one cache round trip, a miss pays the cache
+lookup **plus** the backing-store read and then populates the line — so
+service time depends on the hit rate, which depends on the workload's key
+distribution (see :func:`repro.apps._workload.make_zipf_factory`).  Writes
+invalidate, which is what keeps a ``write_frac`` of traffic creating
+future misses.
+
+Every lookup ticks the app-wide :class:`repro.core.metrics.CacheStats`
+(``svc.app.cache_stats``), which ``App.backend_stats`` surfaces as
+``BackendStats.cache_hits`` / ``cache_misses`` — identical accounting on
+all eight backends, so hit rates are comparable across the matrix.
+
+The frontends use :func:`make_cached_read`, which also exercises the
+request-context plumbing end to end: it reads the ambient
+:class:`~repro.core.context.RequestContext` via the ``CurrentContext``
+effect and keeps a per-session request counter in ``Service.state`` —
+under by-session shard pinning a session's state updates all land on one
+shard.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from ..core import AsyncRpc, Compute, CurrentContext, Sleep, Wait, WaitAll
+
+# service-time model (seconds) — matches the apps' constants
+CPU_TINY = 20e-6     # key hashing / serialization
+IO_CACHE = 300e-6    # memcached round trip
+IO_DB = 800e-6       # backing-store (MongoDB) round trip
+
+
+def make_cache_handlers(*, io_cache: float = IO_CACHE,
+                        io_db: float = IO_DB) -> Dict[str, Any]:
+    """Handlers for a ``cache`` service over a closure-captured store.
+
+    ``get`` is cache-aside: hit -> one ``io_cache`` round trip; miss ->
+    the ``io_cache`` lookup, the ``io_db`` backing read, then populate.
+    ``invalidate`` drops the line (the write path calls it).  Plain dict
+    ops are atomic under the GIL; a concurrent double-miss on the same
+    cold key just populates twice, as a real look-aside cache would.
+    """
+    store: Dict[Any, Any] = {}
+
+    def _get(svc: Any, payload: Any):
+        key = (payload or {}).get("key", 0)
+        yield Compute(CPU_TINY)
+        # snapshot the line at lookup time: a concurrent invalidation may
+        # drop the key while this handler sleeps out the round trip, and a
+        # look-aside read that raced a write legitimately returns the value
+        # it found
+        value = store.get(key)
+        if value is not None:
+            svc.app.cache_stats.hit()
+            yield Sleep(io_cache)
+            return {"key": key, "value": value, "cached": True}
+        svc.app.cache_stats.miss()
+        yield Sleep(io_cache)   # the miss still pays the lookup trip
+        yield Sleep(io_db)      # then the backing-store read
+        value = "v:%s" % key
+        store[key] = value
+        return {"key": key, "value": value, "cached": False}
+
+    def _invalidate(svc: Any, payload: Any):
+        key = (payload or {}).get("key", 0)
+        yield Compute(CPU_TINY)
+        store.pop(key, None)
+        yield Sleep(io_cache)
+        return {"ok": True, "key": key}
+
+    return {"get": _get, "invalidate": _invalidate}
+
+
+def make_cached_read(write_dest: str, write_method: str):
+    """Frontend handler for the ``cached`` workload.
+
+    Reads go cache-aside through the ``cache`` service; arrivals flagged
+    ``payload["write"]`` instead update the app's backing store
+    (``write_dest.write_method``) and invalidate the cache line in
+    parallel.  Either way the handler bumps a per-session counter in
+    ``Service.state`` keyed by the ambient ``RequestContext.session``.
+    """
+    def _cached(svc: Any, payload: Any):
+        yield Compute(CPU_TINY)
+        ctx = yield CurrentContext()
+        if ctx is not None and ctx.session is not None:
+            with svc.lock:  # per-session state (shard-local when pinned)
+                sessions = svc.state.setdefault("sessions", {})
+                sessions[ctx.session] = sessions.get(ctx.session, 0) + 1
+        if (payload or {}).get("write"):
+            f_db = yield AsyncRpc(write_dest, write_method, payload)
+            f_inv = yield AsyncRpc("cache", "invalidate",
+                                   {"key": (payload or {}).get("key", 0)})
+            yield WaitAll([f_db, f_inv])
+            return {"ok": True}
+        f = yield AsyncRpc("cache", "get",
+                           {"key": (payload or {}).get("key", 0)})
+        return (yield Wait(f))
+    return _cached

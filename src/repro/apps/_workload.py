@@ -1,14 +1,15 @@
 """Shared request-workload plumbing for the DeathStarBench-style apps.
 
-Every app exposes the same four-generator protocol from the paper's
-evaluation: one compose-style write, two read paths, and a weighted
-``mixed`` combination.  This module factors the factory construction that
-each app module previously hard-coded, so the load generator sees one
-uniform :data:`repro.core.RequestFactory` shape regardless of app.
+Every app exposes the same generator protocol from the paper's evaluation:
+one compose-style write, two read paths, a weighted ``mixed`` combination,
+and (PR 8) a session-affine ``cached`` workload with Zipfian key
+popularity.  This module factors the factory construction that each app
+module previously hard-coded, so the load generator sees one uniform
+:data:`repro.core.RequestFactory` shape regardless of app.
 """
 from __future__ import annotations
 
-from typing import Any, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,3 +41,36 @@ def make_factory(workload: str, *, frontend: str,
         m = names[int(rng.choice(len(names), p=probs))]
         return (frontend, m, payload)
     return mixed
+
+
+def make_zipf_factory(*, frontend: str, method: str = "cached",
+                      n_keys: int = 1024, alpha: float = 1.1,
+                      n_sessions: int = 64, write_frac: float = 0.05,
+                      payload: Optional[Any] = None):
+    """Session-affine cache workload: Zipf(``alpha``) key popularity.
+
+    Each arrival draws a key from a Zipfian distribution over ``n_keys``
+    ranks (precomputed CDF + ``searchsorted``, so the per-arrival cost is
+    one uniform draw and a binary search), and returns a **4-tuple**
+    ``(frontend, method, payload, session)`` — the 4th element is what
+    :func:`repro.core.run_trial` turns into ``RequestContext.session``.
+    The session id is derived from the key (``key % n_sessions``), so key
+    skew becomes session skew: under by-session shard pinning the hot keys
+    concentrate on a few shards — the hot-shard imbalance the pinning A/B
+    probe measures.  A ``write_frac`` fraction of arrivals are writes
+    (``payload["write"] = True``): the apps' cached read path routes those
+    through the backing store plus a cache invalidation.
+    """
+    ranks = np.arange(1, int(n_keys) + 1, dtype=np.float64)
+    weights = ranks ** -float(alpha)
+    cdf = np.cumsum(weights / weights.sum())
+    base = dict(payload or {})
+
+    def zipf(rng: np.random.Generator) -> Tuple[str, str, Any, str]:
+        key = int(np.searchsorted(cdf, rng.random(), side="right"))
+        p = dict(base)
+        p["key"] = key
+        if write_frac > 0.0 and rng.random() < write_frac:
+            p["write"] = True
+        return (frontend, method, p, "s%d" % (key % n_sessions))
+    return zipf

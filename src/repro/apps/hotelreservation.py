@@ -24,7 +24,8 @@ from __future__ import annotations
 from typing import Any, Dict
 
 from ..core import App, AsyncRpc, Compute, ServiceSpec, Sleep, Wait, WaitAll
-from ._workload import make_factory
+from ._cache import make_cache_handlers, make_cached_read
+from ._workload import make_factory, make_zipf_factory
 
 # --- service-time model (seconds) -----------------------------------------
 CPU_TINY = 20e-6     # id lookups, serialization
@@ -152,7 +153,11 @@ def build_hotelreservation(backend: str = "fiber", *, n_workers: int = 2,
             backend=overrides.get(name)))
 
     add(FRONTEND, {"search": _search_hotel, "recommend": _recommend,
-                   "reserve": _reserve}, frontend_workers)
+                   "reserve": _reserve,
+                   "cached": make_cached_read("reservation",
+                                              "make_reservation")},
+        frontend_workers)
+    add("cache", make_cache_handlers(), n_workers)
     add("search", {"nearby": _search_nearby}, n_workers)
     add("geo", {"nearby": _geo_nearby}, n_workers)
     add("rate", {"get_rates": _rate_get}, n_workers)
@@ -165,12 +170,12 @@ def build_hotelreservation(backend: str = "fiber", *, n_workers: int = 2,
 
 
 # ------------------------------------------------------------ request mixes
-WORKLOADS = ("reserve", "search", "recommend", "mixed")
+WORKLOADS = ("reserve", "search", "recommend", "mixed", "cached")
 
 # Per-workload end-to-end deadline defaults (seconds) for the overload
 # harness — generous multiples of the healthy p99 (see socialnetwork).
 DEADLINES = {"reserve": 0.08, "search": 0.06, "recommend": 0.05,
-             "mixed": 0.08}
+             "mixed": 0.08, "cached": 0.05}
 
 # DSB's hotel mix is search-dominated with rare writes.
 _MIX = (("search", 0.60), ("recommend", 0.25), ("reserve", 0.15))
@@ -179,6 +184,9 @@ _PAYLOAD = {"user": "u7", "lat": 37.7, "lon": -122.4, "hotel_id": 103}
 
 
 def make_request_factory(workload: str):
-    """Returns a RequestFactory for the load generator."""
+    """Returns a RequestFactory for the load generator (``cached`` is the
+    session-affine Zipf-key cache-aside workload; see _workload)."""
+    if workload == "cached":
+        return make_zipf_factory(frontend=FRONTEND, payload=_PAYLOAD)
     return make_factory(workload, frontend=FRONTEND, workloads=WORKLOADS,
                         mix=_MIX, payload=_PAYLOAD)

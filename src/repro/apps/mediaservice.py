@@ -25,7 +25,8 @@ from __future__ import annotations
 from typing import Any, Dict
 
 from ..core import App, AsyncRpc, Compute, ServiceSpec, Sleep, Wait, WaitAll
-from ._workload import make_factory
+from ._cache import make_cache_handlers, make_cached_read
+from ._workload import make_factory, make_zipf_factory
 
 # --- service-time model (seconds) -----------------------------------------
 CPU_TINY = 20e-6     # id generation, serialization
@@ -152,7 +153,10 @@ def build_mediaservice(backend: str = "fiber", *, n_workers: int = 2,
             backend=overrides.get(name)))
 
     add(FRONTEND, {"compose": _compose_review, "read_movie": _read_movie,
-                   "read_user": _read_user}, frontend_workers)
+                   "read_user": _read_user,
+                   "cached": make_cached_read("review_storage", "store")},
+        frontend_workers)
+    add("cache", make_cache_handlers(), n_workers)
     add("unique_id", {"get": _unique_id}, n_workers)
     add("text", {"process": _text}, n_workers)
     add("user", {"lookup": _user_service}, n_workers)
@@ -167,12 +171,12 @@ def build_mediaservice(backend: str = "fiber", *, n_workers: int = 2,
 
 
 # ------------------------------------------------------------ request mixes
-WORKLOADS = ("compose", "read_movie", "read_user", "mixed")
+WORKLOADS = ("compose", "read_movie", "read_user", "mixed", "cached")
 
 # Per-workload end-to-end deadline defaults (seconds) for the overload
 # harness — generous multiples of the healthy p99 (see socialnetwork).
 DEADLINES = {"compose": 0.08, "read_movie": 0.05, "read_user": 0.05,
-             "mixed": 0.08}
+             "mixed": 0.08, "cached": 0.05}
 
 # movie-review traffic skews heavily toward reading a movie's reviews.
 _MIX = (("compose", 0.10), ("read_movie", 0.65), ("read_user", 0.25))
@@ -181,6 +185,9 @@ _PAYLOAD = {"title": "Contact", "text": "great @scenes", "rating": 5}
 
 
 def make_request_factory(workload: str):
-    """Returns a RequestFactory for the load generator."""
+    """Returns a RequestFactory for the load generator (``cached`` is the
+    session-affine Zipf-key cache-aside workload; see _workload)."""
+    if workload == "cached":
+        return make_zipf_factory(frontend=FRONTEND, payload=_PAYLOAD)
     return make_factory(workload, frontend=FRONTEND, workloads=WORKLOADS,
                         mix=_MIX, payload=_PAYLOAD)

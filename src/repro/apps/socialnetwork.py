@@ -22,7 +22,8 @@ from __future__ import annotations
 from typing import Any, Dict
 
 from ..core import (App, AsyncRpc, Compute, ServiceSpec, Sleep, Wait, WaitAll)
-from ._workload import make_factory
+from ._cache import make_cache_handlers, make_cached_read
+from ._workload import make_factory, make_zipf_factory
 
 # --- service-time model (seconds) -----------------------------------------
 # CPU slices are kept small (they serialize on the GIL for both backends);
@@ -169,7 +170,10 @@ def build_socialnetwork(backend: str = "fiber", *, n_workers: int = 2,
             backend=overrides.get(name)))
 
     add("frontend", {"compose": _compose_post, "read_home": _read_home,
-                     "read_user": _read_user}, frontend_workers)
+                     "read_user": _read_user,
+                     "cached": make_cached_read("post_storage", "store")},
+        frontend_workers)
+    add("cache", make_cache_handlers(), n_workers)
     add("unique_id", {"get": _unique_id}, n_workers)
     add("text", {"process": _text}, n_workers)
     add("user", {"lookup": _user_service}, n_workers)
@@ -186,13 +190,13 @@ def build_socialnetwork(backend: str = "fiber", *, n_workers: int = 2,
 
 
 # ------------------------------------------------------------ request mixes
-WORKLOADS = ("compose", "read_home", "read_user", "mixed")
+WORKLOADS = ("compose", "read_home", "read_user", "mixed", "cached")
 
 # Per-workload end-to-end deadline defaults (seconds) for the overload
 # harness: generous multiples of the healthy p99 so they only bite when the
 # app is genuinely drowning, not on ordinary tail noise.
 DEADLINES = {"compose": 0.08, "read_home": 0.05, "read_user": 0.05,
-             "mixed": 0.08}
+             "mixed": 0.08, "cached": 0.05}
 
 # the paper's "mixed" generator combines the three request types; DSB's
 # default mix is read-heavy.
@@ -202,6 +206,9 @@ _PAYLOAD = {"text": "hello @world http://x"}
 
 
 def make_request_factory(workload: str):
-    """Returns a RequestFactory for the load generator."""
+    """Returns a RequestFactory for the load generator (``cached`` is the
+    session-affine Zipf-key cache-aside workload; see _workload)."""
+    if workload == "cached":
+        return make_zipf_factory(frontend="frontend", payload=_PAYLOAD)
     return make_factory(workload, frontend="frontend", workloads=WORKLOADS,
                         mix=_MIX, payload=_PAYLOAD)

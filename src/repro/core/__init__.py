@@ -4,8 +4,9 @@ The paper's contribution (fiber-based asynchronous RPC) as a composable
 library: write service handlers once as effect generators, choose the
 execution backend per service.
 """
-from .effects import (AsyncRpc, Compute, Offload, Sleep, SpawnLocal, Wait,
-                      WaitAll, sync_rpc)
+from .context import RequestContext, session_key
+from .effects import (AsyncRpc, Compute, CurrentContext, Offload, Sleep,
+                      SpawnLocal, Wait, WaitAll, sync_rpc)
 from .executor import BACKEND_FACTORIES, BACKEND_NAMES, make_executor
 from .future import CompletedFuture, Future, Once
 from .loadgen import (OverloadResult, RequestFactory, find_peak_throughput,
@@ -19,7 +20,8 @@ from .service import App, Service, ServiceSpec
 __all__ = [
     "App", "Service", "ServiceSpec", "Future", "CompletedFuture", "Once",
     "AsyncRpc", "Wait", "WaitAll", "Sleep", "Compute", "Offload",
-    "SpawnLocal", "sync_rpc",
+    "SpawnLocal", "CurrentContext", "sync_rpc",
+    "RequestContext", "session_key",
     "BACKEND_FACTORIES", "BACKEND_NAMES", "make_executor",
     "run_trial", "find_peak_throughput", "latency_sweep", "warmup",
     "run_overload", "OverloadResult", "RequestFactory",

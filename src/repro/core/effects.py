@@ -27,6 +27,10 @@ Offload(fn, *args)
 SpawnLocal(genfn, *args)
     Run another handler generator asynchronously on the *same* service
     (local async function, no transport); resumes with a Future.
+CurrentContext()
+    Resume immediately with the request's ambient ``RequestContext`` (or
+    ``None`` on the plain path); lets a handler read its session id,
+    deadline, or hop depth without any new parameter plumbing.
 """
 from __future__ import annotations
 
@@ -98,6 +102,14 @@ class SpawnLocal(Effect):
 
     genfn: Callable[..., Any]
     args: Tuple[Any, ...] = field(default_factory=tuple)
+
+
+@dataclass
+class CurrentContext(Effect):
+    """Resume immediately with the ambient :class:`~repro.core.context.
+    RequestContext` of the running request (or ``None`` on the plain
+    zero-context path).  Never suspends — handlers use it to read their
+    session id, remaining deadline, or hop depth."""
 
 
 def sync_rpc(dest: str, method: str, payload: Any = None):

@@ -33,12 +33,14 @@ the regime where that trade can win.
 :class:`ShardedEventLoopExecutor` (the ``event-loop-shard`` backend) lifts
 the serialization ceiling without reintroducing carriers: **N independent
 loops**, each the plain single-threaded executor above, with every incoming
-request hashed by its request id onto one shard (nginx worker / SO_REUSEPORT
-style — a real deployment would hash the connection id; this in-process
-transport has no connections, so a per-executor request ticket stands in).
-A request and all of its continuations stay pinned to their shard, keeping
-the event loop's locality story, while a CPU-heavy handler only stalls
-1/N-th of the service.
+request hashed onto one shard (nginx worker / SO_REUSEPORT style — a real
+deployment would hash the connection id).  Requests whose
+:class:`~repro.core.context.RequestContext` carries a session id hash that
+(stable across trials and restarts, so per-session state stays shard-local);
+anonymous requests fall back to a per-executor request ticket.  A request
+and all of its continuations stay pinned to their shard, keeping the event
+loop's locality story, while a CPU-heavy handler only stalls 1/N-th of the
+service.
 
 Note on exclusivity: loop serialization is a *scheduling* property, not a
 mutual-exclusion guarantee handlers may rely on.  With the zero-handoff
@@ -59,18 +61,19 @@ from collections import deque
 from typing import Any, Generator, List, Optional, Tuple
 
 from .calibrate import burn
-from .effects import (AsyncRpc, Compute, Offload, Sleep, SpawnLocal, Wait,
-                      WaitAll)
+from .context import RequestContext, session_key
+from .effects import (AsyncRpc, Compute, CurrentContext, Offload, Sleep,
+                      SpawnLocal, Wait, WaitAll)
 from .future import CompletedFuture, Future, Once
 from .metrics import BackendStats
-from .resilience import DeadlineExceeded, min_deadline
+from .resilience import DeadlineExceeded
 from .timers import TimerWheel
 
 # a parked continuation resumes with ("send", value) or ("throw", exc)
 Resume = Optional[Tuple[str, Any]]
 
 # Tag for deadline entries on the timer wheel.  A parked continuation with a
-# deadline arms ``(_EL_DEADLINE, claim, gen, fut, deadline)`` at its expiry;
+# deadline arms ``(_EL_DEADLINE, claim, gen, fut, ctx)`` at its expiry;
 # the loop intercepts these in ``pop_due`` (everything else on the wheel is
 # an ordinary ready continuation).  The ``claim`` (a ``Once``) is shared
 # with the park's resume callback, so exactly one of {resolution, expiry}
@@ -99,9 +102,9 @@ class EventLoopExecutor:
         self._timers = TimerWheel()    # owner-thread-only
         self._stop = False
         self._thread: Optional[threading.Thread] = None
-        # ambient deadline of the continuation the loop is currently
+        # ambient RequestContext of the continuation the loop is currently
         # driving (owner thread only; saved/restored around inline drives)
-        self._cur_deadline: Optional[float] = None
+        self._cur_ctx: Optional[RequestContext] = None
         # --- instrumentation (see metrics.BackendStats) ------------------
         self.spawns = 0            # async-call continuations created
         self.switches = 0          # continuations resumed by the loop
@@ -130,24 +133,24 @@ class EventLoopExecutor:
             self._thread.join(timeout=5.0)
 
     def deliver(self, gen: Generator, reply: Future,
-                deadline: Optional[float] = None) -> None:
+                ctx: Optional[RequestContext] = None) -> None:
         """Inject the request as a continuation on the loop's inbox."""
-        self._inject(gen, reply, None, deadline)
+        self._inject(gen, reply, None, ctx)
 
     # ------------------------------------------------------------ injection
     def _inject(self, gen: Generator, fut: Future, resume: Resume,
-                deadline: Optional[float] = None) -> None:
+                ctx: Optional[RequestContext] = None) -> None:
         with self._cond:
-            self._inbox.append((gen, fut, resume, deadline))
+            self._inbox.append((gen, fut, resume, ctx))
             depth = len(self._inbox) + len(self._run)
             if depth > self.queue_depth_hwm:
                 self.queue_depth_hwm = depth
             self._cond.notify()
 
     def _push_local(self, gen: Generator, fut: Future,
-                    deadline: Optional[float] = None) -> None:
+                    ctx: Optional[RequestContext] = None) -> None:
         """Owner thread only: no lock, no wakeup — the loop is already awake."""
-        self._run.append((gen, fut, None, deadline))
+        self._run.append((gen, fut, None, ctx))
         depth = len(self._run) + len(self._inbox)
         if depth > self.queue_depth_hwm:
             self.queue_depth_hwm = depth
@@ -168,20 +171,20 @@ class EventLoopExecutor:
                         self._run.append(self._inbox.popleft())
             for cont in self._timers.pop_due(time.monotonic()):
                 if cont and cont[0] is _EL_DEADLINE:
-                    _, claim, gen, fut, deadline = cont
+                    _, claim, gen, fut, ctx = cont
                     if claim.claim():  # expiry beat the resolution callback
                         self._count_timeout()
                         self._run.append(
                             (gen, fut,
                              ("throw", DeadlineExceeded(
                                  "deadline expired while parked")),
-                             deadline))
+                             ctx))
                     continue  # claim lost: the resolution already resumed it
                 self._run.append(cont)
             if self._run:
-                gen, fut, resume, deadline = self._run.popleft()
+                gen, fut, resume, ctx = self._run.popleft()
                 self.switches += 1
-                self._step(gen, fut, resume, deadline)
+                self._step(gen, fut, resume, ctx)
 
     def _count_timeout(self) -> None:
         app = getattr(self, "app", None)
@@ -190,9 +193,10 @@ class EventLoopExecutor:
 
     # ---------------------------------------------------- continuation step
     def _step(self, gen: Generator, fut: Future, resume: Resume,
-              deadline: Optional[float] = None) -> None:
+              ctx: Optional[RequestContext] = None) -> None:
         """Drive one continuation until it parks or finishes."""
-        self._cur_deadline = deadline
+        self._cur_ctx = ctx
+        deadline = ctx.deadline if ctx is not None else None
         send_value: Any = None
         throw_exc: Optional[BaseException] = None
         if resume is not None:
@@ -235,11 +239,11 @@ class EventLoopExecutor:
                     except BaseException as exc:
                         send_value, throw_exc = None, exc
                     continue
-                self._park(gen, fut, eff, waits, deadline)
+                self._park(gen, fut, eff, waits, ctx)
                 return
 
             if isinstance(eff, Sleep):
-                self._sleep(gen, fut, eff.seconds, deadline)
+                self._sleep(gen, fut, eff.seconds, ctx)
                 return
 
             try:
@@ -249,16 +253,17 @@ class EventLoopExecutor:
                 throw_exc = exc
 
     def _sleep(self, gen: Generator, fut: Future, seconds: float,
-               deadline: Optional[float]) -> None:
+               ctx: Optional[RequestContext]) -> None:
         """Timer-park a sleeping continuation, truncated at its deadline."""
+        deadline = ctx.deadline if ctx is not None else None
         wake = time.monotonic() + max(seconds, 0.0)
         if deadline is not None and deadline <= wake:
             # the sleep outlives the deadline: wake at the deadline with the
             # expiry instead of completing a doomed sleep first
             self._timers.push(deadline,
-                              (_EL_DEADLINE, Once(), gen, fut, deadline))
+                              (_EL_DEADLINE, Once(), gen, fut, ctx))
             return
-        self._timers.push(wake, (gen, fut, ("send", None), deadline))
+        self._timers.push(wake, (gen, fut, ("send", None), ctx))
 
     def _classify(self, fut: Future) -> None:
         """fast = resolved without a kernel Condition ever materializing."""
@@ -269,7 +274,8 @@ class EventLoopExecutor:
 
     def _interpret(self, eff: Any) -> Any:
         if isinstance(eff, AsyncRpc):
-            dl = min_deadline(eff.deadline, self._cur_deadline)
+            hop = RequestContext.hop(self._cur_ctx, eff.deadline)
+            dl = hop.deadline if hop is not None else None
             if dl is not None and time.monotonic() >= dl:
                 # hop check at submission: dead calls never enter the queue
                 self._count_timeout()
@@ -283,17 +289,16 @@ class EventLoopExecutor:
                 # see FiberScheduler._interpret for the two tiers).
                 # Breaker/retry/bulkhead policies inline with per-edge
                 # accounting; only a mailbox bound skips the inline tier.
-                fut = (self._try_inline(eff, app, dl)
+                fut = (self._try_inline(eff, app, hop)
                        if app._inline_rpc_ok else None)
                 if fut is not None:
                     return fut
-                return app.send(eff.dest, eff.method, eff.payload,
-                                deadline=dl)
+                return app.send(eff.dest, eff.method, eff.payload, ctx=hop)
             fut = Future()
             self.spawns += 1
             self._push_local(
-                self.app.rpc_carrier(eff.dest, eff.method, eff.payload, dl),
-                fut, dl)
+                self.app.rpc_carrier(eff.dest, eff.method, eff.payload, hop),
+                fut, hop)
             return fut
 
         if isinstance(eff, Compute):
@@ -306,43 +311,46 @@ class EventLoopExecutor:
         if isinstance(eff, SpawnLocal):
             fut = Future()
             self.spawns += 1
-            self._push_local(eff.genfn(*eff.args), fut, self._cur_deadline)
+            self._push_local(eff.genfn(*eff.args), fut, self._cur_ctx)
             return fut
+
+        if isinstance(eff, CurrentContext):
+            return self._cur_ctx
 
         raise TypeError(f"Unknown effect: {eff!r}")
 
     # ------------------------------------------------ zero-handoff fast path
     def _try_inline(self, eff: Any, app: Any,
-                    deadline: Optional[float] = None) -> Optional[Future]:
+                    ctx: Optional[RequestContext] = None) -> Optional[Future]:
         """Same-carrier call inlining on the loop thread; see
         FiberScheduler._try_inline for the contract.  Policy admission and
         outcome recording live in ``App._inline_call``; the loop gates only
         its own depth budget."""
         if self._inline_depth >= app.inline_budget:
             return None
-        return app._inline_call(eff.dest, eff.method, eff.payload, deadline,
+        return app._inline_call(eff.dest, eff.method, eff.payload, ctx,
                                 self._inline_drive)
 
     def _inline_drive(self, gen: Generator,
-                      deadline: Optional[float]) -> Future:
+                      ctx: Optional[RequestContext]) -> Future:
         """Loop-side bookkeeping around :meth:`_drive_inline` (mirror of
         ``FiberScheduler._inline_drive``): inline counters plus the
-        ``_cur_deadline`` save/restore so the callee's nested hops tighten
-        against the inline call's effective bound."""
+        ``_cur_ctx`` save/restore so the callee's nested hops tighten
+        against the inline call's effective context."""
         self.inline_calls += 1
         self._inline_depth += 1
         if self._inline_depth > self.inline_depth_hwm:
             self.inline_depth_hwm = self._inline_depth
-        prev_deadline = self._cur_deadline
-        self._cur_deadline = deadline
+        prev_ctx = self._cur_ctx
+        self._cur_ctx = ctx
         try:
-            return self._drive_inline(gen, deadline)
+            return self._drive_inline(gen, ctx)
         finally:
-            self._cur_deadline = prev_deadline
+            self._cur_ctx = prev_ctx
             self._inline_depth -= 1
 
     def _drive_inline(self, gen: Generator,
-                      deadline: Optional[float] = None) -> Future:
+                      ctx: Optional[RequestContext] = None) -> Future:
         """Run an inlined callee up to its first suspension point: a
         CompletedFuture when it never suspends, else the remainder parks as
         an ordinary continuation of this loop."""
@@ -376,13 +384,13 @@ class EventLoopExecutor:
                     continue
                 fut = Future()
                 self.spawns += 1  # the remainder becomes a continuation,
-                self._park(gen, fut, eff, waits, deadline)  # fiber-fallback
+                self._park(gen, fut, eff, waits, ctx)  # fiber-fallback
                 return fut
 
             if isinstance(eff, Sleep):
                 fut = Future()
                 self.spawns += 1
-                self._sleep(gen, fut, eff.seconds, deadline)
+                self._sleep(gen, fut, eff.seconds, ctx)
                 return fut
 
             try:
@@ -394,14 +402,15 @@ class EventLoopExecutor:
     # -------------------------------------------------------------- parking
     def _park(self, gen: Generator, fut: Future, eff: Any,
               waits: List[Future],
-              deadline: Optional[float] = None) -> None:
+              ctx: Optional[RequestContext] = None) -> None:
+        deadline = ctx.deadline if ctx is not None else None
         claim: Optional[Once] = None
         if deadline is not None:
             # arm the expiry on the loop's own wheel (we ARE the owner
             # thread here); the claim decides resolution-vs-expiry
             claim = Once()
             self._timers.push(deadline,
-                              (_EL_DEADLINE, claim, gen, fut, deadline))
+                              (_EL_DEADLINE, claim, gen, fut, ctx))
 
         if isinstance(eff, Wait):
             def _resume_one(w: Future) -> None:
@@ -411,7 +420,7 @@ class EventLoopExecutor:
                     resume: Tuple[str, Any] = ("send", w.result())
                 except BaseException as exc:
                     resume = ("throw", exc)
-                self._inject(gen, fut, resume, deadline)
+                self._inject(gen, fut, resume, ctx)
             waits[0].add_done_callback(_resume_one)
             return
 
@@ -430,7 +439,7 @@ class EventLoopExecutor:
                                            [w.result() for w in waits])
             except BaseException as exc:
                 resume = ("throw", exc)
-            self._inject(gen, fut, resume, deadline)
+            self._inject(gen, fut, resume, ctx)
 
         for w in waits:
             w.add_done_callback(_resume_all)
@@ -447,18 +456,26 @@ class EventLoopExecutor:
 
 
 class ShardedEventLoopExecutor:
-    """N independent event loops, requests hashed to a shard by request id
-    (duck-typed ``Executor``; the ``event-loop-shard`` backend).
+    """N independent event loops, requests hashed to a shard by session —
+    or by request ticket when anonymous (duck-typed ``Executor``; the
+    ``event-loop-shard`` backend).
 
     ``n_workers`` is the shard count.  Each shard is a full
     :class:`EventLoopExecutor` — own thread, run queue, inbox, timer wheel —
     so a shard never synchronizes with its siblings; the only shared state
-    is the placement ticket.  Placement is a deterministic multiplicative
-    hash of the per-executor request ticket (the stand-in for a connection
-    id, see the module docstring): the same delivery sequence always lands
-    on the same shards, which is what keeps the parity suite exact, and
-    Fibonacci hashing spreads the sequential ticket stream evenly instead
-    of striping it.
+    is the placement ticket.  Placement prefers the request's
+    :class:`~repro.core.context.RequestContext` session: requests carrying
+    ``ctx.session`` hash its stable :func:`~repro.core.context.session_key`
+    onto a shard, so the same session always lands on the same shard — per
+    trial, per run, and across ``App.start()`` restarts — which is what
+    makes per-session service state shard-local.  Sessionless requests fall
+    back to a deterministic multiplicative hash of the per-executor request
+    ticket (the stand-in for a connection id, see the module docstring):
+    the same delivery sequence always lands on the same shards, which is
+    what keeps the parity suite exact, and Fibonacci hashing spreads the
+    sequential ticket stream evenly instead of striping it.  Set
+    ``app.shard_by_session = False`` to force ticket placement even for
+    sessioned traffic (the A/B lever the benchmarks flip).
 
     Continuations spawned by a handler (``AsyncRpc`` fallbacks,
     ``SpawnLocal``) stay on the shard that runs it — sharding decides
@@ -489,7 +506,11 @@ class ShardedEventLoopExecutor:
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> None:
-        """Start every shard loop."""
+        """Start every shard loop.  The placement ticket resets so the
+        Nth anonymous delivery after a restart lands on the same shard as
+        the Nth before it — placement is a function of delivery order, not
+        executor lifetime."""
+        self._ticket = itertools.count()
         for s in self._shards:
             s.start()
 
@@ -499,13 +520,19 @@ class ShardedEventLoopExecutor:
             s.stop()
 
     def deliver(self, gen: Generator, reply: Future,
-                deadline: Optional[float] = None) -> None:
-        """Hash the request onto its shard (pinned for life)."""
-        shard = self.shard_for(next(self._ticket), self.n_shards)
-        if deadline is None:  # common path keeps the pre-deadline signature
+                ctx: Optional[RequestContext] = None) -> None:
+        """Hash the request onto its shard (pinned for life): by session
+        key when the context carries one (and the app hasn't opted out via
+        ``shard_by_session = False``), else by request ticket."""
+        if (ctx is not None and ctx.session is not None
+                and getattr(self.app, "shard_by_session", True)):
+            shard = self.shard_for(session_key(ctx.session), self.n_shards)
+        else:
+            shard = self.shard_for(next(self._ticket), self.n_shards)
+        if ctx is None:  # common path keeps the pre-context signature
             self._shards[shard].deliver(gen, reply)
         else:
-            self._shards[shard].deliver(gen, reply, deadline)
+            self._shards[shard].deliver(gen, reply, ctx)
 
     # ---------------------------------------------------------------- stats
     @property

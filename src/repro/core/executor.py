@@ -84,25 +84,29 @@ from collections import deque
 from typing import Any, Callable, Dict, Generator, List, Optional
 
 from .calibrate import burn
-from .effects import AsyncRpc, Compute, Offload, Sleep, SpawnLocal, Wait, WaitAll
+from .context import RequestContext
+from .effects import (AsyncRpc, Compute, CurrentContext, Offload, Sleep,
+                      SpawnLocal, Wait, WaitAll)
 from .eventloop import EventLoopExecutor, ShardedEventLoopExecutor
 from .fiber import (BatchFiberScheduler, CQBatchFiberScheduler,
                     FiberScheduler, StealGroup)
 from .metrics import BackendStats
 from .future import Future, Once
-from .resilience import DeadlineExceeded, min_deadline
+from .resilience import DeadlineExceeded
 
 _SHUTDOWN = object()
 
 
 class Executor:
-    """Common interface: deliver(gen, reply_future[, deadline]) + lifecycle.
+    """Common interface: deliver(gen, reply_future[, ctx]) + lifecycle.
 
-    ``deadline`` is an absolute ``time.monotonic()`` bound.  Thread-family
-    executors enforce it with kernel-timed waits (``Future.wait(timeout)``,
-    truncated sleeps); the pool's suspended continuations arm the app's
-    ``TimerThread``; cooperative executors arm their own timer wheel — no
-    backend ever polls for expiry.
+    ``ctx`` is the request's :class:`~repro.core.context.RequestContext`
+    (session id, absolute ``time.monotonic()`` deadline, hop depth) — or
+    ``None`` on the plain path, which stays allocation-free.  Thread-family
+    executors enforce the deadline with kernel-timed waits
+    (``Future.wait(timeout)``, truncated sleeps); the pool's suspended
+    continuations arm the app's ``TimerThread``; cooperative executors arm
+    their own timer wheel — no backend ever polls for expiry.
     """
 
     # Whether this executor's handlers may run inline on a co-scheduled
@@ -112,7 +116,7 @@ class Executor:
     cooperative = False
 
     def deliver(self, gen: Generator, reply: Future,
-                deadline: Optional[float] = None) -> None:
+                ctx: Optional[RequestContext] = None) -> None:
         """Accept one handler generator; resolve ``reply`` when it finishes."""
         raise NotImplementedError
 
@@ -170,9 +174,9 @@ class ThreadExecutor(Executor):
         self._threads.clear()
 
     def deliver(self, gen: Generator, reply: Future,
-                deadline: Optional[float] = None) -> None:
+                ctx: Optional[RequestContext] = None) -> None:
         """Queue the request on the shared dispatcher mailbox."""
-        self._mailbox.put((gen, reply, deadline))
+        self._mailbox.put((gen, reply, ctx))
 
     # ------------------------------------------------------------- dispatch
     def _dispatch_loop(self) -> None:
@@ -180,12 +184,13 @@ class ThreadExecutor(Executor):
             item = self._mailbox.get()
             if item is _SHUTDOWN:
                 return
-            gen, reply, deadline = item
-            self._drive(gen, reply, deadline)
+            gen, reply, ctx = item
+            self._drive(gen, reply, ctx)
 
     def _drive(self, gen: Generator, reply: Future,
-               deadline: Optional[float] = None) -> None:
+               ctx: Optional[RequestContext] = None) -> None:
         """Run a handler generator to completion *in this kernel thread*."""
+        deadline = ctx.deadline if ctx is not None else None
         if deadline is not None and time.monotonic() >= deadline:
             # the request expired while queued in the mailbox: fail it
             # without running the handler (dequeue-side hop check)
@@ -214,7 +219,7 @@ class ThreadExecutor(Executor):
                 return
 
             try:
-                send_value = self._interpret(eff, deadline)
+                send_value = self._interpret(eff, ctx)
                 throw_exc = None
             except BaseException as exc:
                 throw_exc = exc
@@ -229,20 +234,24 @@ class ThreadExecutor(Executor):
             else:
                 self.fast_futures += 1
 
-    def _interpret(self, eff: Any, deadline: Optional[float] = None) -> Any:
+    def _interpret(self, eff: Any, ctx: Optional[RequestContext] = None) -> Any:
+        deadline = ctx.deadline if ctx is not None else None
         if isinstance(eff, AsyncRpc):
             # THE paper's baseline operation: spawn a carrier per async call
             # (a fresh kernel thread here; a pool submission in the
-            # PooledThreadExecutor subclass).
-            dl = min_deadline(eff.deadline, deadline)
+            # PooledThreadExecutor subclass).  The nested hop derives its
+            # own RequestContext — deadline tightened, depth bumped,
+            # session/trace inherited (None when nothing to carry).
+            hop = RequestContext.hop(ctx, eff.deadline)
+            dl = hop.deadline if hop is not None else None
             if dl is not None and time.monotonic() >= dl:
                 self._count_timeout()
                 raise DeadlineExceeded(
                     f"rpc {eff.dest}.{eff.method}: deadline expired")
             fut = Future()
             self._spawn_carrier(
-                self.app.rpc_carrier(eff.dest, eff.method, eff.payload, dl),
-                fut, dl)
+                self.app.rpc_carrier(eff.dest, eff.method, eff.payload, hop),
+                fut, hop)
             return fut
 
         if isinstance(eff, Wait):
@@ -277,8 +286,11 @@ class ThreadExecutor(Executor):
 
         if isinstance(eff, SpawnLocal):
             fut = Future()
-            self._spawn_carrier(eff.genfn(*eff.args), fut, deadline)
+            self._spawn_carrier(eff.genfn(*eff.args), fut, ctx)
             return fut
+
+        if isinstance(eff, CurrentContext):
+            return ctx
 
         raise TypeError(f"Unknown effect: {eff!r}")
 
@@ -294,10 +306,10 @@ class ThreadExecutor(Executor):
             raise DeadlineExceeded("deadline expired while waiting") from None
 
     def _spawn_carrier(self, gen: Generator, fut: Future,
-                       deadline: Optional[float] = None) -> None:
+                       ctx: Optional[RequestContext] = None) -> None:
         """std::async semantics: one fresh kernel thread per async call."""
         t0 = time.perf_counter()
-        t = threading.Thread(target=self._drive, args=(gen, fut, deadline),
+        t = threading.Thread(target=self._drive, args=(gen, fut, ctx),
                              daemon=True)
         t.start()
         with self._lock:
@@ -400,28 +412,28 @@ class PooledThreadExecutor(ThreadExecutor):
                     self._work_cv.wait()
                 if self._resumes:
                     # continuations first: they unblock waiting carriers
-                    gen, fut, resume, deadline = self._resumes.popleft()
+                    gen, fut, resume, ctx = self._resumes.popleft()
                 else:
-                    (gen, fut, deadline), resume = \
+                    (gen, fut, ctx), resume = \
                         self._carriers.popleft(), None
                     self._space_cv.notify()
             if resume is None:
-                self._drive(gen, fut, deadline)  # classic blocking carrier
+                self._drive(gen, fut, ctx)  # classic blocking carrier
             else:
-                self._run_suspendable(gen, fut, resume, deadline)
+                self._run_suspendable(gen, fut, resume, ctx)
 
     def _take_work_nowait(self):
         with self._qlock:
             if self._resumes:
                 return self._resumes.popleft()
             if self._carriers:
-                gen, fut, deadline = self._carriers.popleft()
+                gen, fut, ctx = self._carriers.popleft()
                 self._space_cv.notify()
-                return (gen, fut, None, deadline)
+                return (gen, fut, None, ctx)
         return None
 
     # ----------------------------------------------------------- wait path
-    def _interpret(self, eff: Any, deadline: Optional[float] = None) -> Any:
+    def _interpret(self, eff: Any, ctx: Optional[RequestContext] = None) -> Any:
         # Work-helping: a pool thread about to block on a join first drains
         # queued work until the awaited futures resolve.  Without this a
         # saturated pool deadlocks on itself — every pool thread parked on a
@@ -429,8 +441,8 @@ class PooledThreadExecutor(ThreadExecutor):
         if isinstance(eff, (Wait, WaitAll)) \
                 and threading.get_ident() in self._pool_ids:
             futs = [eff.future] if isinstance(eff, Wait) else list(eff.futures)
-            self._help_until(futs, deadline)
-        return super()._interpret(eff, deadline)
+            self._help_until(futs, ctx.deadline if ctx is not None else None)
+        return super()._interpret(eff, ctx)
 
     def _help_until(self, futs: List[Future],
                     deadline: Optional[float] = None) -> None:
@@ -448,16 +460,17 @@ class PooledThreadExecutor(ThreadExecutor):
                         f.wait_done(timeout=0.005)
                         break
                 continue
-            gen, fut, resume, item_deadline = item
-            self._run_suspendable(gen, fut, resume, item_deadline)
+            gen, fut, resume, item_ctx = item
+            self._run_suspendable(gen, fut, resume, item_ctx)
 
     def _run_suspendable(self, gen: Generator, fut: Future,
                          resume: Optional[Any] = None,
-                         deadline: Optional[float] = None) -> None:
+                         ctx: Optional[RequestContext] = None) -> None:
         """Drive a carrier without ever blocking this thread on a join: an
         unresolved Wait/WaitAll parks the generator on a done-callback that
         re-queues its continuation.  This is what keeps work-helping and
         saturated fan-out flat-stacked."""
+        deadline = ctx.deadline if ctx is not None else None
         send_value: Any = None
         throw_exc: Optional[BaseException] = None
         if resume is not None:
@@ -500,22 +513,23 @@ class PooledThreadExecutor(ThreadExecutor):
                     except BaseException as exc:
                         send_value, throw_exc = None, exc
                     continue
-                self._suspend_on(gen, fut, eff, waits, deadline)
+                self._suspend_on(gen, fut, eff, waits, ctx)
                 return
             try:
                 # non-join effects only; ThreadExecutor._interpret so the
                 # timed-wait work-help hook above is not re-entered
-                send_value = ThreadExecutor._interpret(self, eff, deadline)
+                send_value = ThreadExecutor._interpret(self, eff, ctx)
                 throw_exc = None
             except BaseException as exc:
                 throw_exc = exc
 
     def _suspend_on(self, gen: Generator, fut: Future, eff: Any,
                     waits: List[Future],
-                    deadline: Optional[float] = None) -> None:
+                    ctx: Optional[RequestContext] = None) -> None:
         # With a deadline, the parked continuation races a TimerThread
         # expiry against the done-callback; a first-writer-wins claim
         # guarantees exactly one of them enqueues the resume.
+        deadline = ctx.deadline if ctx is not None else None
         claim = Once() if deadline is not None else None
         if claim is not None:
             def _expire() -> None:
@@ -523,7 +537,7 @@ class PooledThreadExecutor(ThreadExecutor):
                     self._count_timeout()
                     self._enqueue_resume(gen, fut, ("throw", DeadlineExceeded(
                         f"{self.name}: deadline expired while suspended")),
-                        deadline)
+                        ctx)
             self.app._timer.push(deadline, _expire)
         if isinstance(eff, Wait):
             def _resume_one(w: Future) -> None:
@@ -533,7 +547,7 @@ class PooledThreadExecutor(ThreadExecutor):
                     resume = ("send", w.result())
                 except BaseException as exc:
                     resume = ("throw", exc)
-                self._enqueue_resume(gen, fut, resume, deadline)
+                self._enqueue_resume(gen, fut, resume, ctx)
             waits[0].add_done_callback(_resume_one)
             return
         remaining = [len(waits)]
@@ -550,22 +564,22 @@ class PooledThreadExecutor(ThreadExecutor):
                 resume = ("send", [w.result() for w in waits])
             except BaseException as exc:
                 resume = ("throw", exc)
-            self._enqueue_resume(gen, fut, resume, deadline)
+            self._enqueue_resume(gen, fut, resume, ctx)
         for w in waits:
             w.add_done_callback(_resume_all)
 
     def _enqueue_resume(self, gen: Generator, fut: Future, resume: Any,
-                        deadline: Optional[float] = None) -> None:
+                        ctx: Optional[RequestContext] = None) -> None:
         # unbounded on purpose: continuations are not new admissions (the
         # carrier was counted and bounded at submission), and refusing them
         # could deadlock the very join they resolve
         with self._qlock:
-            self._resumes.append((gen, fut, resume, deadline))
+            self._resumes.append((gen, fut, resume, ctx))
             self._work_cv.notify()
 
     # ----------------------------------------------------------- spawn path
     def _spawn_carrier(self, gen: Generator, fut: Future,
-                       deadline: Optional[float] = None) -> None:
+                       ctx: Optional[RequestContext] = None) -> None:
         on_pool = threading.get_ident() in self._pool_ids
         queued = False
         stalled = False
@@ -588,7 +602,7 @@ class PooledThreadExecutor(ThreadExecutor):
                 # queue slot may only free when *it* helps, so waiting here
                 # could deadlock
             if len(self._carriers) < self.queue_bound:
-                self._carriers.append((gen, fut, deadline))
+                self._carriers.append((gen, fut, ctx))
                 queued = True
                 self._work_cv.notify()
                 depth = len(self._carriers) + len(self._resumes)
@@ -604,9 +618,9 @@ class PooledThreadExecutor(ThreadExecutor):
                 self.queue_depth_hwm = depth
         if not queued:
             if on_pool:
-                self._run_suspendable(gen, fut, None, deadline)
+                self._run_suspendable(gen, fut, None, ctx)
             else:
-                self._drive(gen, fut, deadline)
+                self._drive(gen, fut, ctx)
 
     def stats(self) -> BackendStats:
         """Snapshot counters, including pool backpressure gauges."""
@@ -705,7 +719,7 @@ class FiberExecutor(Executor):
             s.stop()
 
     def deliver(self, gen: Generator, reply: Future,
-                deadline: Optional[float] = None) -> None:
+                ctx: Optional[RequestContext] = None) -> None:
         """Place the request on a scheduler (round-robin)."""
         # Round-robin placement in both modes (as in boost, whose
         # work_stealing algorithm also keeps naive local placement and lets
@@ -714,10 +728,10 @@ class FiberExecutor(Executor):
         # concurrent delivers all read the same stale queue lengths and herd
         # onto one scheduler, while rr spreads bursts by construction.
         s = self._scheds[next(self._rr) % len(self._scheds)]
-        if deadline is None:  # common path keeps the pre-deadline signature
+        if ctx is None:  # common path keeps the pre-context signature
             s.spawn_external(gen, reply)
         else:
-            s.spawn_external(gen, reply, deadline=deadline)
+            s.spawn_external(gen, reply, ctx=ctx)
 
     def stats(self) -> BackendStats:
         """Aggregate counters across schedulers (rings included)."""

@@ -51,7 +51,9 @@ from collections import deque
 from typing import Any, Generator, List, Optional, Tuple
 
 from .calibrate import burn
-from .effects import AsyncRpc, Compute, Effect, Offload, Sleep, SpawnLocal, Wait, WaitAll
+from .context import RequestContext
+from .effects import (AsyncRpc, Compute, CurrentContext, Effect, Offload,
+                      Sleep, SpawnLocal, Wait, WaitAll)
 from .future import CompletedFuture, Future, Once
 from .resilience import DeadlineExceeded
 from .timers import TimerWheel
@@ -65,19 +67,27 @@ _DEADLINE = object()  # timer payload: a parked fiber's deadline expiry
 class Fiber:
     """A resumable handler: generator + completion future.
 
-    ``deadline`` is the request's inherited absolute expiry (or None); the
-    scheduler checks it at every hop (AsyncRpc) and arms it on the timer
-    wheel whenever the fiber parks, so expiry needs no polling."""
+    ``ctx`` is the request's :class:`~repro.core.context.RequestContext`
+    (or None on the plain path): session id, hop depth, and the inherited
+    absolute deadline the scheduler checks at every hop (AsyncRpc) and
+    arms on the timer wheel whenever the fiber parks — expiry needs no
+    polling."""
 
-    __slots__ = ("gen", "future", "name", "deadline")
+    __slots__ = ("gen", "future", "name", "ctx")
     _count = itertools.count()
 
     def __init__(self, gen: Generator, future: Optional[Future] = None,
-                 name: str = "", deadline: Optional[float] = None) -> None:
+                 name: str = "",
+                 ctx: Optional[RequestContext] = None) -> None:
         self.gen = gen
         self.future = future if future is not None else Future()
         self.name = name or f"fiber-{next(Fiber._count)}"
-        self.deadline = deadline
+        self.ctx = ctx
+
+    @property
+    def deadline(self) -> Optional[float]:
+        """The context's absolute expiry (None without one)."""
+        return self.ctx.deadline if self.ctx is not None else None
 
 
 class StealGroup:
@@ -164,17 +174,17 @@ class FiberScheduler:
         self.inline_depth_hwm = 0
         self.fast_futures = 0
         self.slow_futures = 0
-        # ambient deadline of the inline call currently being driven (the
-        # inlined callee has no Fiber yet); owner-thread-only, save/restored
-        # around each _drive_inline so nesting works.
-        self._inline_deadline: Optional[float] = None
+        # ambient RequestContext of the inline call currently being driven
+        # (the inlined callee has no Fiber yet); owner-thread-only,
+        # save/restored around each _drive_inline so nesting works.
+        self._inline_ctx: Optional[RequestContext] = None
 
     # ------------------------------------------------------------ external
     def spawn_external(self, gen: Generator, future: Optional[Future] = None,
                        name: str = "",
-                       deadline: Optional[float] = None) -> Future:
+                       ctx: Optional[RequestContext] = None) -> Future:
         """Thread-safe: create a fiber from outside the scheduler thread."""
-        fib = Fiber(gen, future, name, deadline)
+        fib = Fiber(gen, future, name, ctx)
         with self._cond:
             self._injected.append((fib, None))
             self._cond.notify()
@@ -399,22 +409,22 @@ class FiberScheduler:
             if parked:
                 return
 
-    def _rpc_deadline(self, fib: Optional[Fiber],
-                      eff: AsyncRpc) -> Optional[float]:
-        """Effective deadline of an async call: the effect's own bound
-        tightened by the calling request's inherited one (inline callees
-        have no Fiber yet; their ambient bound is _inline_deadline)."""
-        amb = fib.deadline if fib is not None else self._inline_deadline
-        dl = eff.deadline
-        if amb is not None:
-            dl = amb if dl is None else min(dl, amb)
-        return dl
+    def _rpc_ctx(self, fib: Optional[Fiber],
+                 eff: AsyncRpc) -> Optional[RequestContext]:
+        """Context for one nested async call: the calling request's
+        inherited context (inline callees have no Fiber yet; their ambient
+        context is ``_inline_ctx``) hopped with the effect's own deadline —
+        session/trace inherited, deadline tightened, depth bumped.  None
+        when there is nothing to carry (the zero-alloc plain path)."""
+        parent = fib.ctx if fib is not None else self._inline_ctx
+        return RequestContext.hop(parent, eff.deadline)
 
     def _interpret(self, fib: Fiber, eff: Effect) -> Tuple[Any, bool]:
         """Returns (send_value, parked)."""
         if isinstance(eff, AsyncRpc):
             app = self.app
-            dl = self._rpc_deadline(fib, eff)
+            hop = self._rpc_ctx(fib, eff)
+            dl = hop.deadline if hop is not None else None
             if dl is not None and time.monotonic() >= dl:
                 # hop check: an expired request spawns no further fan-out
                 self._count_timeout()
@@ -428,7 +438,7 @@ class FiberScheduler:
                 # accounting (App._inline_resilient); only a mailbox-bound
                 # policy forces the hop through App.send (tier 2 below),
                 # because inlining would bypass the bounded queue itself.
-                fut = (self._try_inline(eff, app, dl)
+                fut = (self._try_inline(eff, app, hop)
                        if app._inline_rpc_ok else None)
                 if fut is not None:
                     return fut, False
@@ -438,11 +448,11 @@ class FiberScheduler:
                 # the caller directly instead of spawning a fiber whose only
                 # job is to forward it.
                 return app.send(eff.dest, eff.method, eff.payload,
-                                deadline=dl), False
+                                ctx=hop), False
             # THE paper's operation: async call spawns a *fiber*, not a thread.
             carrier = Fiber(self.app.rpc_carrier(eff.dest, eff.method,
-                                                 eff.payload, dl),
-                            name=f"carrier->{eff.dest}", deadline=dl)
+                                                 eff.payload, hop),
+                            name=f"carrier->{eff.dest}", ctx=hop)
             self.fibers_spawned += 1
             self._push_ready((carrier, None))
             return carrier.future, False
@@ -499,6 +509,11 @@ class FiberScheduler:
             self._push_ready((sub, None))
             return sub.future, False
 
+        if isinstance(eff, CurrentContext):
+            # ambient context of the running request (inlined callees have
+            # no Fiber; theirs is the scheduler's _inline_ctx)
+            return (fib.ctx if fib is not None else self._inline_ctx), False
+
         raise TypeError(f"Unknown effect: {eff!r}")
 
     def _arm_deadline(self, fib: Optional[Fiber]) -> Optional[Once]:
@@ -522,7 +537,7 @@ class FiberScheduler:
 
     # ------------------------------------------------ zero-handoff fast path
     def _try_inline(self, eff: AsyncRpc, app: "Any",
-                    deadline: Optional[float] = None) -> Optional[Future]:
+                    ctx: Optional[RequestContext] = None) -> Optional[Future]:
         """Same-carrier call inlining: if the callee service's executor is
         cooperative and co-scheduled (same process, no simulated network
         hop), run its handler right here as a direct continuation of the
@@ -535,13 +550,13 @@ class FiberScheduler:
         gates its own depth budget and drives the admitted generator."""
         if self._inline_depth >= app.inline_budget:
             return None
-        return app._inline_call(eff.dest, eff.method, eff.payload, deadline,
+        return app._inline_call(eff.dest, eff.method, eff.payload, ctx,
                                 self._inline_drive)
 
     def _inline_drive(self, gen: Generator,
-                      deadline: Optional[float]) -> Future:
+                      ctx: Optional[RequestContext]) -> Future:
         """Scheduler-side bookkeeping around :meth:`_drive_inline`: inline
-        counters, depth high-water, and the ambient-deadline save/restore
+        counters, depth high-water, and the ambient-context save/restore
         that lets nested inlined hops tighten against the caller's bound.
         Owner-thread-only (``App._inline_call`` invokes it synchronously on
         the driving scheduler thread)."""
@@ -549,16 +564,16 @@ class FiberScheduler:
         self._inline_depth += 1
         if self._inline_depth > self.inline_depth_hwm:
             self.inline_depth_hwm = self._inline_depth
-        prev_deadline = self._inline_deadline
-        self._inline_deadline = deadline
+        prev_ctx = self._inline_ctx
+        self._inline_ctx = ctx
         try:
-            return self._drive_inline(gen, deadline)
+            return self._drive_inline(gen, ctx)
         finally:
-            self._inline_deadline = prev_deadline
+            self._inline_ctx = prev_ctx
             self._inline_depth -= 1
 
     def _drive_inline(self, gen: Generator,
-                      deadline: Optional[float] = None) -> Future:
+                      ctx: Optional[RequestContext] = None) -> Future:
         """Run an inlined callee handler up to its first suspension point.
 
         Completion without suspending returns a pre-resolved
@@ -603,8 +618,8 @@ class FiberScheduler:
             if isinstance(eff, (Wait, WaitAll, Sleep)):
                 # first real suspension point: from here on the remainder is
                 # an ordinary fiber of this scheduler (inheriting the inline
-                # call's effective deadline, so parked expiry still arms)
-                fib = Fiber(gen, deadline=deadline)
+                # call's context, so parked deadline expiry still arms)
+                fib = Fiber(gen, ctx=ctx)
                 self.fibers_spawned += 1
                 send_value, parked = self._interpret(fib, eff)
                 if parked:
@@ -696,7 +711,8 @@ class BatchFiberScheduler(FiberScheduler):
         super().__init__(app, name)
         self.batch_size = batch_size
         self.flush_after = flush_after
-        self._ring: List[Tuple[str, str, Any, Future, Optional[float]]] = []
+        self._ring: List[Tuple[str, str, Any, Future,
+                               Optional[RequestContext]]] = []
         # Each flush advances the ring generation; flush deadlines are
         # tagged with the generation that armed them so a stale timer from
         # a size/join-flushed ring cannot truncate its successor (which
@@ -712,7 +728,8 @@ class BatchFiberScheduler(FiberScheduler):
     # ----------------------------------------------------------- submission
     def _interpret(self, fib: Fiber, eff: Effect) -> Tuple[Any, bool]:
         if isinstance(eff, AsyncRpc):
-            dl = self._rpc_deadline(fib, eff)
+            hop = self._rpc_ctx(fib, eff)
+            dl = hop.deadline if hop is not None else None
             if dl is not None and time.monotonic() >= dl:
                 # hop check before buffering: dead calls never hit the ring
                 self._count_timeout()
@@ -723,7 +740,7 @@ class BatchFiberScheduler(FiberScheduler):
                 # arm the flush deadline when the ring goes non-empty
                 self._timers.push(time.monotonic() + self.flush_after,
                                   (_FLUSH, self._ring_gen))
-            self._ring.append((eff.dest, eff.method, eff.payload, fut, dl))
+            self._ring.append((eff.dest, eff.method, eff.payload, fut, hop))
             if len(self._ring) > self.ring_hwm:
                 self.ring_hwm = len(self._ring)
             if len(self._ring) >= self.batch_size:
@@ -760,14 +777,14 @@ class BatchFiberScheduler(FiberScheduler):
         self._push_ready((carrier, None))
 
     def _batch_carrier(self, batch: List[Tuple[str, str, Any, Future,
-                                               Optional[float]]]
+                                               Optional[RequestContext]]]
                        ) -> Generator:
         """One fiber submits the whole ring: the per-call dispatch cost the
         plain fiber backend pays N times is paid once here."""
         if self.app.net_latency > 0:
             yield Sleep(self.app.net_latency)  # client-side hop, amortized
-        for dest, method, payload, fut, dl in batch:
-            reply = self.app.send(dest, method, payload, deadline=dl)
+        for dest, method, payload, fut, ctx in batch:
+            reply = self.app.send(dest, method, payload, ctx=ctx)
             reply.add_done_callback(
                 lambda r, fut=fut: _chain_reply(r, fut))
         return len(batch)
@@ -900,9 +917,9 @@ class CQBatchFiberScheduler(BatchFiberScheduler):
     # doorbell, so a burst of replies or deliveries costs one wakeup.
     def spawn_external(self, gen: Generator, future: Optional[Future] = None,
                        name: str = "",
-                       deadline: Optional[float] = None) -> Future:
+                       ctx: Optional[RequestContext] = None) -> Future:
         """Cross-thread delivery via the completion ring (one doorbell)."""
-        fib = Fiber(gen, future, name, deadline)
+        fib = Fiber(gen, future, name, ctx)
         self._complete(fib, None)
         return fib.future
 

@@ -37,10 +37,15 @@ from typing import Any, Callable, List, Optional, Tuple
 
 import numpy as np
 
+from .context import RequestContext
 from .metrics import BackendStats, LatencyRecorder, PeakResult, TrialResult
 from .service import App
 
-# (method, payload) chooser — called per arrival with the trial RNG
+# Per-arrival request chooser, called with the trial RNG.  Returns
+# ``(dest, method, payload)`` or — for session-affine workloads —
+# ``(dest, method, payload, session)``; a non-None 4th element becomes
+# ``RequestContext.session`` on the send, which is what session-affine
+# executors (``event-loop-shard``) use for placement.
 RequestFactory = Callable[[np.random.Generator], Tuple[str, str, Any]]
 
 
@@ -69,8 +74,12 @@ def run_trial(app: App, make_request: RequestFactory, rate: float,
 
     ``deadline`` (seconds, relative) classifies completions as *good* when
     they finish within it; with ``enforce_deadline=True`` it is also stamped
-    onto every send, so the app's resilience layer fails slow requests
-    instead of letting them queue forever.
+    onto every send (as ``RequestContext.deadline``), so the app's
+    resilience layer fails slow requests instead of letting them queue
+    forever.  When ``make_request`` returns a 4-tuple, the 4th element is
+    the request's session id: the trial mints a :class:`RequestContext`
+    carrying it, which session-affine executors use for shard placement and
+    handlers can read back via the ``CurrentContext`` effect.
 
     Sever-point / leftovers contract (the trial-isolation guarantee):
 
@@ -116,7 +125,9 @@ def run_trial(app: App, make_request: RequestFactory, rate: float,
                     shed[0] += 1
                     continue
                 outstanding[0] += 1
-            dest, method, payload = make_request(rng)
+            req = make_request(rng)
+            dest, method, payload = req[0], req[1], req[2]
+            session = req[3] if len(req) > 3 else None
             t0 = time.perf_counter()
 
             def _done(fut: Any, t0: float = t0) -> None:
@@ -142,7 +153,12 @@ def run_trial(app: App, make_request: RequestFactory, rate: float,
 
             dl = (time.monotonic() + deadline
                   if enforce_deadline and deadline is not None else None)
-            fut = app.send(dest, method, payload, deadline=dl)
+            # the load generator is where a request's RequestContext is
+            # born; plain sessionless/deadline-less sends stay ctx=None so
+            # the zero-overhead path never allocates a carrier
+            ctx = (RequestContext(session=session, deadline=dl)
+                   if session is not None or dl is not None else None)
+            fut = app.send(dest, method, payload, ctx=ctx)
             with lock:
                 if not fut.done:
                     inflight.add(fut)

@@ -1,11 +1,53 @@
 """Latency/throughput metrics used by the load generator and benchmarks."""
 from __future__ import annotations
 
+import itertools
 import threading
 from dataclasses import dataclass, field, fields
 from typing import Dict, List
 
 import numpy as np
+
+
+class CacheStats:
+    """Lock-free app-wide cache-tier counters (hits/misses).
+
+    Same idiom as ``ResilienceStats``: each event consumes one ticket from
+    an atomic ``itertools.count`` (single C-level op under the GIL) and
+    reads parse the counter's repr, so handlers on every executor thread
+    can count without a lock.  The apps' cache service reaches this via
+    ``svc.app.cache_stats``; ``App.backend_stats`` copies the totals into
+    ``BackendStats.cache_hits`` / ``cache_misses``.
+    """
+
+    __slots__ = ("_hits", "_misses")
+
+    def __init__(self) -> None:
+        self._hits = itertools.count(1)
+        self._misses = itertools.count(1)
+
+    @staticmethod
+    def _read(counter: "itertools.count") -> int:
+        r = repr(counter)                    # e.g. "count(42)"
+        return int(r[r.index("(") + 1:-1]) - 1
+
+    def hit(self) -> None:
+        """Count one cache hit."""
+        next(self._hits)
+
+    def miss(self) -> None:
+        """Count one cache miss."""
+        next(self._misses)
+
+    @property
+    def hits(self) -> int:
+        """Cache hits so far."""
+        return self._read(self._hits)
+
+    @property
+    def misses(self) -> int:
+        """Cache misses so far."""
+        return self._read(self._misses)
 
 
 @dataclass
@@ -59,6 +101,11 @@ class BackendStats:
     ``bulkhead_rejections``: attempts refused by a per-edge bulkhead on the
     caller side (the edge was never exercised — distinct from mailbox
     ``rejections``, which the destination refuses after transport).
+
+    Cache-tier counters (app-level, fed by the apps' cache service through
+    ``App.cache_stats``): ``cache_hits`` / ``cache_misses`` — cache-aside
+    lookups that found / missed the key (a miss pays the backing-store
+    read and populates the cache).
     """
     spawns: int = 0
     spawn_seconds: float = 0.0
@@ -87,6 +134,8 @@ class BackendStats:
     breaker_opens: int = 0
     rejections: int = 0
     bulkhead_rejections: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
 
     _GAUGES = ("queue_depth_hwm", "ring_hwm", "cq_hwm", "shards",
                "inline_depth_hwm")
@@ -228,6 +277,9 @@ class TrialResult:
             s += f" rej={bs['rejections']:.0f}"
         if bs.get("bulkhead_rejections"):
             s += f" bhrej={bs['bulkhead_rejections']:.0f}"
+        if bs.get("cache_hits") or bs.get("cache_misses"):
+            s += (f" ch={bs.get('cache_hits', 0):.0f}"
+                  f" cm={bs.get('cache_misses', 0):.0f}")
         return s
 
 

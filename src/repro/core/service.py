@@ -13,14 +13,15 @@ import itertools
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Generator, List, Optional
+from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
 
+from .context import RequestContext
 from .effects import Sleep, Wait
 from .executor import Executor, make_executor
 from .future import CompletedFuture, Future
 from .resilience import (Bulkhead, CircuitBreaker, CircuitOpenError,
                          DeadlineExceeded, Rejected, ResiliencePolicy,
-                         ResilienceStats, RetryBudget)
+                         ResilienceStats, RetryBudget, min_deadline)
 from .timers import TimerThread
 
 # Default inline-depth budget for the zero-handoff fast path: how many
@@ -31,6 +32,21 @@ from .timers import TimerThread
 # compose -> text -> url_shorten is depth 2).  0 disables the fast path
 # entirely (carrier elision included), restoring the PR 3 dispatch path.
 INLINE_BUDGET_DEFAULT = 4
+
+
+def _ctx_with_deadline(ctx: Optional[RequestContext],
+                       deadline: Optional[float]
+                       ) -> Optional[RequestContext]:
+    """Context carrying exactly ``deadline`` (session/depth/trace kept).
+    Returns ``ctx`` unchanged when nothing would change, and ``None`` when
+    there is nothing to carry — the zero-alloc plain path."""
+    if ctx is None:
+        return RequestContext(deadline=deadline) if deadline is not None \
+            else None
+    if ctx.deadline == deadline:
+        return ctx
+    return RequestContext(session=ctx.session, deadline=deadline,
+                          depth=ctx.depth, trace_id=ctx.trace_id)
 
 
 @dataclass
@@ -89,13 +105,17 @@ class Service:
             self._inflight -= 1
 
     def deliver(self, method: str, payload: Any, reply: Future,
-                deadline: Optional[float] = None) -> None:
+                ctx: Optional[RequestContext] = None) -> None:
         """Transport hop: admit (deadline/mailbox-bound checks), simulate
-        the network, and hand the handler generator to the executor."""
+        the network, and hand the handler generator to the executor.
+        ``ctx`` is the request's :class:`RequestContext` (or None on the
+        plain path); its deadline gates admission and the whole context is
+        handed to the executor so session pinning and nested hops see it."""
         handler = self.handlers.get(method)
         if handler is None:
             reply.set_exception(KeyError(f"{self.name}: no method {method!r}"))
             return
+        deadline = ctx.deadline if ctx is not None else None
         if deadline is not None and time.monotonic() >= deadline:
             # hop-level admission check: an already-expired request must not
             # enter the mailbox — fail the reply, spawn nothing.
@@ -116,7 +136,7 @@ class Service:
                 return
             reply.add_done_callback(self._admission_release)
         self.count_request()
-        self.executor.deliver(handler(self, payload), reply, deadline)
+        self.executor.deliver(handler(self, payload), reply, ctx)
 
     def inline_handler(self, method: str) -> Optional[Callable[..., Generator]]:
         """Zero-handoff fast path: return the handler iff this service's
@@ -277,14 +297,27 @@ class App:
         # for backoff firings and pool-suspend deadline expiries (lazily
         # started).
         self._res_stats = ResilienceStats()
-        self._breakers: Dict[str, CircuitBreaker] = {}
+        # per-EDGE resilience state, keyed (dest, method): a sick write
+        # path must not take the healthy read path of the same service
+        # down with it (PR 8 — previously keyed by bare dest).
+        self._breakers: Dict[Tuple[str, str], CircuitBreaker] = {}
         self._breaker_lock = threading.Lock()
-        self._bulkheads: Dict[str, Bulkhead] = {}
+        self._bulkheads: Dict[Tuple[str, str], Bulkhead] = {}
         self._retry_budget: Optional[RetryBudget] = (
             RetryBudget(resilience.retry)
             if resilience is not None and resilience.retry is not None
             else None)
         self._timer = TimerThread()
+        # Sharded-backend routing policy: True pins requests to shards by
+        # their RequestContext session (deterministic across trials and
+        # restarts); False falls back to the synthetic per-executor ticket.
+        # Read at deliver time so an A/B probe can flip it between trials.
+        self.shard_by_session = True
+        # App-wide cache-tier counters (fed by the apps' cache service via
+        # svc.app.cache_stats; surfaced in backend_stats as cache_hits /
+        # cache_misses).  Created unconditionally — two itertools.counts.
+        from .metrics import CacheStats
+        self.cache_stats = CacheStats()
         # futures of requests a load-generation trial abandoned at sever
         # time; the next trial settles on them before snapshotting stats
         # (see loadgen.run_trial).
@@ -331,14 +364,24 @@ class App:
 
     # ---------------------------------------------------------- transport
     def send(self, dest: str, method: str, payload: Any = None, *,
+             ctx: Optional[RequestContext] = None,
              deadline: Optional[float] = None) -> Future:
         """Enqueue an RPC at ``dest``; returns the reply future.
         Thread-safe; callable from any thread (incl. the load generator).
 
-        ``deadline`` is an absolute ``time.monotonic()`` bound propagated
-        to every downstream hop.  With no deadline and no resilience
-        policy this is the original zero-overhead path."""
-        if self.resilience is None and deadline is None:
+        ``ctx`` is the request's :class:`~repro.core.context.
+        RequestContext` — session identity (shard pinning), absolute
+        deadline, hop depth, trace id — threaded to every downstream hop.
+        ``deadline`` is the legacy kwarg, kept as a back-compat shim: it
+        is folded into the context (tightening any deadline already
+        there).  With no context, no deadline and no resilience policy
+        this is the original zero-overhead path — nothing is allocated
+        beyond the reply future."""
+        if deadline is not None:
+            ctx = _ctx_with_deadline(
+                ctx, min_deadline(ctx.deadline, deadline)
+                if ctx is not None else deadline)
+        if self.resilience is None and (ctx is None or ctx.deadline is None):
             reply = Future()
             if not self._started:
                 # fail fast: a delivery into a stopped app would sit in a
@@ -351,38 +394,51 @@ class App:
             if svc is None:
                 reply.set_exception(KeyError(f"no service {dest!r}"))
                 return reply
-            svc.deliver(method, payload, reply)
+            svc.deliver(method, payload, reply, ctx)
             return reply
-        return self._send_resilient(dest, method, payload, deadline)
+        return self._send_resilient(dest, method, payload, ctx)
 
-    def _breaker(self, dest: str) -> CircuitBreaker:
-        """Per-destination circuit breaker, created on first use (shared by
-        the carrier send path and the inline fast path — one window per
-        edge, whichever mechanism exercised it)."""
-        br = self._breakers.get(dest)
+    def _breaker(self, dest: str, method: str) -> CircuitBreaker:
+        """Per-edge circuit breaker, keyed ``(dest, method)`` and created
+        on first use (shared by the carrier send path and the inline fast
+        path — one window per edge, whichever mechanism exercised it)."""
+        key = (dest, method)
+        br = self._breakers.get(key)
         if br is None:
             with self._breaker_lock:
-                br = self._breakers.get(dest)
+                br = self._breakers.get(key)
                 if br is None:
                     br = self.resilience.make_breaker()
-                    self._breakers[dest] = br
+                    self._breakers[key] = br
         return br
 
-    def _bulkhead(self, dest: str) -> Bulkhead:
-        """Per-destination bulkhead, created on first use (same sharing
-        contract as :meth:`_breaker`: inlined and carrier attempts draw
-        from one slot pool)."""
-        bh = self._bulkheads.get(dest)
+    def _bulkhead(self, dest: str, method: str) -> Bulkhead:
+        """Per-edge bulkhead, keyed ``(dest, method)``, created on first
+        use (same sharing contract as :meth:`_breaker`: inlined and
+        carrier attempts draw from one slot pool)."""
+        key = (dest, method)
+        bh = self._bulkheads.get(key)
         if bh is None:
             with self._breaker_lock:
-                bh = self._bulkheads.get(dest)
+                bh = self._bulkheads.get(key)
                 if bh is None:
                     bh = Bulkhead(self.resilience.bulkhead)
-                    self._bulkheads[dest] = bh
+                    self._bulkheads[key] = bh
         return bh
 
+    def resilience_by_edge(self) -> Dict[Tuple[str, str], Dict[str, int]]:
+        """Per-edge resilience report: ``{(dest, method): {"opens": ...,
+        "bulkhead_inflight": ...}}`` for every edge that has seen policy
+        traffic (breaker window or bulkhead slot pool created)."""
+        report: Dict[Tuple[str, str], Dict[str, int]] = {}
+        for key, br in self._breakers.items():
+            report.setdefault(key, {})["opens"] = br.opens
+        for key, bh in self._bulkheads.items():
+            report.setdefault(key, {})["bulkhead_inflight"] = bh.inflight
+        return report
+
     def _send_resilient(self, dest: str, method: str, payload: Any,
-                        deadline: Optional[float]) -> Future:
+                        ctx: Optional[RequestContext]) -> Future:
         """Policy-wrapped send: default deadline stamping, per-destination
         circuit breaker + bulkhead, budgeted retry-with-jittered-backoff.
 
@@ -401,6 +457,7 @@ class App:
         if svc is None:
             reply.set_exception(KeyError(f"no service {dest!r}"))
             return reply
+        deadline = ctx.deadline if ctx is not None else None
         if (deadline is None and pol is not None
                 and pol.deadline is not None):
             deadline = time.monotonic() + pol.deadline
@@ -409,20 +466,21 @@ class App:
             reply.set_exception(DeadlineExceeded(
                 f"{dest}.{method}: deadline already expired at send"))
             return reply
-        breaker = (self._breaker(dest)
+        ctx = _ctx_with_deadline(ctx, deadline)
+        breaker = (self._breaker(dest, method)
                    if pol is not None and pol.breakers else None)
         if breaker is not None and not breaker.allow():
             reply.set_exception(CircuitOpenError(
-                f"{dest}: circuit open, failing fast"))
+                f"{dest}.{method}: circuit open, failing fast"))
             return reply
-        bulkhead = (self._bulkhead(dest)
+        bulkhead = (self._bulkhead(dest, method)
                     if pol is not None and pol.bulkhead is not None else None)
-        self._drive_attempts(svc, method, payload, deadline, breaker,
+        self._drive_attempts(svc, method, payload, ctx, breaker,
                              bulkhead, reply, [0])
         return reply
 
     def _drive_attempts(self, svc: Service, method: str, payload: Any,
-                        deadline: Optional[float],
+                        ctx: Optional[RequestContext],
                         breaker: Optional[CircuitBreaker],
                         bulkhead: Optional[Bulkhead], reply: Future,
                         attempts: List[int],
@@ -448,6 +506,7 @@ class App:
         pol = self.resilience
         retry = pol.retry if pol is not None else None
         dest = svc.name
+        deadline = ctx.deadline if ctx is not None else None
 
         def launch() -> None:
             attempts[0] += 1
@@ -458,7 +517,7 @@ class App:
                 self._res_stats.bulkhead_rejection()
                 if breaker is not None:
                     breaker.abort_probe()
-                fail(Rejected(f"{dest}: bulkhead full "
+                fail(Rejected(f"{dest}.{method}: bulkhead full "
                               f"({bulkhead.limit} attempts in flight)"))
                 return
             inner = Future()
@@ -467,7 +526,7 @@ class App:
                 # on_done always sees this attempt's slot already freed
                 inner.add_done_callback(bulkhead.release)
             inner.add_done_callback(on_done)
-            svc.deliver(method, payload, inner, deadline)
+            svc.deliver(method, payload, inner, ctx)
 
         def on_done(f: Future) -> None:
             try:
@@ -539,8 +598,9 @@ class App:
 
     # ------------------------------------------------ zero-handoff admission
     def _inline_call(self, dest: str, method: str, payload: Any,
-                     deadline: Optional[float],
-                     drive: Callable[[Generator, Optional[float]], Future]
+                     ctx: Optional[RequestContext],
+                     drive: Callable[[Generator, Optional[RequestContext]],
+                                     Future]
                      ) -> Optional[Future]:
         """Tier-1 fast-path admission: run ``dest.method`` as a direct
         continuation of the calling scheduler, with full policy accounting.
@@ -561,14 +621,15 @@ class App:
         if self._inline_plain:
             # no per-edge policy bookkeeping: the pre-PR-6 path, bit-for-bit
             svc.count_request()
-            return drive(handler(svc, payload), deadline)
+            return drive(handler(svc, payload), ctx)
         return self._inline_resilient(svc, handler, method, payload,
-                                      deadline, drive)
+                                      ctx, drive)
 
     def _inline_resilient(self, svc: Service,
                           handler: Callable[..., Generator], method: str,
-                          payload: Any, deadline: Optional[float],
-                          drive: Callable[[Generator, Optional[float]],
+                          payload: Any, ctx: Optional[RequestContext],
+                          drive: Callable[[Generator,
+                                           Optional[RequestContext]],
                                           Future]) -> Future:
         """Breaker-aware inlining: the zero-handoff fast path under a
         breakers/retry/bulkhead policy (PR 7).
@@ -588,14 +649,16 @@ class App:
         :meth:`_drive_attempts` with ``attempts=[1]``; retries go through
         the mailbox (never re-inline — see ``_drive_attempts``)."""
         pol = self.resilience
+        deadline = ctx.deadline if ctx is not None else None
         if deadline is None and pol.deadline is not None:
             deadline = time.monotonic() + pol.deadline
-        breaker = self._breaker(svc.name) if pol.breakers else None
+            ctx = _ctx_with_deadline(ctx, deadline)
+        breaker = self._breaker(svc.name, method) if pol.breakers else None
         if breaker is not None and not breaker.allow():
             return CompletedFuture(exc=CircuitOpenError(
-                f"{svc.name}: circuit open, failing fast"))
-        bulkhead = self._bulkhead(svc.name) if pol.bulkhead is not None \
-            else None
+                f"{svc.name}.{method}: circuit open, failing fast"))
+        bulkhead = self._bulkhead(svc.name, method) \
+            if pol.bulkhead is not None else None
         if bulkhead is not None and not bulkhead.try_acquire():
             # the edge was never exercised: no breaker evidence (but free a
             # half-open probe slot), count it, and let the shared attempt
@@ -603,16 +666,16 @@ class App:
             self._res_stats.bulkhead_rejection()
             if breaker is not None:
                 breaker.abort_probe()
-            exc = Rejected(f"{svc.name}: bulkhead full "
+            exc = Rejected(f"{svc.name}.{method}: bulkhead full "
                            f"({bulkhead.limit} attempts in flight)")
             if pol.retry is None:
                 return CompletedFuture(exc=exc)
             reply = Future()
-            self._drive_attempts(svc, method, payload, deadline, breaker,
+            self._drive_attempts(svc, method, payload, ctx, breaker,
                                  bulkhead, reply, [1], prefail=exc)
             return reply
         svc.count_request()
-        attempt = drive(handler(svc, payload), deadline)
+        attempt = drive(handler(svc, payload), ctx)
         if bulkhead is not None:
             attempt.add_done_callback(bulkhead.release)
         if attempt.done and attempt.exception() is None:
@@ -626,18 +689,20 @@ class App:
         # adopt it into the shared attempt loop for breaker recording and
         # possible mailbox-path retries
         reply = Future()
-        self._drive_attempts(svc, method, payload, deadline, breaker,
+        self._drive_attempts(svc, method, payload, ctx, breaker,
                              bulkhead, reply, [1], first=attempt)
         return reply
 
     def rpc_carrier(self, dest: str, method: str, payload: Any,
-                    deadline: Optional[float] = None) -> Generator:
+                    ctx: Optional[RequestContext] = None) -> Generator:
         """The generator every async-call carrier runs: client-side network
         latency, send, block on reply.  Interpreted by a kernel thread
-        (thread backend) or a fiber (fiber backend)."""
+        (thread backend) or a fiber (fiber backend).  ``ctx`` is the hop's
+        already-derived :class:`RequestContext` (deadline tightened by the
+        interpreter via ``RequestContext.hop``)."""
         if self.net_latency > 0:
             yield Sleep(self.net_latency)
-        reply = self.send(dest, method, payload, deadline=deadline)
+        reply = self.send(dest, method, payload, ctx=ctx)
         value = yield Wait(reply)
         return value
 
@@ -662,4 +727,6 @@ class App:
         agg.rejections = self._res_stats.rejections
         agg.bulkhead_rejections = self._res_stats.bulkhead_rejections
         agg.breaker_opens = sum(b.opens for b in self._breakers.values())
+        agg.cache_hits = self.cache_stats.hits
+        agg.cache_misses = self.cache_stats.misses
         return agg

@@ -73,7 +73,8 @@ class CheckpointManager:
     def offload(self, fn, *args):
         return self._pool.submit(fn, *args)
 
-    def rpc_carrier(self, dest, method, payload):  # pragma: no cover
+    def rpc_carrier(self, dest, method, payload,
+                    ctx=None):  # pragma: no cover
         raise RuntimeError("checkpoint fibers make no RPCs")
 
     # ------------------------------------------------------------------ save

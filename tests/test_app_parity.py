@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.apps import APP_NAMES, BENCH_BACKENDS, REGISTRY, get_app_def
-from repro.core import run_trial
+from repro.core import RequestContext, run_trial
 
 BACKENDS = BENCH_BACKENDS
 CASES = [(name, wl) for name in APP_NAMES
@@ -19,10 +19,18 @@ CASES = [(name, wl) for name in APP_NAMES
 
 
 def _run_requests(app_name, requests, backend):
+    """Serve a request sequence; a 4-tuple request carries a session id,
+    sent as a RequestContext (the session-affine ``cached`` workload)."""
     d = get_app_def(app_name)
+    out = []
     with d.build(backend) as app:
-        return [app.send(dest, method, payload).wait(timeout=15)
-                for dest, method, payload in requests]
+        for req in requests:
+            dest, method, payload = req[:3]
+            ctx = (RequestContext(session=req[3])
+                   if len(req) > 3 else None)
+            out.append(app.send(dest, method, payload,
+                                ctx=ctx).wait(timeout=15))
+    return out
 
 
 @pytest.mark.parametrize("app_name,workload", CASES)
@@ -46,20 +54,25 @@ def test_registry_has_all_three_apps():
 
 @pytest.mark.parametrize("app_name", APP_NAMES)
 def test_registry_protocol(app_name):
-    """Every app exposes four workloads incl. 'mixed', and its factories
-    target the app's frontend with methods the frontend serves."""
+    """Every app exposes five workloads incl. 'mixed' and the session-affine
+    'cached', and its factories target the app's frontend with methods the
+    frontend serves."""
     d = get_app_def(app_name)
-    assert len(d.workloads) == 4
+    assert len(d.workloads) == 5
     assert "mixed" in d.workloads
+    assert "cached" in d.workloads
     app = d.build("fiber")  # wiring only, never started
     frontend_methods = set(app.services[d.frontend].handlers)
     rng = np.random.default_rng(0)
     for wl in d.workloads:
         factory = d.make_request_factory(wl)
         for _ in range(8):
-            dest, method, _payload = factory(rng)
+            req = factory(rng)
+            dest, method = req[0], req[1]
             assert dest == d.frontend
             assert method in frontend_methods
+            if wl == "cached":  # 4-tuple: session rides along
+                assert isinstance(req[3], str)
     with pytest.raises(ValueError):
         d.make_request_factory("no_such_workload")
 

@@ -81,7 +81,7 @@ def _run_script(backend: str, inline_budget: int, n_sends: int = 40):
                 outcomes.append("open")
             except RuntimeError:
                 outcomes.append("err")
-            leaf_br = app._breakers.get("leaf")
+            leaf_br = app._breakers.get(("leaf", "get"))
             trace.append(leaf_br.state if leaf_br is not None else None)
             if outcomes[-1] != "ok" and trace[-1] == "open":
                 # let the reset timeout elapse so the script makes progress
@@ -166,7 +166,7 @@ def test_inline_open_circuit_fails_fast_without_running_handler():
                 app.send("root", "get", i).wait(timeout=5.0)
             except RuntimeError:  # includes CircuitOpenError
                 pass
-        assert app._breakers["leaf"].state == "open"
+        assert app._breakers[("leaf", "get")].state == "open"
         ran_before = len(calls)
         for i in range(10):
             with pytest.raises(RuntimeError):
@@ -289,7 +289,7 @@ def test_bulkhead_rejection_is_retryable_but_not_breaker_evidence():
         assert first.wait(timeout=5.0) == "open"
         assert second.wait(timeout=5.0) == "open"   # a retry got the slot
         stats = app.backend_stats()
-        assert app._breakers["gated"].state == "closed"
+        assert app._breakers[("gated", "get")].state == "closed"
     assert stats.retries >= 1, stats
     assert stats.bulkhead_rejections >= 1, stats
     assert stats.breaker_opens == 0, stats  # rejections are not failures

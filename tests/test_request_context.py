@@ -1,0 +1,369 @@
+"""RequestContext: the first-class request carrier (PR 8).
+
+Covers the carrier itself (hop algebra, zero-alloc plain path, stable
+session keys), end-to-end propagation through every backend (depth,
+deadline, session, trace — read back by handlers via the
+``CurrentContext`` effect, through the inline fast path and the rings
+alike), by-session shard pinning determinism across trials and restarts,
+the per-edge ``(dest, method)`` resilience keying, cache hit/miss
+accounting parity across the backend matrix, and the Zipfian session
+workload's distribution sanity.
+"""
+import collections
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.apps import get_app_def
+from repro.apps._workload import make_zipf_factory
+from repro.core import (App, AsyncRpc, BACKEND_NAMES, CircuitOpenError,
+                        CurrentContext, Future, RequestContext,
+                        ResiliencePolicy, ServiceSpec, Sleep, Wait,
+                        session_key)
+from repro.core.eventloop import ShardedEventLoopExecutor
+
+
+# ------------------------------------------------------------- the carrier
+def test_hop_plain_path_allocates_nothing():
+    """No parent, no deadline -> hop returns None: plain sends never pay a
+    context allocation anywhere on the hot path."""
+    assert RequestContext.hop(None, None) is None
+
+
+def test_hop_creates_depth_one_child_from_bare_deadline():
+    ctx = RequestContext.hop(None, 123.0)
+    assert ctx is not None
+    assert ctx.deadline == 123.0
+    assert ctx.depth == 1
+    assert ctx.session is None
+
+
+def test_hop_inherits_and_tightens():
+    parent = RequestContext(session="s1", deadline=100.0)
+    child = RequestContext.hop(parent, 90.0)
+    assert child.session == "s1"
+    assert child.trace_id == parent.trace_id
+    assert child.depth == parent.depth + 1
+    assert child.deadline == 90.0          # tightened
+    looser = RequestContext.hop(parent, 200.0)
+    assert looser.deadline == 100.0        # parent's bound wins
+    nodl = RequestContext.hop(parent, None)
+    assert nodl.deadline == 100.0
+    assert nodl.depth == 1
+
+
+def test_session_key_is_stable_across_types_and_processes():
+    """crc32-based, so the same session id maps to the same shard in every
+    process and every run (builtin hash() is per-process randomized)."""
+    assert session_key("s1") == session_key("s1")
+    assert session_key(b"s1") == session_key("s1")
+    assert session_key(None) == 0
+    assert session_key(7) == 7
+    assert session_key(2**40 + 3) == (2**40 + 3) & 0xFFFFFFFF
+    # a concrete pinned value: any drift would silently reshuffle every
+    # session->shard mapping and invalidate recorded baselines
+    import zlib
+    assert session_key("s1") == zlib.crc32(b"s1")
+    ctx = RequestContext(session="s1")
+    assert ctx.session_shard(4) == session_key("s1") % 4
+
+
+# -------------------------------------------- end-to-end context threading
+def _context_probe_app(backend):
+    """root -> mid -> leaf chain; the leaf reports its ambient context."""
+    def leaf(svc, payload):
+        ctx = yield CurrentContext()
+        yield Sleep(0.0005)  # suspend so ctx must survive a park/resume
+        ctx2 = yield CurrentContext()
+        assert ctx2 is ctx or (ctx is None and ctx2 is None)
+        if ctx is None:
+            return {"ctx": None}
+        return {"ctx": {"depth": ctx.depth, "session": ctx.session,
+                        "deadline": ctx.deadline, "trace": ctx.trace_id}}
+
+    def mid(svc, payload):
+        f = yield AsyncRpc("leaf", "get", payload)
+        return (yield Wait(f))
+
+    def root(svc, payload):
+        ctx = yield CurrentContext()
+        f = yield AsyncRpc("mid", "get", payload)
+        out = yield Wait(f)
+        out["root_trace"] = None if ctx is None else ctx.trace_id
+        return out
+
+    app = App(backend=backend, net_latency=0.0)
+    app.add_service(ServiceSpec("leaf", {"get": leaf}, n_workers=2))
+    app.add_service(ServiceSpec("mid", {"get": mid}, n_workers=2))
+    app.add_service(ServiceSpec("root", {"get": root}, n_workers=2))
+    return app
+
+
+@pytest.mark.parametrize("backend", BACKEND_NAMES)
+def test_context_propagates_depth_session_deadline(backend):
+    """A context minted at the edge arrives at the deepest handler with
+    depth == hop count, the original session/trace, and the un-loosened
+    deadline — identically on all 8 backends (inline fast path included)."""
+    with _context_probe_app(backend) as app:
+        t_dl = time.monotonic() + 30.0
+        ctx = RequestContext(session="sess-42", deadline=t_dl)
+        out = app.send("root", "get", {}, ctx=ctx).wait(timeout=10)
+        got = out["ctx"]
+        assert got["depth"] == 2          # root->mid, mid->leaf
+        assert got["session"] == "sess-42"
+        assert got["deadline"] == t_dl    # no hop loosened or dropped it
+        assert got["trace"] == ctx.trace_id == out["root_trace"]
+
+
+@pytest.mark.parametrize("backend", BACKEND_NAMES)
+def test_plain_send_has_no_ambient_context(backend):
+    """Bare send(dest, method, payload): every handler sees ctx None — the
+    zero-overhead contract (nothing materializes a carrier)."""
+    with _context_probe_app(backend) as app:
+        out = app.send("root", "get", {}).wait(timeout=10)
+        assert out["ctx"] is None
+        assert out["root_trace"] is None
+
+
+@pytest.mark.parametrize("backend", BACKEND_NAMES)
+def test_per_call_deadline_tightens_inherited_context(backend):
+    """An AsyncRpc(deadline=...) on an intermediate hop tightens the
+    carried bound for its subtree without touching the parent's."""
+    def leaf(svc, payload):
+        ctx = yield CurrentContext()
+        return ctx.deadline
+        yield  # pragma: no cover
+
+    def mid(svc, payload):
+        f = yield AsyncRpc("leaf", "get", payload,
+                           deadline=payload["tight"])
+        return (yield Wait(f))
+
+    app = App(backend=backend, net_latency=0.0)
+    app.add_service(ServiceSpec("leaf", {"get": leaf}, n_workers=1))
+    app.add_service(ServiceSpec("mid", {"get": mid}, n_workers=1))
+    with app:
+        loose = time.monotonic() + 60.0
+        tight = time.monotonic() + 30.0
+        ctx = RequestContext(deadline=loose)
+        got = app.send("mid", "get", {"tight": tight},
+                       ctx=ctx).wait(timeout=10)
+        assert got == tight
+
+
+def test_send_deadline_kwarg_shim_folds_into_context():
+    """The legacy deadline kwarg still works and tightens any context."""
+    def leaf(svc, payload):
+        ctx = yield CurrentContext()
+        return {"deadline": ctx.deadline, "session": ctx.session}
+
+    app = App(backend="fiber", net_latency=0.0)
+    app.add_service(ServiceSpec("leaf", {"get": leaf}, n_workers=1))
+    with app:
+        t1, t2 = time.monotonic() + 60.0, time.monotonic() + 30.0
+        got = app.send("leaf", "get", None, deadline=t1).wait(timeout=10)
+        assert got["deadline"] == t1 and got["session"] is None
+        got = app.send("leaf", "get", None,
+                       ctx=RequestContext(session="s9", deadline=t1),
+                       deadline=t2).wait(timeout=10)
+        assert got["deadline"] == t2      # kwarg tightened the context
+        assert got["session"] == "s9"     # without dropping identity
+
+
+# ------------------------------------------------------- session pinning
+def _shard_probe_app(n_shards=4):
+    def who(svc, payload):
+        return threading.current_thread().name
+        yield  # pragma: no cover
+
+    app = App(backend="event-loop-shard", net_latency=0.0)
+    app.add_service(ServiceSpec("who", {"get": who}, n_workers=n_shards))
+    return app
+
+
+def test_same_session_always_lands_on_same_shard():
+    sessions = ["s%d" % i for i in range(32)]
+    with _shard_probe_app() as app:
+        placement = {}
+        for rep in range(3):
+            for s in sessions:
+                thread = app.send("who", "get", None,
+                                  ctx=RequestContext(session=s)
+                                  ).wait(timeout=10)
+                assert placement.setdefault(s, thread) == thread, \
+                    f"session {s} migrated on repeat {rep}"
+        # the mapping is the pure function shard_for(session_key(s), n)
+        for s, thread in placement.items():
+            want = ShardedEventLoopExecutor.shard_for(session_key(s), 4)
+            assert thread.endswith(f"shard{want}-loop"), (s, thread)
+        assert len(set(placement.values())) > 1, "all sessions herded"
+
+
+def test_session_pinning_survives_app_restart():
+    """Deterministic across App.start() cycles: per-session state cached
+    on a shard is still owned by that shard after a restart."""
+    app = _shard_probe_app()
+    sessions = ["u%d" % i for i in range(16)]
+
+    def snapshot():
+        return {s: app.send("who", "get", None,
+                            ctx=RequestContext(session=s)).wait(timeout=10)
+                for s in sessions}
+
+    with app:
+        first = snapshot()
+    with app:  # full stop + restart
+        second = snapshot()
+    assert first == second
+
+
+def test_anonymous_ticket_placement_resets_on_restart():
+    """Sessionless requests fall back to the ticket hash; the ticket resets
+    on start(), so the Nth delivery after a restart lands where the Nth
+    before it did (the cross-trial determinism bugfix)."""
+    app = _shard_probe_app()
+
+    def seq(n=24):
+        return [app.send("who", "get", None).wait(timeout=10)
+                for _ in range(n)]
+
+    with app:
+        first = seq()
+    with app:
+        second = seq()
+    assert first == second
+    assert len(set(first)) > 1
+
+
+def test_shard_by_session_opt_out_uses_ticket_path():
+    """app.shard_by_session = False forces ticket placement even for
+    sessioned traffic (the benchmark A/B lever) — one hot session then
+    spreads over every shard instead of pinning."""
+    with _shard_probe_app() as app:
+        app.shard_by_session = False
+        threads = {app.send("who", "get", None,
+                            ctx=RequestContext(session="hot")
+                            ).wait(timeout=10)
+                   for _ in range(32)}
+        assert len(threads) > 1
+        app.shard_by_session = True
+        threads = {app.send("who", "get", None,
+                            ctx=RequestContext(session="hot")
+                            ).wait(timeout=10)
+                   for _ in range(8)}
+        assert len(threads) == 1
+
+
+# --------------------------------------------------- per-edge resilience
+def test_breakers_are_keyed_per_method():
+    """A failing method trips only its own (dest, method) edge; a healthy
+    method on the SAME destination keeps flowing."""
+    def bad(svc, payload):
+        raise RuntimeError("always fails")
+        yield  # pragma: no cover
+
+    def good(svc, payload):
+        return "ok"
+        yield  # pragma: no cover
+
+    pol = ResiliencePolicy(deadline=2.0, breakers=True,
+                           breaker_min_volume=4, breaker_window=8,
+                           breaker_reset=30.0)
+    app = App(backend="fiber", net_latency=0.0, resilience=pol)
+    app.add_service(ServiceSpec("dual", {"bad": bad, "good": good},
+                                n_workers=1))
+    with app:
+        tripped = False
+        for _ in range(30):
+            try:
+                app.send("dual", "bad").wait(timeout=5.0)
+            except CircuitOpenError:
+                tripped = True
+                break
+            except RuntimeError:
+                continue
+        assert tripped
+        assert app._breakers[("dual", "bad")].state == "open"
+        # the sibling edge is unaffected: still closed, still serving
+        assert app.send("dual", "good").wait(timeout=5.0) == "ok"
+        good_br = app._breakers.get(("dual", "good"))
+        assert good_br is None or good_br.state == "closed"
+        report = app.resilience_by_edge()
+        assert report[("dual", "bad")]["opens"] >= 1
+
+
+# ------------------------------------------------------- cache accounting
+def test_cache_accounting_parity_across_backends():
+    """The same cached-workload request sequence produces identical
+    hit/miss totals on every backend (the counters are app-level, fed by
+    the shared cache service, so the executor must not change them)."""
+    d = get_app_def("socialnetwork")
+    factory = d.make_request_factory("cached")
+    rng = np.random.default_rng(21)
+    requests = [factory(rng) for _ in range(60)]
+    totals = {}
+    for backend in BACKEND_NAMES:
+        with d.build(backend) as app:
+            for req in requests:
+                dest, method, payload = req[:3]
+                app.send(dest, method, payload,
+                         ctx=RequestContext(session=req[3])
+                         ).wait(timeout=15)
+            totals[backend] = (app.cache_stats.hits, app.cache_stats.misses)
+            bs = app.backend_stats()
+            assert (bs.cache_hits, bs.cache_misses) == totals[backend]
+    assert len(set(totals.values())) == 1, totals
+    hits, misses = totals["thread"]
+    reads = sum(1 for r in requests if not r[2].get("write"))
+    assert hits + misses == reads
+    assert hits > 0 and misses > 0
+
+
+def test_cached_workload_write_path_invalidates():
+    """A write to a hot key forces the next read of that key to miss."""
+    d = get_app_def("socialnetwork")
+    with d.build("fiber") as app:
+        def read(key):
+            return app.send("frontend", "cached", {"key": key},
+                            ctx=RequestContext(session="s0")
+                            ).wait(timeout=10)
+        assert read(5)["cached"] is False      # cold miss populates
+        assert read(5)["cached"] is True       # now hot
+        app.send("frontend", "cached", {"key": 5, "write": True},
+                 ctx=RequestContext(session="s0")).wait(timeout=10)
+        assert read(5)["cached"] is False      # invalidated by the write
+
+
+# ------------------------------------------------------------ Zipf workload
+def test_zipf_factory_distribution_sanity():
+    fac = make_zipf_factory(frontend="fe", n_keys=256, alpha=1.1,
+                            n_sessions=16, write_frac=0.1)
+    rng = np.random.default_rng(3)
+    keys = collections.Counter()
+    sessions = set()
+    writes = 0
+    n = 4000
+    for _ in range(n):
+        dest, method, payload, session = fac(rng)
+        assert dest == "fe" and method == "cached"
+        assert 0 <= payload["key"] < 256
+        assert session == "s%d" % (payload["key"] % 16)
+        sessions.add(session)
+        keys[payload["key"]] += 1
+        if payload.get("write"):
+            writes += 1
+    # skew: the most popular key far exceeds the uniform share
+    assert keys.most_common(1)[0][1] > 5 * (n / 256)
+    # ...but the tail is populated too
+    assert len(keys) > 64
+    assert len(sessions) == 16
+    assert 0.05 * n < writes < 0.2 * n
+
+
+def test_zipf_factory_is_seed_deterministic():
+    fac = make_zipf_factory(frontend="fe")
+    a = [fac(np.random.default_rng(7)) for _ in range(20)]
+    b = [fac(np.random.default_rng(7)) for _ in range(20)]
+    assert a == b

@@ -296,7 +296,7 @@ def test_breaker_graph_heals_after_outage():
                 app.send("root", "get").wait(timeout=5.0)
             except RuntimeError:  # includes CircuitOpenError
                 pass
-        assert app._breakers["leaf"].state != "closed"
+        assert app._breakers[("leaf", "get")].state != "closed"
         healthy.set()
         deadline = time.monotonic() + 5.0
         recovered = False
@@ -308,7 +308,7 @@ def test_breaker_graph_heals_after_outage():
             except RuntimeError:
                 time.sleep(0.01)
         assert recovered
-        assert app._breakers["leaf"].state == "closed"
+        assert app._breakers[("leaf", "get")].state == "closed"
 
 
 @pytest.mark.parametrize("backend", BACKEND_NAMES)
@@ -373,12 +373,13 @@ def test_downstream_open_circuit_does_not_trip_upstream():
             except CircuitOpenError:
                 saw_open += 1
         breakers = app._breakers
-        assert breakers["bad"].state == "open"
+        assert breakers[("bad", "get")].state == "open"
         assert saw_open > 0  # the open downstream circuit did reach callers
         # ...but those CircuitOpenError replies must not count against the
         # mid edge: only 'bad' trips
-        assert breakers["mid"].state == "closed"
-        assert app.backend_stats().breaker_opens == breakers["bad"].opens
+        assert breakers[("mid", "get")].state == "closed"
+        assert (app.backend_stats().breaker_opens
+                == breakers[("bad", "get")].opens)
 
 
 # ---------------------------------------------------------------- load level

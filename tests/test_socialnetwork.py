@@ -29,9 +29,12 @@ def test_workload_factories(workload):
     f = make_request_factory(workload)
     rng = np.random.default_rng(0)
     for _ in range(5):
-        dest, method, payload = f(rng)
+        req = f(rng)
+        dest, method = req[0], req[1]
         assert dest == "frontend"
-        assert method in ("compose", "read_home", "read_user")
+        assert method in ("compose", "read_home", "read_user", "cached")
+        if workload == "cached":  # session-affine 4-tuple
+            assert req[3].startswith("s")
 
 
 @pytest.mark.parametrize("backend", BACKENDS)

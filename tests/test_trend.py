@@ -226,20 +226,29 @@ def test_committed_baseline_is_current_schema():
     assert baseline["records"], "committed baseline has no records"
     keys = {r["key"] for r in baseline["records"]}
     # full matrix: every registered app x backend cell contributes an rps
-    # AND a p99 record, the rpc-path micro one record per backend (plus a
-    # +resilient row per inline backend), the overload probe its two paired
-    # goodput cells, and the knee probe its knee-multiple cell
+    # AND a p99 record plus a cached-workload hit-rate gauge, the rpc-path
+    # micro one record per backend (plus a +resilient row per inline
+    # backend), the overload probe its two paired goodput cells, the knee
+    # probe its knee-multiple cell, and the pinning probe its two paired
+    # placement-policy peaks
     from benchmarks.bench_rpc_path import INLINE_BACKENDS
     from benchmarks.bench_smoke import (OVERLOAD_PROBE_APP,
-                                        OVERLOAD_PROBE_BACKEND)
+                                        OVERLOAD_PROBE_BACKEND,
+                                        PINNING_PROBE_APP,
+                                        PINNING_PROBE_BACKEND)
     from repro.apps import APP_NAMES, BENCH_BACKENDS
     expected = {f"{a}/{b}" for a in APP_NAMES for b in BENCH_BACKENDS}
     expected |= {f"{a}/{b}/p99" for a in APP_NAMES for b in BENCH_BACKENDS}
+    expected |= {f"{a}/{b}/cached/hit_rate"
+                 for a in APP_NAMES for b in BENCH_BACKENDS}
     expected |= {f"rpc_path/{b}" for b in BENCH_BACKENDS}
     expected |= {f"rpc_path/{b}+resilient" for b in INLINE_BACKENDS}
     expected |= {
         f"overload/{OVERLOAD_PROBE_APP}/{OVERLOAD_PROBE_BACKEND}/{label}"
         for label in ("breakers-off", "breakers-on", "knee")}
+    expected |= {
+        f"pinning/{PINNING_PROBE_APP}/{PINNING_PROBE_BACKEND}/{label}"
+        for label in ("by-ticket", "by-session")}
     assert keys == expected
     # self-diff passes trivially
     report = trend.compare(baseline, baseline)
