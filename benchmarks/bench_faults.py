@@ -1,0 +1,266 @@
+"""Sick-dependency scenarios: the resilience layer against its design target.
+
+PR 6 measured the resilience layer under *uniform* overload and got an
+honest but bimodal breaker verdict; its diagnosis — "breakers pay off
+against a sick dependency, not uniform pressure" — is exactly what this
+harness makes measurable.  Every app names a **sick** write-path storage
+edge and a **healthy** read-path method of the same service
+(``AppDef.fault_targets``), and each app × backend cell runs three
+movements on the ``mixed`` workload at a comfortably-sustainable rate
+(``RATE_FRACTION`` of the cell's measured healthy peak):
+
+* **breaker A/B** — a seeded :class:`~repro.core.faults.FaultPlan` brownout
+  (``SICK_FACTOR``× service time, far past the request deadline) degrades
+  the sick edge for the whole trial; goodput with breakers vs without, same
+  arrival seed.  Without breakers every write burns ``SICK_FACTOR``× CPU
+  and a worker slot before dying at its deadline — dead work that starves
+  the read path; with breakers the sick edge trips after
+  ``breaker_min_volume`` failures and writes fail fast instead.  The
+  scenario is deterministic by construction (no probabilistic rules, seeded
+  arrivals), so the win direction is reproducible — the result PR 6 could
+  only glimpse.
+* **blast radius** — the same sick trial, breakers on, against a no-fault
+  reference at the same rate: how much healthy-edge goodput is retained,
+  and ``App.resilience_by_edge()`` showing the sick edge tripping while the
+  healthy read method of the *same service* stays closed.
+* **recovery** — the fault window closes at a known instant (the trial
+  clock makes "lifts at t=duration" exact); probes at half rate measure the
+  time until goodput is healthy again, against PR 6's 0.25–0.6 s
+  uniform-overload baseline (dominated by ``breaker_reset``, since the
+  dependency is genuinely healthy the moment the fault lifts).
+
+Rows follow the harness convention (``name,value,derived``):
+``breaker_win`` rows put the on/off goodput ratio in the value column,
+``blast_radius`` rows the healthy-goodput-retained fraction, ``recovery``
+rows the time-to-recover in us (``recovered=no`` reports the 0 sentinel,
+as in bench_overload).  The full matrix is also written as a JSON artifact
+(default ``launch_results/faults_sweep.json``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.apps import (APP_NAMES, BENCH_BACKENDS, build_bench_app,
+                        get_app_def)
+from repro.core import (FaultPlan, FaultRule, ResiliencePolicy,
+                        find_peak_throughput, run_trial, warmup)
+
+WORKLOAD = "mixed"
+SICK_FACTOR = 600.0     # brownout multiplier on the sick edge: ~800us of
+                        # storage sleep blows past every deadline and ~20us
+                        # of CPU becomes ~12ms of dead burn per write — on
+                        # this repo's 1-core CI box that burn is the poison
+                        # breakers-off keeps paying and breakers-on stops
+                        # after breaker_min_volume failures + rare probes
+RATE_FRACTION = 0.6     # offered rate as a fraction of the healthy peak
+SICK_SEED = 42          # FaultPlan seed (bit-reproducible schedule)
+TRIAL_SEED = 11         # arrival seed, shared by all three movements
+RECOVERY_THRESHOLD = 0.9
+RECOVERY_RATE_FRACTION = 0.5
+
+ARTIFACT_DEFAULT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "launch_results", "faults_sweep.json")
+
+
+def _policy(deadline: float, breakers: bool) -> ResiliencePolicy:
+    """Deadline + breakers on/off, no retries: the A/B isolates the breaker
+    contribution (retry storms are bench_overload's axis)."""
+    return ResiliencePolicy(deadline=deadline, retry=None, breakers=breakers)
+
+
+def _sick_plan(app_name: str, *, stop: float = float("inf")) -> FaultPlan:
+    """The scenario's seeded plan: one brownout rule on the app's
+    registered sick edge, active from trial start to ``stop``."""
+    dest, method = get_app_def(app_name).fault_targets["sick"]
+    return FaultPlan([FaultRule(dest=dest, method=method, kind="brownout",
+                                factor=SICK_FACTOR, stop=stop)],
+                     seed=SICK_SEED)
+
+
+def _measure_peak(app_name: str, backend: str, policy: ResiliencePolicy,
+                  factory, *, peak_duration: float,
+                  verbose: bool = False) -> float:
+    with build_bench_app(app_name, backend, resilience=policy) as app:
+        warmup(app, factory)
+        pk = find_peak_throughput(app, factory, start_rate=200, growth=1.7,
+                                  duration=peak_duration, max_trials=10,
+                                  verbose=verbose)
+    return pk.peak_rps
+
+
+def measure_sick_cell(app_name: str, backend: str, *,
+                      peak_duration: float = 0.4, duration: float = 2.0,
+                      recovery_timeout: float = 3.0,
+                      verbose: bool = False) -> Dict[str, Any]:
+    """One app × backend cell: healthy reference, breaker A/B under the
+    sick-edge brownout, per-edge blast radius, and time-to-recover after
+    the fault lifts.  All trials share the arrival seed, so the A/B and
+    the reference see the identical offered sequence."""
+    d = get_app_def(app_name)
+    factory = d.make_request_factory(WORKLOAD)
+    deadline = d.deadlines.get(WORKLOAD, 0.08)
+    sick_edge = tuple(d.fault_targets["sick"])
+    healthy_edge = tuple(d.fault_targets["healthy"])
+    peak = _measure_peak(app_name, backend, _policy(deadline, True), factory,
+                         peak_duration=peak_duration, verbose=verbose)
+    rate = max(RATE_FRACTION * peak, 50.0)
+
+    def _trial(app, dur: float, *, arm: Optional[bool], seed: int = TRIAL_SEED,
+               r: float = rate, drain: float = 1.0):
+        return run_trial(app, factory, r, dur, seed=seed, drain=drain,
+                         deadline=deadline, enforce_deadline=True,
+                         settle=1.0, arm_faults=arm)
+
+    # healthy reference: breakers on, no faults — the blast-radius yardstick
+    with build_bench_app(app_name, backend,
+                         resilience=_policy(deadline, True)) as app:
+        warmup(app, factory)
+        healthy_tr = _trial(app, duration, arm=None)
+    if verbose:
+        print("    healthy     ", healthy_tr.row(), flush=True)
+
+    # breaker A/B under the sick-edge brownout (fresh app per side; the
+    # plan is armed on each measured trial's clock, after a healthy warmup)
+    sides: Dict[str, Any] = {}
+    for label, breakers in (("on", True), ("off", False)):
+        app = build_bench_app(app_name, backend,
+                              resilience=_policy(deadline, breakers))
+        with app:
+            warmup(app, factory)
+            app.set_faults(_sick_plan(app_name))
+            tr = _trial(app, duration, arm=True)
+            by_edge = app.resilience_by_edge()
+        bs = tr.backend_stats
+        sides[label] = {
+            "goodput_rps": round(tr.goodput_rps, 1),
+            "good": tr.good,
+            "errors": tr.errors,
+            "timeouts": int(bs.get("timeouts", 0)),
+            "breaker_opens": int(bs.get("breaker_opens", 0)),
+            "faults_injected": int(bs.get("faults_injected", 0)),
+            "faults_brownout": int(bs.get("faults_brownout", 0)),
+            "sick_edge_opens": int(by_edge.get(sick_edge,
+                                               {}).get("opens", 0)),
+            "healthy_edge_opens": int(by_edge.get(healthy_edge,
+                                                  {}).get("opens", 0)),
+        }
+        if verbose:
+            print(f"    breakers-{label:3s}", tr.row(), flush=True)
+
+    on_g = sides["on"]["goodput_rps"]
+    off_g = sides["off"]["goodput_rps"]
+    healthy_g = healthy_tr.goodput_rps
+
+    # recovery: same sick scenario, breakers on, but the rule's window
+    # closes exactly at the end of the offered window — then probe at half
+    # rate until goodput is healthy again (PR 6 protocol, short drain so
+    # the backlog persists into the probes)
+    app = build_bench_app(app_name, backend,
+                          resilience=_policy(deadline, True))
+    probes = 0
+    recovered = False
+    recovery_time = float("inf")
+    with app:
+        warmup(app, factory)
+        app.set_faults(_sick_plan(app_name, stop=duration))
+        _trial(app, duration, arm=True, drain=0.25)
+        t_lift = time.monotonic()
+        rrate = RECOVERY_RATE_FRACTION * rate
+        i = 0
+        while time.monotonic() - t_lift < recovery_timeout:
+            p = _trial(app, 0.25, arm=False, seed=TRIAL_SEED + 100 + i,
+                       r=rrate, drain=0.25)
+            probes += 1
+            if p.goodput_rps >= RECOVERY_THRESHOLD * rrate:
+                recovered = True
+                recovery_time = time.monotonic() - t_lift
+                break
+            i += 1
+
+    return {
+        "app": app_name,
+        "backend": backend,
+        "workload": WORKLOAD,
+        "deadline_s": deadline,
+        "peak_rps": round(peak, 1),
+        "rate_rps": round(rate, 1),
+        "sick_edge": list(sick_edge),
+        "healthy_edge": list(healthy_edge),
+        "sick_factor": SICK_FACTOR,
+        "seed": SICK_SEED,
+        "healthy_goodput_rps": round(healthy_g, 1),
+        "breakers": sides,
+        # capped: when the off side's goodput hits zero the raw ratio is a
+        # division by epsilon, and "9999x" already reads as "off side dead"
+        "breaker_win": round(min(on_g / max(off_g, 1e-9), 9999.0), 3),
+        "healthy_retained": round(on_g / max(healthy_g, 1e-9), 3),
+        "recovery": {
+            "recovered": recovered,
+            "recovery_time_s": (round(recovery_time, 3)
+                                if recovered else None),
+            "probes": probes,
+        },
+    }
+
+
+def run(quick: bool = False,
+        apps: Optional[Sequence[str]] = None,
+        json_path: Optional[str] = ARTIFACT_DEFAULT) -> List[str]:
+    # the measured trial must dwarf the breakers-on side's fixed startup
+    # collateral (the pre-trip brownout burns) or the A/B margin shrinks
+    peak_duration = 0.3 if quick else 0.4
+    duration = 1.0 if quick else 2.0
+    recovery_timeout = 2.0 if quick else 3.0
+    apps = list(apps) if apps else list(APP_NAMES)
+    rows: List[str] = []
+    artifact: Dict[str, Any] = {
+        "schema_version": 1,
+        "workload": WORKLOAD,
+        "sick_factor": SICK_FACTOR,
+        "rate_fraction": RATE_FRACTION,
+        "seed": SICK_SEED,
+        "cells": {},
+    }
+    for app_name in apps:
+        for backend in BENCH_BACKENDS:
+            cell = measure_sick_cell(
+                app_name, backend, peak_duration=peak_duration,
+                duration=duration, recovery_timeout=recovery_timeout)
+            artifact["cells"][f"{app_name}/{backend}"] = cell
+            base = f"faults/{app_name}/{WORKLOAD}/{backend}"
+            on, off = cell["breakers"]["on"], cell["breakers"]["off"]
+            rows.append(
+                f"{base}/breaker_win,{cell['breaker_win']:.3f},"
+                f"on_goodput={on['goodput_rps']:.0f};"
+                f"off_goodput={off['goodput_rps']:.0f};"
+                f"rate={cell['rate_rps']:.0f};"
+                f"sick_opens={on['sick_edge_opens']};"
+                f"flt={on['faults_injected']}")
+            rows.append(
+                f"{base}/blast_radius,{cell['healthy_retained']:.3f},"
+                f"healthy_goodput={cell['healthy_goodput_rps']:.0f};"
+                f"on_goodput={on['goodput_rps']:.0f};"
+                f"sick_opens={on['sick_edge_opens']};"
+                f"healthy_opens={on['healthy_edge_opens']}")
+            rec = cell["recovery"]
+            rec_s = rec["recovery_time_s"]
+            rec_us = rec_s * 1e6 if rec["recovered"] else 0.0
+            rows.append(
+                f"{base}/recovery,{rec_us:.0f},"
+                f"s={rec_s if rec_s is not None else float('inf'):.3f};"
+                f"recovered={'yes' if rec['recovered'] else 'no'};"
+                f"probes={rec['probes']}")
+    if json_path:
+        os.makedirs(os.path.dirname(json_path), exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

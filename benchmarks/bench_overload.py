@@ -19,7 +19,11 @@ what happens *past* it, in three movements:
   ingredient.  Scored on **amplification** (delivered attempts per offered
   request, ``1 + retries/offered``) per queueing discipline — the
   mailbox/carrier design each backend uses is exactly what shapes how a
-  storm feeds on itself.
+  storm feeds on itself.  The same recipe also runs on two synthetic
+  topologies (``STORM_SHAPES``: a ``deep-chain`` of serial hops and a
+  ``wide-fan`` of parallel leaves) so the artifact separates what the
+  *graph shape* contributes to amplification from what the backend does —
+  socialnetwork/mixed sits between the extremes.
 
 Each sweep/recovery cell runs the full resilience layer
 (``repro.core.resilience``): per-hop deadline propagation, budgeted
@@ -47,14 +51,28 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.apps import (APP_NAMES, BENCH_BACKENDS, build_bench_app,
                         get_app_def)
-from repro.core import (ResiliencePolicy, RetryPolicy, find_peak_throughput,
-                        run_overload, run_trial, warmup)
+from repro.core import (App, AsyncRpc, Compute, ResiliencePolicy, RetryPolicy,
+                        ServiceSpec, Sleep, Wait, WaitAll,
+                        find_peak_throughput, run_overload, run_trial, warmup)
 
 MULTIPLE = 3.0        # the recovery phase's overload rate (PR 6 protocol)
 SWEEP_MULTIPLES = (2.0, 3.0, 4.0, 5.0)
 KNEE_FRACTION = 0.7   # goodput >= this fraction of the sweep's best => held
 WORKLOAD = "mixed"
 STORM_APP = "socialnetwork"   # the retry storm runs on one app, per backend
+
+# Synthetic graph shapes for the storm's topology axis: retry traffic
+# compounds differently down a serial chain (every hop's retry re-offers
+# the whole tail of the chain) than across a parallel fan (leaf retries
+# are independent; one slow leaf only stalls its own join slot), and the
+# real apps sit between the two extremes.  socialnetwork/mixed stays in
+# the sweep as the mixed-topology reference point.
+STORM_SHAPES = ("deep-chain", "wide-fan")
+SHAPE_DEPTH = 4       # hops under the frontend in the deep chain
+SHAPE_WIDTH = 8       # leaves under the frontend in the wide fan
+SHAPE_DEADLINE = 0.08
+_SHAPE_CPU = 20e-6
+_SHAPE_IO = 300e-6
 
 ARTIFACT_DEFAULT = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -81,6 +99,72 @@ def _storm_policy(deadline: float) -> ResiliencePolicy:
                           max_backoff=0.004,
                           budget_initial=1e9, budget_ratio=1.0,
                           budget_cap=1e9))
+
+
+def _shape_leaf(svc: Any, payload: Any):
+    yield Compute(_SHAPE_CPU)
+    yield Sleep(_SHAPE_IO)
+    return {"ok": True}
+
+
+def _chain_stage(nxt: str):
+    def stage(svc: Any, payload: Any):
+        yield Compute(_SHAPE_CPU)
+        f = yield AsyncRpc(nxt, "call", payload)
+        return (yield Wait(f))
+    return stage
+
+
+def _fan_root(leaves: Sequence[str]):
+    def root(svc: Any, payload: Any):
+        yield Compute(_SHAPE_CPU)
+        futs = []
+        for leaf in leaves:
+            futs.append((yield AsyncRpc(leaf, "call", payload)))
+        yield WaitAll(futs)
+        return {"ok": True}
+    return root
+
+
+def build_shape_app(shape: str, backend: str, *,
+                    resilience: Any = None) -> App:
+    """Wire one synthetic storm topology with build_bench_app's sizing."""
+    if backend.startswith("thread"):
+        workers, fe_workers = 8, 16
+    elif backend == "event-loop":
+        workers, fe_workers = 1, 1
+    elif backend == "event-loop-shard":
+        workers, fe_workers = 1, 4
+    else:
+        workers, fe_workers = 2, 2
+    app = App(backend=backend, resilience=resilience)
+    if shape == "deep-chain":
+        hops = [f"hop{i}" for i in range(1, SHAPE_DEPTH + 1)]
+        app.add_service(ServiceSpec(
+            name="frontend", handlers={"call": _chain_stage(hops[0])},
+            n_workers=fe_workers))
+        for i, name in enumerate(hops):
+            h = (_shape_leaf if i == len(hops) - 1
+                 else _chain_stage(hops[i + 1]))
+            app.add_service(ServiceSpec(
+                name=name, handlers={"call": h}, n_workers=workers))
+    elif shape == "wide-fan":
+        leaves = [f"leaf{i}" for i in range(SHAPE_WIDTH)]
+        app.add_service(ServiceSpec(
+            name="frontend", handlers={"call": _fan_root(leaves)},
+            n_workers=fe_workers))
+        for name in leaves:
+            app.add_service(ServiceSpec(
+                name=name, handlers={"call": _shape_leaf},
+                n_workers=workers))
+    else:
+        raise ValueError(
+            f"unknown shape {shape!r} (want one of {STORM_SHAPES})")
+    return app
+
+
+def _shape_factory(rng):
+    return ("frontend", "call", {})
 
 
 def _measure_peak(app_name: str, backend: str, policy: ResiliencePolicy,
@@ -220,10 +304,40 @@ def measure_retry_storm(app_name: str, backend: str, *,
     d = get_app_def(app_name)
     factory = d.make_request_factory(workload)
     deadline = d.deadlines.get(workload, 0.08)
-    peak = _measure_peak(app_name, backend, _storm_policy(deadline), factory,
-                         peak_duration=peak_duration, verbose=verbose)
-    with build_bench_app(app_name, backend,
-                         resilience=_storm_policy(deadline)) as app:
+    build = (lambda: build_bench_app(app_name, backend,
+                                     resilience=_storm_policy(deadline)))
+    cell = _storm_cell(build, factory, deadline, multiple=multiple,
+                       peak_duration=peak_duration, duration=duration,
+                       verbose=verbose)
+    return {"app": app_name, "backend": backend, "workload": workload, **cell}
+
+
+def measure_shape_storm(shape: str, backend: str, *,
+                        multiple: float = MULTIPLE,
+                        peak_duration: float = 0.4, duration: float = 1.0,
+                        verbose: bool = False) -> Dict[str, Any]:
+    """Retry amplification on one synthetic topology (see STORM_SHAPES)."""
+    deadline = SHAPE_DEADLINE
+    build = (lambda: build_shape_app(shape, backend,
+                                     resilience=_storm_policy(deadline)))
+    cell = _storm_cell(build, _shape_factory, deadline, multiple=multiple,
+                       peak_duration=peak_duration, duration=duration,
+                       verbose=verbose)
+    return {"shape": shape, "backend": backend,
+            "depth": SHAPE_DEPTH if shape == "deep-chain" else 1,
+            "width": SHAPE_WIDTH if shape == "wide-fan" else 1, **cell}
+
+
+def _storm_cell(build, factory, deadline: float, *, multiple: float,
+                peak_duration: float, duration: float,
+                verbose: bool = False) -> Dict[str, Any]:
+    with build() as app:
+        warmup(app, factory)
+        pk = find_peak_throughput(app, factory, start_rate=200, growth=1.7,
+                                  duration=peak_duration, max_trials=10,
+                                  verbose=verbose)
+    peak = pk.peak_rps
+    with build() as app:
         warmup(app, factory)
         tr = run_trial(app, factory, multiple * peak, duration, seed=9,
                        drain=0.25, deadline=deadline,
@@ -232,9 +346,6 @@ def measure_retry_storm(app_name: str, backend: str, *,
     retries = int(bs.get("retries", 0))
     offered = max(tr.offered, 1)
     return {
-        "app": app_name,
-        "backend": backend,
-        "workload": workload,
         "peak_rps": round(peak, 1),
         "multiple": multiple,
         "offered": tr.offered,
@@ -260,6 +371,7 @@ def run(quick: bool = False,
         "knee_fraction": KNEE_FRACTION,
         "cells": {},
         "retry_storm": {},
+        "retry_storm_shapes": {},
     }
     for app_name in apps:
         for backend in BENCH_BACKENDS:
@@ -324,6 +436,23 @@ def run(quick: bool = False,
                 f"to={storm['timeouts']};"
                 f"goodput_rps={storm['goodput_rps']:.0f}")
             artifact["retry_storm"][backend] = storm
+        # topology axis: the same storm recipe on synthetic extremes
+        # (serial chain vs parallel fan; socialnetwork/mixed above is the
+        # in-between reference).  Rows live under overload/shape/ so the
+        # app-keyed rows above keep their PR 6 names.
+        for shape in STORM_SHAPES:
+            for backend in BENCH_BACKENDS:
+                storm = measure_shape_storm(
+                    shape, backend, peak_duration=peak_duration,
+                    duration=duration)
+                rows.append(
+                    f"overload/shape/{shape}/{backend}/retry_storm,"
+                    f"{storm['amplification']:.3f},"
+                    f"amplification={storm['amplification']:.3f};"
+                    f"retries={storm['retries']};offered={storm['offered']};"
+                    f"to={storm['timeouts']};"
+                    f"goodput_rps={storm['goodput_rps']:.0f}")
+                artifact["retry_storm_shapes"][f"{shape}/{backend}"] = storm
     if json_path:
         os.makedirs(os.path.dirname(json_path), exist_ok=True)
         with open(json_path, "w") as f:

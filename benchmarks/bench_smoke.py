@@ -66,7 +66,19 @@ the same workload: by-session (deterministic, state-affine routing on
 ``RequestContext.session``) vs by-ticket (spread-everything), interleaved
 and peak-vs-peak like every other probe, recorded warn-only.
 
-The process exits non-zero iff a cell errors or parity is violated — the
+PR 9 adds the **sick-dependency probe** (``_faults_probe``): a seeded
+``FaultPlan`` brownout on socialnetwork's ``post_storage.store`` edge at a
+fixed sub-peak rate, breakers-on vs breakers-off, scored on goodput.  The
+scenario is engineered to be deterministic (100%-failing sick edge, seeded
+plan, shared arrival seed), so unlike the uniform-overload probe its
+``breaker_win`` record is **hard-gated** and a win under
+``FAULTS_WIN_TARGET`` fails the run.  The pinning probe also gains a
+**cold-start-per-round** variant (fresh apps every round: first-touch
+placement included), recorded as its own warn-only trend cells next to the
+warm mode's.
+
+The process exits non-zero iff a cell errors, parity is violated, or the
+sick-dependency probe's breaker win misses its target — the
 steal/design/overload/pinning probes and the raw numbers are artifact
 data, not gates.
 
@@ -191,8 +203,8 @@ def _paired_probe(app_name: str, base: str, cand: str, *,
                   max_outstanding: int = PROBE_MAX_OUTSTANDING,
                   max_rounds: int = PROBE_MAX_ROUNDS,
                   build=None, metric=None,
-                  trial_kwargs: Optional[Dict[str, Any]] = None
-                  ) -> Dict[str, Any]:
+                  trial_kwargs: Optional[Dict[str, Any]] = None,
+                  cold_start: bool = False) -> Dict[str, Any]:
     """Interleaved paired peak probe of two configurations on one app.
 
     The repo's A/B discipline for backend claims (see ROADMAP): trials are
@@ -207,6 +219,14 @@ def _paired_probe(app_name: str, base: str, cand: str, *,
     for the overload probe).  ``metric`` picks the scored TrialResult field
     (default achieved rps); ``trial_kwargs`` is forwarded to ``run_trial``
     (e.g. ``deadline``/``enforce_deadline`` for goodput probes).
+
+    ``cold_start=True`` rebuilds (and re-warms) both apps every round
+    instead of keeping them alive across the whole probe: each round then
+    measures a freshly-started system — no cache contents, shard state or
+    executor high-waters accumulated from earlier rounds.  The per-round
+    warmup stays (it touches the Compute calibration and every code path,
+    same as a fresh CI cell), so "cold" means *no cross-round carryover*,
+    not "never executed".
     """
     d = get_app_def(app_name)
     factory = d.make_request_factory(workload)
@@ -218,28 +238,42 @@ def _paired_probe(app_name: str, base: str, cand: str, *,
         def build(b):  # canonical benchmark sizing for each backend family
             from repro.apps import build_bench_app
             return build_bench_app(app_name, b)
-    apps = {}
+    apps: Dict[str, Any] = {}
     best = {base: 0.0, cand: 0.0}
     rounds_used = 0
-    try:
+    stats: Dict[str, Any] = {}
+
+    def _open() -> None:
         for b in best:
             apps[b] = build(b)
             apps[b].start()
             warmup(apps[b], factory)
+
+    def _close() -> None:
+        for app in apps.values():
+            app.stop()
+        apps.clear()
+
+    try:
+        if not cold_start:
+            _open()
         for i in range(max_rounds):
             rounds_used = i + 1
+            if cold_start:
+                _open()
             order = ((base, cand) if i % 2 == 0 else (cand, base))
             for b in order:
                 tr = run_trial(apps[b], factory, rate, PROBE_DURATION,
                                seed=20 + i, drain=1.0,
                                max_outstanding=max_outstanding, **kwargs)
                 best[b] = max(best[b], metric(tr))
+            stats = {b: apps[b].backend_stats() for b in best}
+            if cold_start:
+                _close()
             if best[base] > 0 and best[cand] >= target * best[base]:
                 break
-        stats = {b: apps[b].backend_stats() for b in best}
     finally:
-        for app in apps.values():
-            app.stop()
+        _close()
     ratio = best[cand] / best[base] if best[base] > 0 else float("inf")
     return {
         "base": base,
@@ -387,7 +421,13 @@ PINNING_PROBE_APP = "socialnetwork"
 PINNING_PROBE_BACKEND = "event-loop-shard"
 
 
-def _pinning_probe(max_rounds: int = PROBE_MAX_ROUNDS) -> Dict[str, Any]:
+def _pinning_probe(max_rounds: int = PROBE_MAX_ROUNDS,
+                   cold_start: bool = False) -> Dict[str, Any]:
+    """``cold_start=True`` is the PR 9 variant: fresh apps every round, so
+    the placement A/B includes first-touch behavior — by-session routing
+    concentrates the cold misses of the hot keys on few shards, while the
+    warm (keep-alive) mode mostly measures steady-state hit traffic.  Both
+    modes are recorded as distinct warn-only trend cells."""
     from repro.apps import build_bench_app
     from repro.core import find_peak_throughput
 
@@ -412,14 +452,113 @@ def _pinning_probe(max_rounds: int = PROBE_MAX_ROUNDS) -> Dict[str, Any]:
     probe = _paired_probe(PINNING_PROBE_APP, "by-ticket", "by-session",
                           workload="cached", rate=pk.peak_rps,
                           max_outstanding=1024, max_rounds=max_rounds,
-                          build=build)
+                          build=build, cold_start=cold_start)
     stats = probe.pop("_stats")
     probe.update(backend=PINNING_PROBE_BACKEND,
+                 mode="cold-start" if cold_start else "warm",
                  probe_rate=round(pk.peak_rps, 1),
                  shards=stats["by-session"].shards,
                  cache_hits=int(stats["by-session"].cache_hits),
                  cache_misses=int(stats["by-session"].cache_misses))
     return probe
+
+
+# Sick-dependency probe (PR 9): the deterministic breakers-pay-off check.
+# A seeded FaultPlan brownout (bench_faults' scenario, single-sourced from
+# that module) degrades socialnetwork's post_storage.store edge at a fixed
+# sub-peak rate; breakers-on vs breakers-off goodput is the win.  Unlike
+# the uniform-overload probe above (warn-only: bimodal at smoke scale),
+# this scenario is *engineered* to be deterministic — the sick edge fails
+# 100% of the time, the fault plan is seeded, both sides see the same
+# arrivals — so its records enter the trend gate HARD (no warn-only), and
+# a win below FAULTS_WIN_TARGET fails the smoke run outright.  The
+# recorded win is capped at FAULTS_WIN_CAP: past ~3x the off side's
+# goodput is a near-zero denominator and the raw ratio swings orders of
+# magnitude run-over-run, which a hard trend gate cannot tolerate; every
+# capped value reads "decisive win", and any real regression pulls the
+# value under the cap long before it threatens the target.
+FAULTS_PROBE_APP = "socialnetwork"
+FAULTS_PROBE_BACKEND = "fiber"
+FAULTS_WIN_TARGET = 1.3
+FAULTS_WIN_CAP = 3.0
+FAULTS_RATE_FRACTION = 0.6
+FAULTS_PROBE_DURATION = 0.6
+FAULTS_PROBE_ROUNDS = 2
+
+
+def _faults_probe(rounds: int = FAULTS_PROBE_ROUNDS) -> Dict[str, Any]:
+    from repro.apps import build_bench_app
+    from repro.core import ResiliencePolicy, find_peak_throughput
+    from .bench_faults import _sick_plan
+    app_name = FAULTS_PROBE_APP
+    backend = FAULTS_PROBE_BACKEND
+    d = get_app_def(app_name)
+    deadline = d.deadlines.get("mixed", 0.08)
+    factory = d.make_request_factory("mixed")
+    # cheap healthy ramp: the probe drives a comfortably-sustainable rate —
+    # the scenario is "one dependency is sick", not "the app is drowning"
+    with build_bench_app(app_name, backend) as app:
+        warmup(app, factory)
+        pk = find_peak_throughput(app, factory, start_rate=200, growth=1.7,
+                                  duration=0.3, max_trials=10)
+    rate = max(FAULTS_RATE_FRACTION * pk.peak_rps, 50.0)
+
+    def _side(breakers: bool) -> Any:
+        pol = ResiliencePolicy(deadline=deadline, retry=None,
+                               breakers=breakers)
+        app = build_bench_app(app_name, backend, resilience=pol)
+        with app:
+            warmup(app, factory)          # healthy warmup, then get sick
+            app.set_faults(_sick_plan(app_name))
+            tr = run_trial(app, factory, rate, FAULTS_PROBE_DURATION,
+                           seed=31, drain=0.5, deadline=deadline,
+                           enforce_deadline=True, settle=0.5,
+                           arm_faults=True)
+            by_edge = app.resilience_by_edge()
+        return tr, by_edge
+    sick_edge = tuple(d.fault_targets["sick"])
+    healthy_edge = tuple(d.fault_targets["healthy"])
+    wins: List[float] = []
+    last: Dict[str, Any] = {}
+    for i in range(rounds):
+        # interleaved like every probe: alternate which side runs first
+        order = (True, False) if i % 2 == 0 else (False, True)
+        side: Dict[bool, Any] = {}
+        for breakers in order:
+            side[breakers] = _side(breakers)
+        tr_on, edges_on = side[True]
+        tr_off, _ = side[False]
+        win = tr_on.goodput_rps / max(tr_off.goodput_rps, 1e-9)
+        wins.append(round(min(win, FAULTS_WIN_CAP), 3))
+        last = {
+            "on_goodput_rps": round(tr_on.goodput_rps, 1),
+            "off_goodput_rps": round(tr_off.goodput_rps, 1),
+            "raw_win": round(win, 3),
+            "sick_edge_opens": int(
+                edges_on.get(sick_edge, {}).get("opens", 0)),
+            "healthy_edge_opens": int(
+                edges_on.get(healthy_edge, {}).get("opens", 0)),
+            "faults_injected": int(
+                tr_on.backend_stats.get("faults_injected", 0)),
+        }
+        if max(wins) >= FAULTS_WIN_CAP:
+            break  # decisive; further rounds only cost wall time
+    value = max(wins)
+    return {
+        "app": app_name,
+        "backend": backend,
+        "workload": "mixed",
+        "metric": "goodput_rps",
+        "rate_rps": round(rate, 1),
+        "deadline_s": deadline,
+        "target": FAULTS_WIN_TARGET,
+        "cap": FAULTS_WIN_CAP,
+        "win": value,
+        "wins": wins,
+        "rounds": len(wins),
+        "ok": value >= FAULTS_WIN_TARGET,
+        **last,
+    }
 
 
 def _knee_probe() -> Dict[str, Any]:
@@ -711,24 +850,94 @@ def run_smoke(apps: Optional[Sequence[str]] = None,
                   f"collapsed={knee['collapsed']} curve="
                   + "|".join(f"{p['multiple']:g}:{p['goodput_rps']:.0f}"
                              for p in knee["curve"]), flush=True)
+    if steal_probe and FAULTS_PROBE_APP in apps:
+        # the deterministic breakers-pay-off check (PR 9): HARD-gated —
+        # the scenario is engineered so fail-fast must win, so a shrinking
+        # win is a resilience-layer regression, not runner weather
+        try:
+            probe = _faults_probe(rounds=max(FAULTS_PROBE_ROUNDS // 2, 1)
+                                  if quick else FAULTS_PROBE_ROUNDS)
+        except Exception as exc:  # noqa: BLE001 - keep the artifact
+            probe = {"status": "error", "error": repr(exc)}
+            out["failures"].append(f"faults_probe: {exc!r}")
+        out["faults_probe"] = probe
+        if "win" in probe:
+            if not probe["ok"]:
+                out["failures"].append(
+                    f"faults_probe: breaker win {probe['win']}x < "
+                    f"{FAULTS_WIN_TARGET}x target under the sick-dependency "
+                    f"scenario (on={probe['on_goodput_rps']} "
+                    f"off={probe['off_goodput_rps']} goodput rps)")
+            out["records"].append({
+                # no "gate" field: this cell is hard-gated by the trend
+                # diff, and the win is capped (see FAULTS_WIN_CAP) so the
+                # gate compares bounded, stable values
+                "key": f"faults/{FAULTS_PROBE_APP}/"
+                       f"{FAULTS_PROBE_BACKEND}/breaker_win",
+                "app": FAULTS_PROBE_APP,
+                "backend": FAULTS_PROBE_BACKEND,
+                "metric": "breaker_win",
+                "unit": "x",
+                "direction": "higher",
+                "value": probe["win"],
+                "trials": probe["wins"],
+                "errors": 0,
+            })
+            for label, value in (("on", probe["on_goodput_rps"]),
+                                 ("off", probe["off_goodput_rps"])):
+                out["records"].append({
+                    # context cells: absolute goodput under the fault is
+                    # runner-dependent, so these stay warn-only; the
+                    # gated claim is the ratio above
+                    "key": f"faults/{FAULTS_PROBE_APP}/"
+                           f"{FAULTS_PROBE_BACKEND}/goodput_{label}",
+                    "app": FAULTS_PROBE_APP,
+                    "backend": FAULTS_PROBE_BACKEND,
+                    "metric": "goodput_rps",
+                    "unit": "rps",
+                    "direction": "higher",
+                    "noise": "overload",
+                    "gate": "warn-only",
+                    "value": value,
+                    "errors": 0,
+                })
+            print(f"faults probe {FAULTS_PROBE_APP} "
+                  f"[{FAULTS_PROBE_BACKEND} @ {probe['rate_rps']}rps]: "
+                  f"breaker win={probe['win']}x (raw={probe['raw_win']}x, "
+                  f"target {FAULTS_WIN_TARGET}x) ok={probe['ok']} "
+                  f"on={probe['on_goodput_rps']} "
+                  f"off={probe['off_goodput_rps']} "
+                  f"sick_opens={probe['sick_edge_opens']} "
+                  f"healthy_opens={probe['healthy_edge_opens']} "
+                  f"flt={probe['faults_injected']} "
+                  f"(rounds={probe['rounds']})", flush=True)
     if steal_probe and PINNING_PROBE_APP in apps:
         # paired A/B of shard placement policy under the hot-shard Zipfian
         # workload: by-session (deterministic, state-affine) vs by-ticket
         # (spread-everything).  Probe data, not a gate — affinity trades
         # peak rps for placement determinism, and the honest number is the
         # point (warn-only records feed the trend like the overload cells).
-        try:
-            probe = _pinning_probe(max_rounds=probe_rounds)
-        except Exception as exc:  # noqa: BLE001 - keep the artifact
-            probe = {"status": "error", "error": repr(exc)}
-            out["failures"].append(f"pinning_probe: {exc!r}")
-        out["pinning_probe"] = probe
-        if "cand_peak_rps" in probe:
+        # two placement A/Bs: the keep-alive (warm, steady-state hits) mode
+        # and the PR 9 cold-start-per-round mode (first-touch placement
+        # included).  Distinct warn-only trend cells — the cold cells keep
+        # their own baseline, so warm-mode history stays comparable.
+        for cold in (False, True):
+            slot = "pinning_probe_cold" if cold else "pinning_probe"
+            suffix = "/cold" if cold else ""
+            try:
+                probe = _pinning_probe(max_rounds=probe_rounds,
+                                       cold_start=cold)
+            except Exception as exc:  # noqa: BLE001 - keep the artifact
+                probe = {"status": "error", "error": repr(exc)}
+                out["failures"].append(f"{slot}: {exc!r}")
+            out[slot] = probe
+            if "cand_peak_rps" not in probe:
+                continue
             for label, value in (("by-ticket", probe["base_peak_rps"]),
                                  ("by-session", probe["cand_peak_rps"])):
                 out["records"].append({
                     "key": f"pinning/{PINNING_PROBE_APP}/"
-                           f"{PINNING_PROBE_BACKEND}/{label}",
+                           f"{PINNING_PROBE_BACKEND}/{label}{suffix}",
                     "app": PINNING_PROBE_APP,
                     "backend": PINNING_PROBE_BACKEND,
                     "metric": "peak_rps",
@@ -742,7 +951,7 @@ def run_smoke(apps: Optional[Sequence[str]] = None,
                     "errors": 0,
                 })
             print(f"pinning probe {PINNING_PROBE_APP} "
-                  f"[{PINNING_PROBE_BACKEND}]: peak "
+                  f"[{PINNING_PROBE_BACKEND} {probe['mode']}]: peak "
                   f"by-ticket={probe['base_peak_rps']} "
                   f"by-session={probe['cand_peak_rps']} "
                   f"ratio={probe['ratio']} ok={probe['ok']} "

@@ -12,8 +12,12 @@ Tables:
                         uncapped-budget retry-storm amplification table,
                         resilience layer on (bench_overload; also writes
                         launch_results/overload_sweep.json)
-  6. serving          — beyond-paper: LLM serving engine, thread vs fiber
-  7. roofline         — dry-run roofline terms (reads launch/dryrun results)
+  6. faults           — deterministic sick-dependency scenarios: breaker
+                        A/B win, per-edge blast radius and time-to-recover
+                        per app x backend cell (bench_faults; also writes
+                        launch_results/faults_sweep.json)
+  7. serving          — beyond-paper: LLM serving engine, thread vs fiber
+  8. roofline         — dry-run roofline terms (reads launch/dryrun results)
 
 The microservice tables (2, 3) sweep every app in ``repro.apps.REGISTRY``
 crossed with every backend in ``repro.apps.BENCH_BACKENDS``; restrict with
@@ -128,6 +132,10 @@ def main(argv=None) -> None:
     benches.append(("overload",
                     lambda quick: bench_overload.run(quick=quick,
                                                      apps=apps)))
+    from . import bench_faults
+    benches.append(("faults",
+                    lambda quick: bench_faults.run(quick=quick,
+                                                   apps=apps)))
     try:
         from . import bench_serving
         benches.append(("serving", lambda quick: bench_serving.run(quick=quick)))

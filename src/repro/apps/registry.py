@@ -33,6 +33,12 @@ class AppDef:
     description: str = ""
     # workload -> default end-to-end deadline (s) for the overload harness
     deadlines: Dict[str, float] = field(default_factory=dict)
+    # role -> (dest, method) edges for fault-injection scenarios
+    # (benchmarks/bench_faults.py): "sick" is the write-path storage leaf a
+    # scenario degrades, "healthy" the read-path method of the *same*
+    # service that must stay up — the per-edge blast-radius story.  Both
+    # are exercised by the app's "mixed" workload.
+    fault_targets: Dict[str, Tuple[str, str]] = field(default_factory=dict)
 
 
 REGISTRY: Dict[str, AppDef] = {
@@ -44,6 +50,8 @@ REGISTRY: Dict[str, AppDef] = {
         frontend="frontend",
         description="deep graph, nested fan-out (ComposePost: 7+2 carriers)",
         deadlines=dict(socialnetwork.DEADLINES),
+        fault_targets={"sick": ("post_storage", "store"),
+                       "healthy": ("post_storage", "read")},
     ),
     "hotelreservation": AppDef(
         name="hotelreservation",
@@ -53,6 +61,8 @@ REGISTRY: Dict[str, AppDef] = {
         frontend=hotelreservation.FRONTEND,
         description="shallow graph, 2-wide joins, CPU-heavy auth leaf",
         deadlines=dict(hotelreservation.DEADLINES),
+        fault_targets={"sick": ("reservation", "make_reservation"),
+                       "healthy": ("reservation", "check_availability")},
     ),
     "mediaservice": AppDef(
         name="mediaservice",
@@ -62,6 +72,8 @@ REGISTRY: Dict[str, AppDef] = {
         frontend=mediaservice.FRONTEND,
         description="widest single-service fan-out (ComposeReview: 7 carriers)",
         deadlines=dict(mediaservice.DEADLINES),
+        fault_targets={"sick": ("review_storage", "store"),
+                       "healthy": ("review_storage", "read")},
     ),
 }
 

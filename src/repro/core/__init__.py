@@ -8,6 +8,8 @@ from .context import RequestContext, session_key
 from .effects import (AsyncRpc, Compute, CurrentContext, Offload, Sleep,
                       SpawnLocal, Wait, WaitAll, sync_rpc)
 from .executor import BACKEND_FACTORIES, BACKEND_NAMES, make_executor
+from .faults import (FaultPlan, FaultRule, FaultStats, InjectedFault,
+                     ServiceCrashed)
 from .future import CompletedFuture, Future, Once
 from .loadgen import (OverloadResult, RequestFactory, find_peak_throughput,
                       latency_sweep, run_overload, run_trial, warmup)
@@ -29,4 +31,6 @@ __all__ = [
     "DeadlineExceeded", "CircuitOpenError", "Rejected",
     "RetryPolicy", "RetryBudget", "CircuitBreaker", "Bulkhead",
     "ResiliencePolicy",
+    "FaultPlan", "FaultRule", "FaultStats", "InjectedFault",
+    "ServiceCrashed",
 ]

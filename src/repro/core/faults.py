@@ -1,0 +1,382 @@
+"""Deterministic, seeded fault injection: make dependencies sick on purpose.
+
+PR 6 proved the resilience layer survives *uniform* overload and recorded an
+honestly bimodal breaker result — breakers pay off against a **sick
+dependency**, not uniform pressure, and the repo had no way to make a
+dependency sick.  This module is that missing instrument: a
+:class:`FaultPlan` of per-``(dest, method)``-edge :class:`FaultRule`\\ s with
+explicit schedules on the trial clock and a seeded RNG, so every run of a
+scenario is bit-reproducible.
+
+Fault taxonomy
+--------------
+``latency``
+    Add ``latency`` seconds of service time before the handler runs, plus —
+    with probability ``spike_prob`` per request (seeded RNG) — an extra
+    ``spike_latency`` spike.  Injected as a leading ``Sleep`` effect, so the
+    executor's normal deadline machinery truncates it and fails the attempt
+    with ``DeadlineExceeded`` when the spike blows the budget.
+``error``
+    Fail the request with :class:`InjectedFault` before the handler runs,
+    with probability ``error_rate`` per request (seeded RNG).  Retryable,
+    breaker evidence — the deterministic stand-in for a flaky dependency.
+``hang``
+    Blackhole: the handler never runs and the reply future is **never
+    resolved** by the destination.  The caller's parked join expires via the
+    normal deadline machinery; the blackholed reply itself is parked on the
+    plan and settled by ``App.stop()`` / :meth:`FaultPlan.disarm` so no
+    waiter is orphaned past teardown.
+``brownout``
+    Inflate the handler's service time: every ``Sleep`` and ``Compute`` the
+    handler yields is scaled by ``factor`` for the rule's window.  The
+    degraded handler *runs* (burning real CPU for scaled ``Compute``), and
+    fails with ``DeadlineExceeded`` only if the inflated time exceeds the
+    request's budget — the "sick but not dead" dependency breakers exist for.
+``crash``
+    Crash the whole destination service for the window: its executor is
+    stopped at ``start`` and restarted at ``stop`` (riding the idempotent,
+    restartable executor contract ``App.start``/``App.stop`` already rely
+    on), and every delivery during the window fails fast with
+    :class:`ServiceCrashed` — the moral equivalent of connection-refused.
+
+Injection points (backend invariance)
+-------------------------------------
+Both RPC paths instantiate the handler generator at exactly one spot —
+``Service.deliver`` (mailbox/carrier path) and ``App._inline_call`` /
+``App._inline_resilient`` (zero-handoff fast path) — and both consult
+:meth:`FaultPlan.intercept` there, *after* the resilience admission checks
+(deadline, breaker, bulkhead, mailbox bound).  A fault therefore flows
+through each path's existing accounting identically: an injected error is
+breaker evidence and retry fuel on either path, injected latency is subject
+to the same deadline truncation, and a blackholed reply holds its bulkhead
+slot and mailbox-admission token exactly like a genuinely hung request —
+which is what makes fault semantics invariant across all 8 executors.
+
+Determinism
+-----------
+All probabilistic draws (``error_rate``, ``spike_prob``) come from one
+``random.Random(seed)`` re-seeded on every :meth:`FaultPlan.arm`, and every
+injection appends a ``(kind, dest, method, param)`` entry to
+:attr:`FaultPlan.trace`.  Same plan + same seed + same request sequence ⇒
+identical trace, bit for bit (``tests/test_faults.py``).
+"""
+from __future__ import annotations
+
+import itertools
+import random
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Generator, List, Optional, Tuple
+
+from .effects import Compute, Sleep
+from .future import Future
+
+KINDS = ("latency", "error", "hang", "brownout", "crash")
+
+
+class InjectedFault(RuntimeError):
+    """A deterministic fault injected by a :class:`FaultPlan`.
+
+    Deliberately a plain ``RuntimeError`` subclass (not ``DeadlineExceeded``):
+    injected errors are retryable and count as circuit-breaker evidence,
+    exactly like a real dependency failure would."""
+
+
+class ServiceCrashed(InjectedFault):
+    """Delivery refused because the destination service is crashed (its
+    executor is stopped for the rule's window) — connection-refused
+    semantics: fail fast, retryable, breaker evidence."""
+
+
+@dataclass(frozen=True)
+class FaultRule:
+    """One scheduled fault on one ``(dest, method)`` edge.
+
+    ``method=None`` matches every method of ``dest``.  ``start``/``stop``
+    are seconds on the trial clock — relative to the instant the plan was
+    :meth:`FaultPlan.arm`\\ ed — and the rule is active for
+    ``start <= t < stop``.  Kind-specific knobs: ``latency`` +
+    ``spike_prob``/``spike_latency`` (kind ``latency``), ``error_rate``
+    (kind ``error``), ``factor`` (kind ``brownout``)."""
+
+    dest: str
+    kind: str
+    method: Optional[str] = None
+    start: float = 0.0
+    stop: float = float("inf")
+    latency: float = 0.0
+    spike_prob: float = 0.0
+    spike_latency: float = 0.0
+    error_rate: float = 1.0
+    factor: float = 1.0
+
+    def __post_init__(self) -> None:
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(expected one of {KINDS})")
+        if self.stop <= self.start:
+            raise ValueError(f"empty fault window [{self.start}, {self.stop})")
+
+
+class FaultStats:
+    """Lock-free per-kind injection counters (``CacheStats`` idiom: one
+    atomic ``itertools.count`` ticket per event, reads parse the repr), so
+    every executor thread can count without a lock.  Monotonic for the
+    plan's lifetime — per-trial views come from ``BackendStats.delta``."""
+
+    __slots__ = ("_counters",)
+
+    def __init__(self) -> None:
+        self._counters = {k: itertools.count(1) for k in ("injected",) + KINDS}
+
+    def tick(self, kind: str) -> None:
+        """Count one injection of ``kind`` (``injected`` is ticked by the
+        plan once per intercepted request, on top of the per-kind tick)."""
+        next(self._counters[kind])
+
+    def get(self, kind: str) -> int:
+        """Injections of ``kind`` so far (exact, lock-free)."""
+        r = repr(self._counters[kind])        # e.g. "count(42)"
+        return int(r[r.index("(") + 1:-1]) - 1
+
+    @property
+    def injected(self) -> int:
+        """Total requests that had at least one fault injected."""
+        return self.get("injected")
+
+    def as_dict(self) -> Dict[str, int]:
+        """``{"faults_injected": n, "faults_<kind>": n, ...}``."""
+        out = {"faults_injected": self.injected}
+        for k in KINDS:
+            out[f"faults_{k}"] = self.get(k)
+        return out
+
+
+def faulted_handler(gen: Generator, pre: float, scale: float) -> Generator:
+    """Wrap a handler generator with injected service time.
+
+    ``pre`` seconds of added latency are yielded as a leading ``Sleep`` (so
+    the executor's deadline machinery can truncate it); ``scale != 1``
+    turns the wrapper into a manual pump loop that multiplies every
+    ``Sleep``/``Compute`` the handler yields — forwarding sent values *and*
+    thrown exceptions, because the interpreters drive handlers with a
+    ``send``/``throw`` protocol (a plain ``yield from`` could forward but
+    not transform the effects)."""
+    if pre > 0.0:
+        yield Sleep(pre)
+    if scale == 1.0:
+        result = yield from gen
+        return result
+    try:
+        eff = gen.send(None)
+    except StopIteration as si:
+        return si.value
+    while True:
+        kind = type(eff)
+        if kind is Sleep:
+            eff = Sleep(eff.seconds * scale)
+        elif kind is Compute:
+            eff = Compute(eff.seconds * scale)
+        try:
+            value = yield eff
+        except BaseException as exc:  # deadline expiry thrown at the yield
+            try:
+                eff = gen.throw(exc)
+            except StopIteration as si:
+                return si.value
+            continue
+        try:
+            eff = gen.send(value)
+        except StopIteration as si:
+            return si.value
+
+
+class FaultPlan:
+    """A seeded, scheduled set of :class:`FaultRule`\\ s for one app.
+
+    Install with ``App.set_faults(plan)``; :meth:`arm` starts the schedule
+    clock (``loadgen.run_trial`` arms an installed plan at trial start, so
+    rule windows read as "seconds into the trial").  Each ``arm`` re-seeds
+    the RNG and clears the trace, making every armed run bit-reproducible.
+    """
+
+    def __init__(self, rules: List[FaultRule], *, seed: int = 0) -> None:
+        self.rules: Tuple[FaultRule, ...] = tuple(rules)
+        self.seed = seed
+        self.stats = FaultStats()
+        self.trace: List[Tuple[Any, ...]] = []
+        self._lock = threading.Lock()
+        self._rng = random.Random(seed)
+        self._epoch: Optional[float] = None
+        self._gen = 0                       # arm generation: stale-timer guard
+        self._app: Any = None
+        self._blackholed: List[Future] = []
+        self._crashed: set = set()          # dests with a stopped executor
+        self._by_dest: Dict[str, List[FaultRule]] = {}
+        for r in self.rules:
+            self._by_dest.setdefault(r.dest, []).append(r)
+
+    # ------------------------------------------------------------ lifecycle
+    def bind(self, app: Any) -> None:
+        """Attach to an :class:`~repro.core.service.App` (done by
+        ``App.set_faults``); the app's ``TimerThread`` drives crash/restart
+        schedules and ``App.stop`` settles blackholed replies."""
+        self._app = app
+
+    @property
+    def armed(self) -> bool:
+        """True between :meth:`arm` and :meth:`disarm`."""
+        return self._epoch is not None
+
+    def arm(self, at: Optional[float] = None) -> None:
+        """Start (or restart) the schedule clock at ``at`` (default: now,
+        ``time.monotonic``).  Re-seeds the RNG and clears the trace so every
+        armed run of the same plan is bit-identical; schedules any ``crash``
+        rules' stop/restart instants on the app's timer thread."""
+        now = time.monotonic() if at is None else at
+        with self._lock:
+            self._gen += 1
+            gen = self._gen
+            self._epoch = now
+            self._rng = random.Random(self.seed)
+            self.trace = []
+        app = self._app
+        if app is None:
+            return
+        for rule in self.rules:
+            if rule.kind != "crash":
+                continue
+            app._timer.push(now + rule.start,
+                            lambda d=rule.dest, g=gen: self._crash(d, g))
+            if rule.stop != float("inf"):
+                app._timer.push(now + rule.stop,
+                                lambda d=rule.dest, g=gen: self._restart(d, g))
+
+    def disarm(self) -> None:
+        """Stop injecting: clears the schedule clock, cancels pending
+        crash/restart actions (generation bump), restarts any still-crashed
+        service, and settles blackholed replies."""
+        with self._lock:
+            self._gen += 1
+            self._epoch = None
+        for dest in list(self._crashed):
+            self._restart(dest, self._gen)
+        self.settle_blackholed()
+
+    # ------------------------------------------------------- crash schedule
+    def _crash(self, dest: str, gen: int) -> None:
+        app = self._app
+        with self._lock:
+            if gen != self._gen:
+                return                      # re-armed/disarmed since scheduled
+        if app is None or not getattr(app, "_started", False):
+            return
+        svc = app.services.get(dest)
+        if svc is None:
+            return
+        self._crashed.add(dest)             # fail-fast flag set *before* stop
+        svc.executor.stop()
+
+    def _restart(self, dest: str, gen: int) -> None:
+        app = self._app
+        with self._lock:
+            if gen != self._gen:
+                return
+        self._crashed.discard(dest)
+        if app is None or not getattr(app, "_started", False):
+            return                          # App.stop owns a stopped app
+        svc = app.services.get(dest)
+        if svc is not None:
+            svc.executor.start()
+
+    # ----------------------------------------------------------- blackholes
+    def blackhole(self, reply: Future) -> None:
+        """Park a blackholed reply: never resolved by the destination,
+        settled with :class:`InjectedFault` at ``App.stop``/:meth:`disarm`
+        (the no-orphaned-waiters discipline, same as loadgen leftovers)."""
+        with self._lock:
+            self._blackholed.append(reply)
+
+    def settle_blackholed(self) -> None:
+        """Resolve every parked blackholed reply with ``InjectedFault`` —
+        waiters (and their bulkhead slots / mailbox-admission tokens) are
+        released instead of being orphaned past teardown."""
+        with self._lock:
+            parked, self._blackholed = self._blackholed, []
+        for fut in parked:
+            if not fut.done:
+                fut.set_exception(InjectedFault(
+                    "blackholed reply settled at stop"))
+
+    # ------------------------------------------------------------ intercept
+    def intercept(self, dest: str, method: str) -> Optional[Tuple]:
+        """Per-request fault decision for one delivery on ``(dest, method)``.
+
+        Returns ``None`` (no fault) or an action tuple the call sites in
+        ``Service.deliver`` / ``App._inline_call`` apply:
+        ``("error", exc)`` fail the reply now; ``("hang",)`` blackhole it;
+        ``("wrap", pre, scale)`` run the handler through
+        :func:`faulted_handler`.  Terminal kinds (crash > hang > error, in
+        rule order) win outright; latency and brownout rules *accumulate*
+        (added latencies sum, brownout factors multiply)."""
+        if self._epoch is None:
+            return None
+        rules = self._by_dest.get(dest)
+        if rules is None:
+            return None
+        rel = time.monotonic() - self._epoch
+        pre = 0.0
+        scale = 1.0
+        stats = self.stats
+        with self._lock:
+            if dest in self._crashed:
+                # executor is down (covers the gap between a crash window
+                # ending and the restart timer firing): never let a delivery
+                # sit in a stopped executor's mailbox
+                stats.tick("crash")
+                stats.tick("injected")
+                self.trace.append(("crash", dest, method))
+                return ("error", ServiceCrashed(
+                    f"{dest}: service crashed (injected fault)"))
+            for r in rules:
+                if r.method is not None and r.method != method:
+                    continue
+                if rel < r.start or rel >= r.stop:
+                    continue
+                if r.kind == "crash":
+                    stats.tick("crash")
+                    stats.tick("injected")
+                    self.trace.append(("crash", dest, method))
+                    return ("error", ServiceCrashed(
+                        f"{dest}: service crashed (injected fault)"))
+                if r.kind == "hang":
+                    stats.tick("hang")
+                    stats.tick("injected")
+                    self.trace.append(("hang", dest, method))
+                    return ("hang",)
+                if r.kind == "error":
+                    if r.error_rate >= 1.0 or self._rng.random() < r.error_rate:
+                        stats.tick("error")
+                        stats.tick("injected")
+                        self.trace.append(("error", dest, method))
+                        return ("error", InjectedFault(
+                            f"{dest}.{method}: injected error"))
+                    continue
+                if r.kind == "latency":
+                    add = r.latency
+                    if r.spike_prob > 0.0 and \
+                            self._rng.random() < r.spike_prob:
+                        add += r.spike_latency
+                    if add > 0.0:
+                        stats.tick("latency")
+                        self.trace.append(("latency", dest, method, add))
+                        pre += add
+                else:                       # brownout
+                    stats.tick("brownout")
+                    self.trace.append(("brownout", dest, method, r.factor))
+                    scale *= r.factor
+        if pre == 0.0 and scale == 1.0:
+            return None
+        stats.tick("injected")
+        return ("wrap", pre, scale)

@@ -69,7 +69,8 @@ def run_trial(app: App, make_request: RequestFactory, rate: float,
               duration: float, *, seed: int = 0, max_outstanding: int = 4096,
               drain: float = 2.0, deadline: Optional[float] = None,
               enforce_deadline: bool = False,
-              settle: float = 1.0) -> TrialResult:
+              settle: float = 1.0,
+              arm_faults: Optional[bool] = None) -> TrialResult:
     """Offer ``rate`` req/s for ``duration`` seconds; measure completions.
 
     ``deadline`` (seconds, relative) classifies completions as *good* when
@@ -80,6 +81,14 @@ def run_trial(app: App, make_request: RequestFactory, rate: float,
     the request's session id: the trial mints a :class:`RequestContext`
     carrying it, which session-affine executors use for shard placement and
     handlers can read back via the ``CurrentContext`` effect.
+
+    ``arm_faults`` controls the app's installed
+    :class:`~repro.core.faults.FaultPlan` (no-op when none is installed):
+    ``None`` (default) arms it at trial start only if it is not armed yet,
+    so rule windows read as seconds into the *first* trial and later probe
+    trials (recovery sweeps) run on the same schedule clock; ``True``
+    re-arms at every trial start ("the fault schedule replays each trial"
+    — what a paired A/B probe wants); ``False`` never touches it.
 
     Sever-point / leftovers contract (the trial-isolation guarantee):
 
@@ -106,6 +115,10 @@ def run_trial(app: App, make_request: RequestFactory, rate: float,
     lock = threading.Lock()
     _settle(app, settle)
     stats_before = app.backend_stats()
+    plan = getattr(app, "fault_plan", None)
+    if plan is not None and arm_faults is not False:
+        if arm_faults or not plan.armed:
+            plan.arm()  # fault-rule windows start on this trial's clock
 
     t_start = time.perf_counter()
     t_end = t_start + duration

@@ -106,6 +106,12 @@ class BackendStats:
     ``App.cache_stats``): ``cache_hits`` / ``cache_misses`` — cache-aside
     lookups that found / missed the key (a miss pays the backing-store
     read and populates the cache).
+
+    Fault-injection counters (app-level, fed by an installed
+    ``repro.core.faults.FaultPlan``): ``faults_injected`` — requests that
+    had at least one fault injected; ``faults_latency`` / ``faults_error``
+    / ``faults_hang`` / ``faults_brownout`` / ``faults_crash`` — per-kind
+    rule applications (one request can tick several wrap-kind rules).
     """
     spawns: int = 0
     spawn_seconds: float = 0.0
@@ -136,6 +142,12 @@ class BackendStats:
     bulkhead_rejections: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
+    faults_injected: int = 0
+    faults_latency: int = 0
+    faults_error: int = 0
+    faults_hang: int = 0
+    faults_brownout: int = 0
+    faults_crash: int = 0
 
     _GAUGES = ("queue_depth_hwm", "ring_hwm", "cq_hwm", "shards",
                "inline_depth_hwm")
@@ -280,6 +292,13 @@ class TrialResult:
         if bs.get("cache_hits") or bs.get("cache_misses"):
             s += (f" ch={bs.get('cache_hits', 0):.0f}"
                   f" cm={bs.get('cache_misses', 0):.0f}")
+        if bs.get("faults_injected"):
+            kinds = "".join(
+                f" {tag}={bs[k]:.0f}" for tag, k in
+                (("lat", "faults_latency"), ("err", "faults_error"),
+                 ("hang", "faults_hang"), ("brn", "faults_brownout"),
+                 ("crsh", "faults_crash")) if bs.get(k))
+            s += f" flt={bs['faults_injected']:.0f}({kinds.strip()})"
         return s
 
 

@@ -18,6 +18,7 @@ from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
 from .context import RequestContext
 from .effects import Sleep, Wait
 from .executor import Executor, make_executor
+from .faults import FaultPlan, faulted_handler
 from .future import CompletedFuture, Future
 from .resilience import (Bulkhead, CircuitBreaker, CircuitOpenError,
                          DeadlineExceeded, Rejected, ResiliencePolicy,
@@ -135,6 +136,24 @@ class Service:
                     f"{self.name}: mailbox full ({bound} in flight)"))
                 return
             reply.add_done_callback(self._admission_release)
+        plan = self.app.fault_plan
+        if plan is not None:
+            action = plan.intercept(self.name, method)
+            if action is not None:
+                # injected fault, applied *after* the admission checks so a
+                # faulted request flows through the same accounting as a
+                # real failure (see repro.core.faults: injection points)
+                if action[0] == "wrap":
+                    self.count_request()
+                    self.executor.deliver(
+                        faulted_handler(handler(self, payload),
+                                        action[1], action[2]), reply, ctx)
+                    return
+                if action[0] == "hang":
+                    plan.blackhole(reply)
+                    return
+                reply.set_exception(action[1])      # "error" / crash
+                return
         self.count_request()
         self.executor.deliver(handler(self, payload), reply, ctx)
 
@@ -322,6 +341,21 @@ class App:
         # time; the next trial settles on them before snapshotting stats
         # (see loadgen.run_trial).
         self._loadgen_leftovers: List[Future] = []
+        # optional deterministic fault-injection plan (repro.core.faults);
+        # consulted by Service.deliver and the inline fast path, armed by
+        # loadgen.run_trial on the trial clock.
+        self.fault_plan: Optional[FaultPlan] = None
+
+    def set_faults(self, plan: Optional[FaultPlan]) -> None:
+        """Install a :class:`~repro.core.faults.FaultPlan` (or clear it with
+        ``None``).  A replaced plan is disarmed first, settling any replies
+        it blackholed so their waiters are never orphaned."""
+        old = self.fault_plan
+        if old is not None and old is not plan:
+            old.disarm()
+        self.fault_plan = plan
+        if plan is not None:
+            plan.bind(self)
 
     # ------------------------------------------------------------- wiring
     def add_service(self, spec: ServiceSpec) -> Service:
@@ -350,6 +384,12 @@ class App:
         if not self._started:
             return
         self._started = False  # send() fails fast while teardown runs
+        if self.fault_plan is not None:
+            # settle blackholed replies *before* the executors stop: their
+            # done-callbacks may resume parked waiters, which needs live
+            # schedulers.  No orphaned waiters survive teardown (same
+            # discipline as the loadgen leftovers).
+            self.fault_plan.settle_blackholed()
         for svc in self.services.values():
             svc.executor.stop()
         self.offload_pool.stop()
@@ -619,6 +659,20 @@ class App:
         if handler is None:
             return None
         if self._inline_plain:
+            plan = self.fault_plan
+            if plan is not None:
+                action = plan.intercept(dest, method)
+                if action is not None:
+                    if action[0] == "wrap":
+                        svc.count_request()
+                        return drive(faulted_handler(handler(svc, payload),
+                                                     action[1], action[2]),
+                                     ctx)
+                    if action[0] == "hang":
+                        fut = Future()
+                        plan.blackhole(fut)
+                        return fut
+                    return CompletedFuture(exc=action[1])
             # no per-edge policy bookkeeping: the pre-PR-6 path, bit-for-bit
             svc.count_request()
             return drive(handler(svc, payload), ctx)
@@ -674,8 +728,27 @@ class App:
             self._drive_attempts(svc, method, payload, ctx, breaker,
                                  bulkhead, reply, [1], prefail=exc)
             return reply
-        svc.count_request()
-        attempt = drive(handler(svc, payload), ctx)
+        attempt: Optional[Future] = None
+        plan = self.fault_plan
+        if plan is not None:
+            action = plan.intercept(svc.name, method)
+            if action is not None:
+                # mirror the carrier path: the faulted attempt is adopted by
+                # _drive_attempts below, so it feeds the same breaker window
+                # and retry budget as a mailbox-delivered fault would
+                if action[0] == "wrap":
+                    svc.count_request()
+                    attempt = drive(faulted_handler(handler(svc, payload),
+                                                    action[1], action[2]),
+                                    ctx)
+                elif action[0] == "hang":
+                    attempt = Future()
+                    plan.blackhole(attempt)
+                else:
+                    attempt = CompletedFuture(exc=action[1])
+        if attempt is None:
+            svc.count_request()
+            attempt = drive(handler(svc, payload), ctx)
         if bulkhead is not None:
             attempt.add_done_callback(bulkhead.release)
         if attempt.done and attempt.exception() is None:
@@ -729,4 +802,12 @@ class App:
         agg.breaker_opens = sum(b.opens for b in self._breakers.values())
         agg.cache_hits = self.cache_stats.hits
         agg.cache_misses = self.cache_stats.misses
+        if self.fault_plan is not None:
+            fs = self.fault_plan.stats
+            agg.faults_injected = fs.injected
+            agg.faults_latency = fs.get("latency")
+            agg.faults_error = fs.get("error")
+            agg.faults_hang = fs.get("hang")
+            agg.faults_brownout = fs.get("brownout")
+            agg.faults_crash = fs.get("crash")
         return agg

@@ -229,10 +229,14 @@ def test_committed_baseline_is_current_schema():
     # AND a p99 record plus a cached-workload hit-rate gauge, the rpc-path
     # micro one record per backend (plus a +resilient row per inline
     # backend), the overload probe its two paired goodput cells, the knee
-    # probe its knee-multiple cell, and the pinning probe its two paired
-    # placement-policy peaks
+    # probe its knee-multiple cell, the pinning probe its two paired
+    # placement-policy peaks in both warm and cold-start modes, and the
+    # sick-dependency faults probe its hard-gated breaker win plus the two
+    # goodput context records behind it
     from benchmarks.bench_rpc_path import INLINE_BACKENDS
-    from benchmarks.bench_smoke import (OVERLOAD_PROBE_APP,
+    from benchmarks.bench_smoke import (FAULTS_PROBE_APP,
+                                        FAULTS_PROBE_BACKEND,
+                                        OVERLOAD_PROBE_APP,
                                         OVERLOAD_PROBE_BACKEND,
                                         PINNING_PROBE_APP,
                                         PINNING_PROBE_BACKEND)
@@ -247,8 +251,12 @@ def test_committed_baseline_is_current_schema():
         f"overload/{OVERLOAD_PROBE_APP}/{OVERLOAD_PROBE_BACKEND}/{label}"
         for label in ("breakers-off", "breakers-on", "knee")}
     expected |= {
-        f"pinning/{PINNING_PROBE_APP}/{PINNING_PROBE_BACKEND}/{label}"
-        for label in ("by-ticket", "by-session")}
+        f"pinning/{PINNING_PROBE_APP}/{PINNING_PROBE_BACKEND}/{label}{mode}"
+        for label in ("by-ticket", "by-session")
+        for mode in ("", "/cold")}
+    expected |= {
+        f"faults/{FAULTS_PROBE_APP}/{FAULTS_PROBE_BACKEND}/{label}"
+        for label in ("breaker_win", "goodput_on", "goodput_off")}
     assert keys == expected
     # self-diff passes trivially
     report = trend.compare(baseline, baseline)
