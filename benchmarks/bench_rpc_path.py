@@ -26,6 +26,18 @@ bookkeeping (deadline stamp, breaker window, bulkhead slot) instead of
 forcing the carrier path, and the ``*_resilient_overhead`` ratio quotes
 that bookkeeping — the PR 7 acceptance bound is <= 3x the plain ns/call,
 with ``inline=`` proving the fast path stayed engaged.
+
+The ``+hooks`` rows (PR 10) price the ``repro.core.instrument`` seam the
+concurrency sanitizer rides on: an interleaved paired probe of the same
+inline cell with the seam disabled (``hooks is None``, the shipped
+default — one predicted-false branch per event site) vs a no-op
+``Hooks()`` instance installed.  The seam's design claim is that the
+*disabled* side is free: that claim is enforced by the existing
+hard-gated ``rpc_path/<backend>`` trend cells (which always run hooks-
+disabled, so any seam cost shows up against the committed baseline), and
+the paired ``*_hook_toll`` ratio quotes what turning the hooks ON costs —
+warn-only trend data, since a no-op-dispatch toll is diagnostic, not a
+shipped configuration.
 """
 from __future__ import annotations
 
@@ -41,6 +53,11 @@ from repro.core import (App, AsyncRpc, BACKEND_NAMES, ResiliencePolicy,
 # AsyncRpc before the inline path, so an inline-on/off comparison there
 # measures nothing but noise.
 INLINE_BACKENDS = ("fiber", "fiber-steal", "event-loop", "event-loop-shard")
+
+# backends the instrumentation-seam probe prices: one inline-path
+# representative (fiber has the lowest ns/call, so a seam regression is
+# proportionally largest there) and one carrier-path representative.
+HOOK_PROBE_BACKENDS = ("thread", "fiber")
 
 
 def _leaf(svc, payload):
@@ -97,6 +114,36 @@ def measure_rpc_cost(backend: str, *, inline: bool = True,
     }
 
 
+def measure_hook_toll(backend: str, *, iters: int = 20,
+                      calls_per_req: int = 64,
+                      rounds: int = 3) -> Dict[str, float]:
+    """Interleaved paired probe of the instrumentation seam: the same
+    rpc_path cell with hooks disabled (the shipped default) vs a no-op
+    :class:`repro.core.instrument.Hooks` installed.  Best-of across
+    ``rounds`` alternating-order pairs (the repo's A/B discipline: both
+    sides see the same machine weather, best-vs-best), so the ratio is a
+    paired same-run number, not two noisy absolutes."""
+    from repro.core import instrument
+    best = {"off": float("inf"), "on": float("inf")}
+    for i in range(rounds):
+        order = ("off", "on") if i % 2 == 0 else ("on", "off")
+        for side in order:
+            if side == "on":
+                instrument.install(instrument.Hooks())
+            try:
+                r = measure_rpc_cost(backend, iters=iters,
+                                     calls_per_req=calls_per_req)
+            finally:
+                if side == "on":
+                    instrument.uninstall()
+            best[side] = min(best[side], r["ns_per_call"])
+    return {
+        "off_ns": best["off"],
+        "on_ns": best["on"],
+        "toll": best["on"] / max(best["off"], 1e-9),
+    }
+
+
 def run(quick: bool = False,
         backends: Optional[List[str]] = None) -> List[str]:
     iters = 6 if quick else 20
@@ -139,6 +186,16 @@ def run(quick: bool = False,
             res[backend]["ns_per_call"], 1e-9)
         rows.append(f"rpc_path/{backend}_resilient_overhead,"
                     f"{overhead:.2f},x_vs_plain")
+    for backend in backends:
+        if backend not in HOOK_PROBE_BACKENDS:
+            continue
+        t = measure_hook_toll(backend, iters=iters,
+                              rounds=2 if quick else 3)
+        rows.append(f"rpc_path/{backend}+hooks,"
+                    f"{t['on_ns'] / 1e3:.2f},"
+                    f"ns={t['on_ns']:.0f} off_ns={t['off_ns']:.0f}")
+        rows.append(f"rpc_path/{backend}_hook_toll,"
+                    f"{t['toll']:.2f},x_vs_disabled")
     return rows
 
 

@@ -580,8 +580,19 @@ def _rpc_path_records(out: Dict[str, Any]) -> None:
     inline configuration under a full breakers + retry + bulkhead policy —
     so the breaker-aware admission cost (PR 7) has its own trend line.
     Errors are smoke failures — the microbenchmark exercising the fast
-    path must not rot silently."""
-    from .bench_rpc_path import (INLINE_BACKENDS, measure_rpc_cost,
+    path must not rot silently.
+
+    PR 10 adds the **hook-toll cells**: a paired probe of the
+    ``repro.core.instrument`` seam (hooks disabled — the shipped
+    default — vs a no-op ``Hooks()`` installed) on one inline-path and
+    one carrier-path backend.  The disabled seam's zero-cost claim is
+    already enforced by the hard-gated plain ``rpc_path/<backend>``
+    cells above (they always run hooks-disabled, so seam rot shows up
+    against the committed baseline); the ``+hooks`` cells are
+    **warn-only** — the no-op-dispatch toll is diagnostic, not a
+    shipped configuration."""
+    from .bench_rpc_path import (HOOK_PROBE_BACKENDS, INLINE_BACKENDS,
+                                 measure_hook_toll, measure_rpc_cost,
                                  resilient_policy)
     out["rpc_path"] = {}
     variants = [(backend, None) for backend in BENCH_BACKENDS]
@@ -620,6 +631,39 @@ def _rpc_path_records(out: Dict[str, Any]) -> None:
         })
         print(f"rpc_path {label}: ns/call={best} trials={trials}",
               flush=True)
+    for backend in HOOK_PROBE_BACKENDS:
+        label = f"{backend}+hooks"
+        try:
+            probe = measure_hook_toll(backend, iters=4, calls_per_req=32,
+                                      rounds=2)
+        except Exception as exc:  # noqa: BLE001 - cell isolation
+            out["rpc_path"][label] = {"status": "error",
+                                      "error": repr(exc)}
+            out["failures"].append(f"rpc_path/{label}: {exc!r}")
+            continue
+        on = round(probe["on_ns"], 1)
+        out["rpc_path"][label] = {
+            "status": "ok", "ns_per_call": on,
+            "off_ns_per_call": round(probe["off_ns"], 1),
+            "toll": round(probe["toll"], 3),
+        }
+        out["records"].append({
+            "key": f"rpc_path/{label}",
+            "app": "_rpc_path",
+            "backend": backend,
+            "metric": "ns_per_call",
+            "unit": "ns",
+            "direction": "lower",
+            "noise": "micro",
+            # warn-only: a no-op-dispatch toll is diagnostic data — the
+            # hard zero-cost gate is the plain hooks-disabled cell above
+            "gate": "warn-only",
+            "value": on,
+            "errors": 0,
+        })
+        print(f"rpc_path {label}: ns/call={on} "
+              f"off={round(probe['off_ns'], 1)} "
+              f"toll={round(probe['toll'], 3)}x", flush=True)
 
 
 def run_smoke(apps: Optional[Sequence[str]] = None,

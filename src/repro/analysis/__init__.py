@@ -1,0 +1,46 @@
+"""Static and dynamic analysis for the repro runtime (PR 10).
+
+Two layers, one package:
+
+* :mod:`repro.analysis.sanitizer` — a **dynamic concurrency sanitizer**:
+  a :class:`~repro.core.instrument.Hooks` implementation that consumes the
+  runtime's instrumentation events (future set/wait, fiber spawn/park/
+  steal, queue put/take, ring submit/drain, timer arm/fire, trial sever)
+  and runs a happens-before race checker (:mod:`repro.analysis.hb`), a
+  lock-order-inversion graph (:mod:`repro.analysis.lockgraph`), a leaked-
+  future detector and the trial-summary freshness protocol over them.
+  Attach it around any test or workload with
+  :func:`~repro.analysis.sanitizer.attached`.
+
+* :mod:`repro.analysis.lint` — a **static AST lint pass** (stdlib ``ast``
+  only): no blocking primitives in ``repro.apps`` handler bodies, no
+  unseeded randomness or wall-clock reads in ``repro.core``, no ``jax``
+  in the core/apps import closure, and ``BackendStats`` counters mutated
+  only under their documented owner.  Run it as
+  ``python -m repro.analysis.lint src/repro``.
+
+The runtime never imports this package — the dependency points one way
+(analysis -> core), and with no sanitizer installed the instrumentation
+seam costs a single predictable-untaken branch per event site (verified
+by the hooks-off row of ``benchmarks/bench_rpc_path.py``).
+
+Rule catalog, suppression syntax and extension guide: ``docs/ANALYSIS.md``.
+"""
+# Lazy exports (PEP 562): `python -m repro.analysis.lint` must not find the
+# submodule pre-imported by its own package (runpy's double-import warning),
+# and importing the package stays free of submodule side effects.
+_EXPORTS = {
+    "Finding": "sanitizer", "Sanitizer": "sanitizer", "attached": "sanitizer",
+    "LintFinding": "lint", "lint_paths": "lint",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    """Resolve the public surface from its submodule on first touch."""
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{mod}", __name__), name)

@@ -1,0 +1,393 @@
+"""Static AST lint for the repro tree: ``python -m repro.analysis.lint``.
+
+Four rules, each encoding an invariant the runtime's correctness (or the
+paper reproduction's determinism) depends on.  This is deliberately *not*
+general-purpose style linting — ruff owns style; these rules know the
+repository's architecture:
+
+``A101`` no-blocking-in-handlers
+    ``repro.apps`` handler bodies must stay cooperative: no
+    ``time.sleep``, no blocking ``Future.wait``/``wait_done``, no kernel
+    synchronization primitives constructed inline.  A blocking call
+    inside a handler stalls the whole scheduler carrier (every fiber or
+    continuation sharing it), which is exactly the failure mode the
+    effect vocabulary (``Sleep``/``Wait``) exists to prevent.
+
+``A102`` deterministic-core
+    ``repro.core`` must be reproducible run-to-run: no unseeded
+    module-level ``random`` calls (seeded ``random.Random(seed)``
+    instances are fine) and no wall-clock reads (``time.time``,
+    ``datetime.now``); ``time.monotonic``/``perf_counter`` are the
+    sanctioned clocks.
+
+``A103`` no-jax-in-core
+    Neither ``repro.core`` nor ``repro.apps`` may import ``jax`` at
+    module level, directly or transitively through other repro modules.
+    The benchmark matrix runs on a numpy-only environment; a stray jax
+    import would silently skew the CPU-scheduling measurements (and
+    break the numpy-only CI lane).  Function-local imports stay legal —
+    that is the sanctioned lazy-loading pattern.
+
+``A104`` stats-owner
+    ``BackendStats``-surfaced counters may be mutated only under their
+    documented owner: inside a ``with <lock>:`` block, in a class whose
+    counters are owner-thread-only by design (the cooperative
+    schedulers), or in ``__init__`` (before the object is shared).  An
+    unowned ``+= 1`` is a lost-update bug waiting for load.
+
+Suppression: append ``# repro: allow[A101]`` (with the violated rule's
+id) to the flagged line.  Rule catalog and extension guide:
+``docs/ANALYSIS.md``.  Stdlib-only by design (``ast`` + ``pathlib``): the
+lint must run in the numpy-only CI lane before anything is installed.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# -------------------------------------------------------------------- rules
+RULES: Dict[str, str] = {
+    "A101": "blocking call in a repro.apps handler body",
+    "A102": "nondeterminism in repro.core (unseeded RNG / wall clock)",
+    "A103": "jax reachable from repro.core / repro.apps module imports",
+    "A104": "BackendStats counter mutated outside its documented owner",
+}
+
+HINTS: Dict[str, str] = {
+    "A101": "yield Sleep(dt) / yield Wait(fut) instead; handlers must stay "
+            "cooperative",
+    "A102": "use a seeded random.Random(seed) instance and "
+            "time.monotonic()/perf_counter()",
+    "A103": "move the import into the function that needs it (lazy import)",
+    "A104": "mutate under the owner lock (with self._lock:) or keep it "
+            "owner-thread-only",
+}
+
+# A101: blocking threading-primitive constructors and blocking method names
+_BLOCKING_CONSTRUCTORS = {"Lock", "RLock", "Condition", "Event", "Semaphore",
+                          "BoundedSemaphore", "Barrier"}
+_BLOCKING_METHODS = {"wait", "wait_done"}
+
+# A102: module-level clocks/RNG verdicts
+_WALL_CLOCK = {("time", "time"), ("time", "ctime"), ("time", "localtime"),
+               ("time", "gmtime"), ("datetime", "now"), ("date", "today"),
+               ("datetime", "utcnow")}
+_RANDOM_ALLOWED = {"Random", "SystemRandom"}
+
+# A104: the BackendStats counter names a mutation is judged against
+# (mirrors repro.core.metrics.BackendStats; `hwm` variants included where
+# they are per-executor attributes surfaced through stats()).
+_STATS_FIELDS = {
+    "spawns", "spawn_seconds", "switches", "steals", "pool_stalls",
+    "stall_seconds", "queue_depth_hwm", "batched_calls", "flushes_size",
+    "flushes_join", "flushes_timeout", "ring_hwm", "completions_batched",
+    "cq_flushes_size", "cq_flushes_timeout", "cq_flushes_idle", "cq_hwm",
+    "inline_calls", "inline_depth_hwm", "fast_futures", "slow_futures",
+}
+
+# A104: classes whose counters are owner-thread-only by documented design
+# (one kernel thread runs the mutating loop; cross-thread work arrives via
+# the injection queue, never by touching counters).  BackendStats mutates
+# itself in add/delta; CompletionRing guards with its own ring lock but is
+# listed for its lock-held helper methods.
+_OWNER_THREAD_CLASSES = {
+    "FiberScheduler", "BatchFiberScheduler", "CQBatchFiberScheduler",
+    "EventLoopExecutor", "ShardedEventLoopExecutor", "CompletionRing",
+    "BackendStats",
+}
+
+
+@dataclass
+class LintFinding:
+    """One lint violation: location, rule id, message, fix hint."""
+
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        """``path:line: RULE message (hint: ...)`` — the CLI output row."""
+        return (f"{self.path}:{self.line}: {self.rule} {self.message} "
+                f"(hint: {HINTS[self.rule]})")
+
+
+def _suppressed(source_lines: Sequence[str], line: int, rule: str) -> bool:
+    """True when the 1-indexed ``line`` carries ``# repro: allow[RULE]``."""
+    if 1 <= line <= len(source_lines):
+        return f"repro: allow[{rule}]" in source_lines[line - 1]
+    return False
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _module_of(path: Path) -> Optional[str]:
+    """Dotted repro module name for ``path`` (``.../repro/core/x.py`` ->
+    ``repro.core.x``), or None when the file is outside a repro package."""
+    parts = list(path.with_suffix("").parts)
+    if "repro" not in parts:
+        return None
+    parts = parts[parts.index("repro"):]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+# ------------------------------------------------------------ per-file pass
+class _FileLinter(ast.NodeVisitor):
+    """Single-file visitor for A101/A102/A104 (A103 is cross-file)."""
+
+    def __init__(self, rel_path: str, module: str,
+                 source_lines: Sequence[str]) -> None:
+        self.rel_path = rel_path
+        self.module = module
+        self.lines = source_lines
+        self.findings: List[LintFinding] = []
+        self.in_apps = module.startswith("repro.apps")
+        self.in_core = module.startswith("repro.core")
+        self._func_depth = 0
+        self._class_stack: List[str] = []
+        self._with_lock_depth = 0
+        self._in_init = False
+
+    # ------------------------------------------------------------- helpers
+    def _flag(self, node: ast.AST, rule: str, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        if not _suppressed(self.lines, line, rule):
+            self.findings.append(
+                LintFinding(self.rel_path, line, rule, message))
+
+    @staticmethod
+    def _mentions_lock(expr: ast.AST) -> bool:
+        name = _dotted(expr)
+        return name is not None and "lock" in name.lower()
+
+    # ------------------------------------------------------------ traversal
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._enter_func(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._enter_func(node)
+
+    def _enter_func(self, node: ast.AST) -> None:
+        was_init = self._in_init
+        if self._func_depth == 0 and self._class_stack:
+            self._in_init = getattr(node, "name", "") == "__init__"
+        self._func_depth += 1
+        self.generic_visit(node)
+        self._func_depth -= 1
+        self._in_init = was_init
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._class_stack.append(node.name)
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+    def visit_With(self, node: ast.With) -> None:
+        locked = any(self._mentions_lock(item.context_expr)
+                     for item in node.items)
+        if locked:
+            self._with_lock_depth += 1
+        self.generic_visit(node)
+        if locked:
+            self._with_lock_depth -= 1
+
+    # ----------------------------------------------------------------- A101
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _dotted(node.func)
+        if self.in_apps and self._func_depth > 0:
+            if name == "time.sleep":
+                self._flag(node, "A101",
+                           "time.sleep blocks the whole scheduler carrier")
+            elif name is not None and any(
+                    name == f"threading.{c}" for c in _BLOCKING_CONSTRUCTORS):
+                self._flag(node, "A101",
+                           f"kernel primitive {name} constructed in a "
+                           "handler body")
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _BLOCKING_METHODS):
+                self._flag(node, "A101",
+                           f"blocking .{node.func.attr}() in a handler "
+                           "body")
+        if self.in_core:
+            self._check_a102_call(node, name)
+        self.generic_visit(node)
+
+    # ----------------------------------------------------------------- A102
+    def _check_a102_call(self, node: ast.Call, name: Optional[str]) -> None:
+        if name is None:
+            return
+        parts = name.split(".")
+        if parts[0] == "random" and len(parts) == 2 \
+                and parts[1] not in _RANDOM_ALLOWED:
+            self._flag(node, "A102",
+                       f"unseeded module-level RNG call {name}()")
+        elif len(parts) >= 2 and (parts[-2], parts[-1]) in _WALL_CLOCK:
+            self._flag(node, "A102", f"wall-clock read {name}()")
+
+    # ----------------------------------------------------------------- A104
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if self.in_core:
+            self._check_a104(node, node.target)
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if self.in_core:
+            for target in node.targets:
+                self._check_a104(node, target)
+        self.generic_visit(node)
+
+    def _check_a104(self, node: ast.AST, target: ast.AST) -> None:
+        if not (isinstance(target, ast.Attribute)
+                and target.attr in _STATS_FIELDS):
+            return
+        if self._in_init or self._with_lock_depth > 0:
+            return
+        if any(c in _OWNER_THREAD_CLASSES for c in self._class_stack):
+            return
+        self._flag(node, "A104",
+                   f"counter .{target.attr} mutated with no owning lock "
+                   "held and outside an owner-thread-only class")
+
+
+# ------------------------------------------------------- cross-file: A103
+def _top_level_imports(tree: ast.Module, module: str) -> Set[str]:
+    """Absolute dotted names imported at module level (relative imports
+    resolved against ``module``).  Imports nested in functions/classes are
+    lazy by construction and excluded; top-level ``if``/``try`` bodies are
+    included — they execute at import time when the branch is live."""
+    out: Set[str] = set()
+    pkg_parts = module.split(".")[:-1]
+
+    def walk(body: Iterable[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, ast.Import):
+                for alias in stmt.names:
+                    out.add(alias.name)
+            elif isinstance(stmt, ast.ImportFrom):
+                if stmt.level == 0:
+                    base = stmt.module or ""
+                else:
+                    anchor = pkg_parts[:len(pkg_parts) - (stmt.level - 1)]
+                    base = ".".join(anchor + ([stmt.module]
+                                              if stmt.module else []))
+                if base:
+                    out.add(base)
+                    for alias in stmt.names:
+                        out.add(f"{base}.{alias.name}")
+            elif isinstance(stmt, (ast.If, ast.Try)):
+                walk(stmt.body)
+                for handler in getattr(stmt, "handlers", ()):
+                    walk(handler.body)
+                walk(getattr(stmt, "orelse", ()))
+                walk(getattr(stmt, "finalbody", ()))
+
+    walk(tree.body)
+    return out
+
+
+def _check_jax_closure(trees: Dict[str, Tuple[Path, ast.Module, List[str]]]
+                       ) -> List[LintFinding]:
+    """A103 over the whole file set: flag repro.core/.apps modules whose
+    module-level import closure (within the repro tree) reaches jax."""
+    imports: Dict[str, Set[str]] = {
+        mod: _top_level_imports(tree, mod)
+        for mod, (_, tree, _) in trees.items()}
+
+    def reaches_jax(mod: str, seen: Set[str]) -> Optional[List[str]]:
+        if mod in seen:
+            return None
+        seen.add(mod)
+        for imp in sorted(imports.get(mod, ())):
+            if imp == "jax" or imp.startswith("jax."):
+                return [mod, "jax"]
+            # resolve the import to a repro module in the lint set (the
+            # name itself, or the package it lives in)
+            for cand in (imp, imp.rsplit(".", 1)[0]):
+                if cand in imports and cand != mod:
+                    chain = reaches_jax(cand, seen)
+                    if chain is not None:
+                        return [mod] + chain
+                    break
+        return None
+
+    findings: List[LintFinding] = []
+    for mod in sorted(trees):
+        if not (mod.startswith("repro.core") or mod.startswith("repro.apps")):
+            continue
+        chain = reaches_jax(mod, set())
+        if chain is not None:
+            path, _, lines = trees[mod]
+            if not _suppressed(lines, 1, "A103"):
+                findings.append(LintFinding(
+                    str(path), 1, "A103",
+                    "module-level import chain reaches jax: "
+                    + " -> ".join(chain)))
+    return findings
+
+
+# ------------------------------------------------------------------ driver
+def lint_paths(paths: Sequence[str]) -> List[LintFinding]:
+    """Lint every ``.py`` file under ``paths``; returns all findings,
+    sorted by (path, line, rule)."""
+    files: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            files.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            files.append(path)
+    findings: List[LintFinding] = []
+    trees: Dict[str, Tuple[Path, ast.Module, List[str]]] = {}
+    for f in files:
+        source = f.read_text(encoding="utf-8")
+        try:
+            tree = ast.parse(source, filename=str(f))
+        except SyntaxError as exc:
+            findings.append(LintFinding(
+                str(f), exc.lineno or 1, "A103",
+                f"unparseable file: {exc.msg}"))
+            continue
+        module = _module_of(f)
+        lines = source.splitlines()
+        if module is not None:
+            trees[module] = (f, tree, lines)
+            linter = _FileLinter(str(f), module, lines)
+            linter.visit(tree)
+            findings.extend(linter.findings)
+    findings.extend(_check_jax_closure(trees))
+    findings.sort(key=lambda x: (x.path, x.line, x.rule))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI: lint the given paths (default ``src/repro``); exit 1 on any
+    finding, printing one ``path:line: RULE message (hint: ...)`` row per
+    violation."""
+    args = list(sys.argv[1:] if argv is None else argv)
+    paths = args or ["src/repro"]
+    findings = lint_paths(paths)
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"repro.analysis.lint: {len(findings)} finding(s)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,90 @@
+"""Lock-order graph for the dynamic sanitizer: acquisition-order cycles.
+
+Every ``lock_acquire(key)`` event observed while the same thread already
+holds other locks adds directed edges ``held -> key`` to a global graph.
+A cycle in that graph is a potential deadlock: two threads can each hold
+one lock of the cycle and block on the next (the classic AB/BA
+inversion), even if the run at hand happened to get away with it.
+
+Keys are stable strings (e.g. ``"svc:frontend.state"``), not object ids,
+so edges aggregate across lock instances playing the same role and the
+report names something a human can find.  Edges remember one sample stack
+label per endpoint order so findings can say *where* each order was
+established.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set, Tuple
+
+
+class LockOrderGraph:
+    """Directed acquisition-order graph with per-thread held stacks."""
+
+    def __init__(self) -> None:
+        self._held: Dict[int, List[str]] = {}        # tid -> held keys, order
+        self._edges: Dict[str, Set[str]] = {}        # key -> keys acquired after
+        self._reentrant: Set[Tuple[int, str]] = set()
+
+    # -------------------------------------------------------------- events
+    def acquire(self, tid: int, key: str) -> None:
+        """Thread ``tid`` acquired ``key`` (called with the lock held)."""
+        held = self._held.setdefault(tid, [])
+        if key in held:
+            # re-entrant acquire (RLock): no new ordering information
+            self._reentrant.add((tid, key))
+            held.append(key)
+            return
+        for outer in held:
+            self._edges.setdefault(outer, set()).add(key)
+        held.append(key)
+
+    def release(self, tid: int, key: str) -> None:
+        """Thread ``tid`` released ``key`` (out-of-order release is fine)."""
+        held = self._held.get(tid)
+        if held is None:
+            return
+        # remove the innermost matching hold (re-entrant releases unwind)
+        for i in range(len(held) - 1, -1, -1):
+            if held[i] == key:
+                del held[i]
+                return
+
+    # -------------------------------------------------------------- report
+    def cycles(self) -> List[List[str]]:
+        """Every elementary cycle reachable in the edge set, as key lists
+        (``[a, b, a]`` for an AB/BA inversion).  The graph is tiny (tens of
+        keys), so a DFS per node is plenty."""
+        out: List[List[str]] = []
+        seen_cycles: Set[Tuple[str, ...]] = set()
+        for start in sorted(self._edges):
+            path: List[str] = []
+            on_path: Set[str] = set()
+
+            def dfs(node: str) -> None:
+                path.append(node)
+                on_path.add(node)
+                for nxt in sorted(self._edges.get(node, ())):
+                    if nxt == start and len(path) > 1:
+                        cyc = path + [start]
+                        canon = tuple(sorted(set(cyc)))
+                        if canon not in seen_cycles:
+                            seen_cycles.add(canon)
+                            out.append(list(cyc))
+                    elif nxt not in on_path and nxt > start:
+                        # only explore nodes ordered after `start`: each
+                        # cycle is then found exactly once, rooted at its
+                        # smallest key
+                        dfs(nxt)
+                path.pop()
+                on_path.discard(node)
+
+            dfs(start)
+        return out
+
+    def edges(self) -> Dict[str, Set[str]]:
+        """The raw acquisition-order edge set (for reports and tests)."""
+        return {k: set(v) for k, v in self._edges.items()}
+
+    def currently_held(self, tid: int) -> List[str]:
+        """Keys ``tid`` holds right now, outermost first."""
+        return list(self._held.get(tid, ()))

@@ -60,6 +60,7 @@ import time
 from collections import deque
 from typing import Any, Generator, List, Optional, Tuple
 
+from . import instrument
 from .calibrate import burn
 from .context import RequestContext, session_key
 from .effects import (AsyncRpc, Compute, CurrentContext, Offload, Sleep,
@@ -123,6 +124,9 @@ class EventLoopExecutor:
         self._thread = threading.Thread(target=self._loop,
                                         name=f"{self.name}-loop", daemon=True)
         self._thread.start()
+        h = instrument.hooks
+        if h is not None:
+            h.carrier_start(self, f"{self.name}-loop")
 
     def stop(self) -> None:
         """Signal the loop thread to exit and join it (bounded)."""
@@ -131,15 +135,24 @@ class EventLoopExecutor:
             self._cond.notify()
         if self._thread is not None:
             self._thread.join(timeout=5.0)
+        h = instrument.hooks
+        if h is not None:
+            h.carrier_stop(self)
 
     def deliver(self, gen: Generator, reply: Future,
                 ctx: Optional[RequestContext] = None) -> None:
         """Inject the request as a continuation on the loop's inbox."""
+        h = instrument.hooks
+        if h is not None:
+            h.loop_spawn(self, reply)
         self._inject(gen, reply, None, ctx)
 
     # ------------------------------------------------------------ injection
     def _inject(self, gen: Generator, fut: Future, resume: Resume,
                 ctx: Optional[RequestContext] = None) -> None:
+        h = instrument.hooks
+        if h is not None:
+            h.queue_put(self)
         with self._cond:
             self._inbox.append((gen, fut, resume, ctx))
             depth = len(self._inbox) + len(self._run)
@@ -150,6 +163,9 @@ class EventLoopExecutor:
     def _push_local(self, gen: Generator, fut: Future,
                     ctx: Optional[RequestContext] = None) -> None:
         """Owner thread only: no lock, no wakeup — the loop is already awake."""
+        h = instrument.hooks
+        if h is not None:
+            h.loop_spawn(self, fut)
         self._run.append((gen, fut, None, ctx))
         depth = len(self._run) + len(self._inbox)
         if depth > self.queue_depth_hwm:
@@ -157,8 +173,12 @@ class EventLoopExecutor:
 
     # ------------------------------------------------------------ main loop
     def _loop(self) -> None:
+        h = instrument.hooks
+        if h is not None:
+            h.sched_loop(self)
         while True:
             with self._cond:
+                drained = bool(self._inbox)
                 while self._inbox:
                     self._run.append(self._inbox.popleft())
                 if not self._run:
@@ -167,8 +187,13 @@ class EventLoopExecutor:
                     timeout = self._timers.seconds_until_next(time.monotonic())
                     if timeout is None or timeout > 0:
                         self._cond.wait(timeout=timeout)
+                    drained = drained or bool(self._inbox)
                     while self._inbox:
                         self._run.append(self._inbox.popleft())
+            if drained:
+                h = instrument.hooks
+                if h is not None:
+                    h.queue_take(self)
             for cont in self._timers.pop_due(time.monotonic()):
                 if cont and cont[0] is _EL_DEADLINE:
                     _, claim, gen, fut, ctx = cont
@@ -255,6 +280,9 @@ class EventLoopExecutor:
     def _sleep(self, gen: Generator, fut: Future, seconds: float,
                ctx: Optional[RequestContext]) -> None:
         """Timer-park a sleeping continuation, truncated at its deadline."""
+        h = instrument.hooks
+        if h is not None:
+            h.loop_spawn(self, fut)
         deadline = ctx.deadline if ctx is not None else None
         wake = time.monotonic() + max(seconds, 0.0)
         if deadline is not None and deadline <= wake:
@@ -404,6 +432,11 @@ class EventLoopExecutor:
               waits: List[Future],
               ctx: Optional[RequestContext] = None) -> None:
         deadline = ctx.deadline if ctx is not None else None
+        h = instrument.hooks
+        if h is not None:
+            h.loop_spawn(self, fut)
+            for w in waits:
+                h.future_join(w)
         claim: Optional[Once] = None
         if deadline is not None:
             # arm the expiry on the loop's own wheel (we ARE the owner
@@ -529,6 +562,9 @@ class ShardedEventLoopExecutor:
             shard = self.shard_for(session_key(ctx.session), self.n_shards)
         else:
             shard = self.shard_for(next(self._ticket), self.n_shards)
+        h = instrument.hooks
+        if h is not None:
+            h.shard_handoff(self, shard)
         if ctx is None:  # common path keeps the pre-context signature
             self._shards[shard].deliver(gen, reply)
         else:

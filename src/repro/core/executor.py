@@ -83,6 +83,7 @@ import time
 from collections import deque
 from typing import Any, Callable, Dict, Generator, List, Optional
 
+from . import instrument
 from .calibrate import burn
 from .context import RequestContext
 from .effects import (AsyncRpc, Compute, CurrentContext, Offload, Sleep,
@@ -159,11 +160,14 @@ class ThreadExecutor(Executor):
     # ------------------------------------------------------------ lifecycle
     def start(self) -> None:
         """Spawn the dispatcher threads that drain the mailbox."""
+        h = instrument.hooks
         for i in range(self.n_workers):
             t = threading.Thread(target=self._dispatch_loop,
                                  name=f"{self.name}-disp{i}", daemon=True)
             t.start()
             self._threads.append(t)
+            if h is not None:
+                h.carrier_start(self, t.name)
 
     def stop(self) -> None:
         """Poison and join every dispatcher."""
@@ -172,10 +176,16 @@ class ThreadExecutor(Executor):
         for t in self._threads:
             t.join(timeout=5.0)
         self._threads.clear()
+        h = instrument.hooks
+        if h is not None:
+            h.carrier_stop(self)
 
     def deliver(self, gen: Generator, reply: Future,
                 ctx: Optional[RequestContext] = None) -> None:
         """Queue the request on the shared dispatcher mailbox."""
+        h = instrument.hooks
+        if h is not None:
+            h.queue_put(self)
         self._mailbox.put((gen, reply, ctx))
 
     # ------------------------------------------------------------- dispatch
@@ -185,11 +195,14 @@ class ThreadExecutor(Executor):
             if item is _SHUTDOWN:
                 return
             gen, reply, ctx = item
-            self._drive(gen, reply, ctx)
+            self._drive(gen, reply, ctx)  # _drive emits the queue_take edge
 
     def _drive(self, gen: Generator, reply: Future,
                ctx: Optional[RequestContext] = None) -> None:
         """Run a handler generator to completion *in this kernel thread*."""
+        h = instrument.hooks
+        if h is not None:
+            h.queue_take(self)      # join the spawner's release edge
         deadline = ctx.deadline if ctx is not None else None
         if deadline is not None and time.monotonic() >= deadline:
             # the request expired while queued in the mailbox: fail it
@@ -309,6 +322,10 @@ class ThreadExecutor(Executor):
                        ctx: Optional[RequestContext] = None) -> None:
         """std::async semantics: one fresh kernel thread per async call."""
         t0 = time.perf_counter()
+        h = instrument.hooks
+        if h is not None:
+            h.queue_put(self)       # thread start is a release edge
+            h.carrier_start(self, "async-carrier")
         t = threading.Thread(target=self._drive, args=(gen, fut, ctx),
                              daemon=True)
         t.start()
@@ -384,12 +401,15 @@ class PooledThreadExecutor(ThreadExecutor):
         """Spawn dispatchers plus the bounded carrier pool."""
         super().start()  # dispatchers
         self._shutdown = False
+        h = instrument.hooks
         for i in range(self.pool_size):
             t = threading.Thread(target=self._pool_loop,
                                  name=f"{self.name}-pool{i}", daemon=True)
             t.start()
             self._pool.append(t)
             self._pool_ids.add(t.ident)
+            if h is not None:
+                h.carrier_start(self, t.name)
 
     def stop(self) -> None:
         """Stop dispatchers, then drain and join the pool."""
@@ -420,17 +440,25 @@ class PooledThreadExecutor(ThreadExecutor):
             if resume is None:
                 self._drive(gen, fut, ctx)  # classic blocking carrier
             else:
+                h = instrument.hooks
+                if h is not None:
+                    h.queue_take(self)
                 self._run_suspendable(gen, fut, resume, ctx)
 
     def _take_work_nowait(self):
+        item = None
         with self._qlock:
             if self._resumes:
-                return self._resumes.popleft()
-            if self._carriers:
+                item = self._resumes.popleft()
+            elif self._carriers:
                 gen, fut, ctx = self._carriers.popleft()
                 self._space_cv.notify()
-                return (gen, fut, None, ctx)
-        return None
+                item = (gen, fut, None, ctx)
+        if item is not None:
+            h = instrument.hooks
+            if h is not None:
+                h.queue_take(self)
+        return item
 
     # ----------------------------------------------------------- wait path
     def _interpret(self, eff: Any, ctx: Optional[RequestContext] = None) -> Any:
@@ -530,6 +558,10 @@ class PooledThreadExecutor(ThreadExecutor):
         # expiry against the done-callback; a first-writer-wins claim
         # guarantees exactly one of them enqueues the resume.
         deadline = ctx.deadline if ctx is not None else None
+        h = instrument.hooks
+        if h is not None:
+            for w in waits:
+                h.future_join(w)
         claim = Once() if deadline is not None else None
         if claim is not None:
             def _expire() -> None:
@@ -573,6 +605,9 @@ class PooledThreadExecutor(ThreadExecutor):
         # unbounded on purpose: continuations are not new admissions (the
         # carrier was counted and bounded at submission), and refusing them
         # could deadlock the very join they resolve
+        h = instrument.hooks
+        if h is not None:
+            h.queue_put(self)
         with self._qlock:
             self._resumes.append((gen, fut, resume, ctx))
             self._work_cv.notify()
@@ -584,6 +619,10 @@ class PooledThreadExecutor(ThreadExecutor):
         queued = False
         stalled = False
         t0 = time.perf_counter()
+        h = instrument.hooks
+        if h is not None:
+            h.queue_put(self)
+            h.carrier_start(self, "pooled-carrier")
         with self._qlock:
             if len(self._carriers) >= self.queue_bound:
                 stalled = True
@@ -710,13 +749,19 @@ class FiberExecutor(Executor):
 
     def start(self) -> None:
         """Start every scheduler thread."""
+        h = instrument.hooks
         for s in self._scheds:
             s.start()
+            if h is not None:
+                h.carrier_start(self, s.name)
 
     def stop(self) -> None:
         """Stop every scheduler thread (bounded joins)."""
         for s in self._scheds:
             s.stop()
+        h = instrument.hooks
+        if h is not None:
+            h.carrier_stop(self)
 
     def deliver(self, gen: Generator, reply: Future,
                 ctx: Optional[RequestContext] = None) -> None:

@@ -50,6 +50,7 @@ import time
 from collections import deque
 from typing import Any, Generator, List, Optional, Tuple
 
+from . import instrument
 from .calibrate import burn
 from .context import RequestContext
 from .effects import (AsyncRpc, Compute, CurrentContext, Effect, Offload,
@@ -185,12 +186,20 @@ class FiberScheduler:
                        ctx: Optional[RequestContext] = None) -> Future:
         """Thread-safe: create a fiber from outside the scheduler thread."""
         fib = Fiber(gen, future, name, ctx)
+        h = instrument.hooks
+        if h is not None:
+            h.fiber_spawn(self, fib)
+            h.queue_put(self)
         with self._cond:
             self._injected.append((fib, None))
             self._cond.notify()
         return fib.future
 
     def _inject(self, fib: Fiber, value: Any) -> None:
+        h = instrument.hooks
+        if h is not None:
+            h.fiber_resume(self, fib)
+            h.queue_put(self)
         with self._cond:
             self._injected.append((fib, value))
             self._cond.notify()
@@ -219,14 +228,22 @@ class FiberScheduler:
     def run(self) -> None:
         """Owner-thread main loop: inject, drive ready fibers, idle-park."""
         self._ident = threading.get_ident()  # owner ident for this life
+        h = instrument.hooks
+        if h is not None:
+            h.sched_loop(self)
         while True:
             # 1. pull external events / decide idle sleep under the lock
             with self._cond:
+                drained = bool(self._injected)
                 while self._injected:
                     self._ready.append(self._injected.popleft())
                 have_ready = bool(self._ready)
                 surplus = self._steal and len(self._ready) > 1
                 stopping = self._stop
+            if drained:
+                h = instrument.hooks
+                if h is not None:
+                    h.queue_take(self)
             if surplus:
                 # round-robin delivery / resumptions piled up here while a
                 # sibling may be parked: hand it a chance to steal.
@@ -240,6 +257,7 @@ class FiberScheduler:
                 have_ready = True
             if not have_ready:
                 with self._cond:
+                    drained = bool(self._injected)
                     while self._injected:
                         self._ready.append(self._injected.popleft())
                     if not self._ready:
@@ -278,8 +296,13 @@ class FiberScheduler:
                                     if self._group is not None:
                                         self._group.unregister_idle(self)
                         self._parked = False
+                        drained = drained or bool(self._injected)
                         while self._injected:
                             self._ready.append(self._injected.popleft())
+                if drained:
+                    h = instrument.hooks
+                    if h is not None:
+                        h.queue_take(self)
             # 2. fire due timers (the timer wheel is owner-thread-only; the
             #    resumed fibers go through _push_ready so thieves see them)
             for item in self._timers.pop_due(time.monotonic()):
@@ -338,6 +361,9 @@ class FiberScheduler:
         if not self._steal:
             self._ready.append(item)
             return
+        h = instrument.hooks
+        if h is not None:
+            h.queue_put(self)  # thieves may take this push cross-thread
         with self._cond:
             self._ready.append(item)
             surplus = len(self._ready) > 1
@@ -348,7 +374,12 @@ class FiberScheduler:
         if not self._steal:
             return self._ready.popleft() if self._ready else None
         with self._cond:
-            return self._ready.popleft() if self._ready else None
+            item = self._ready.popleft() if self._ready else None
+        if item is not None:
+            h = instrument.hooks
+            if h is not None:
+                h.queue_take(self)
+        return item
 
     def _try_steal(self) -> bool:
         """Pull ready fibers from the most loaded sibling.  Takes up to half
@@ -368,6 +399,10 @@ class FiberScheduler:
         if not grabbed:
             return False
         grabbed.reverse()               # preserve the victim's FIFO order
+        h = instrument.hooks
+        if h is not None:
+            h.fiber_steal(victim, self, len(grabbed))
+            h.queue_take(victim)
         with self._cond:
             self._ready.extend(grabbed)
         self.steals += len(grabbed)
@@ -454,6 +489,9 @@ class FiberScheduler:
                                                  eff.payload, hop),
                             name=f"carrier->{eff.dest}", ctx=hop)
             self.fibers_spawned += 1
+            h = instrument.hooks
+            if h is not None:
+                h.fiber_spawn(self, carrier)
             self._push_ready((carrier, None))
             return carrier.future, False
 
@@ -465,6 +503,10 @@ class FiberScheduler:
                 except BaseException as exc:
                     return (_RAISE, exc), False
             claim = self._arm_deadline(fib)
+            h = instrument.hooks
+            if h is not None:
+                h.fiber_park(self, fib)
+                h.future_join(fut)
             fut.add_done_callback(
                 lambda f, fib=fib, claim=claim: self._resume_on(f, fib, claim))
             return None, True
@@ -478,6 +520,11 @@ class FiberScheduler:
                     return (_RAISE, exc), False
             latch = _CountdownLatch(len(futs))
             claim = self._arm_deadline(fib)
+            h = instrument.hooks
+            if h is not None:
+                h.fiber_park(self, fib)
+                for f in futs:
+                    h.future_join(f)
             for f in futs:
                 f.add_done_callback(
                     lambda _f, fib=fib, futs=futs, latch=latch, claim=claim:
@@ -485,6 +532,9 @@ class FiberScheduler:
             return None, True
 
         if isinstance(eff, Sleep):
+            h = instrument.hooks
+            if h is not None:
+                h.fiber_park(self, fib)
             wake = time.monotonic() + max(eff.seconds, 0.0)
             if fib.deadline is not None and fib.deadline <= wake:
                 # the sleep outlives the request: park the expiry instead of
@@ -506,6 +556,9 @@ class FiberScheduler:
         if isinstance(eff, SpawnLocal):
             sub = Fiber(eff.genfn(*eff.args), name="local")
             self.fibers_spawned += 1
+            h = instrument.hooks
+            if h is not None:
+                h.fiber_spawn(self, sub)
             self._push_ready((sub, None))
             return sub.future, False
 
@@ -621,6 +674,9 @@ class FiberScheduler:
                 # call's context, so parked deadline expiry still arms)
                 fib = Fiber(gen, ctx=ctx)
                 self.fibers_spawned += 1
+                h = instrument.hooks
+                if h is not None:
+                    h.fiber_spawn(self, fib)
                 send_value, parked = self._interpret(fib, eff)
                 if parked:
                     return fib.future
@@ -740,6 +796,9 @@ class BatchFiberScheduler(FiberScheduler):
                 # arm the flush deadline when the ring goes non-empty
                 self._timers.push(time.monotonic() + self.flush_after,
                                   (_FLUSH, self._ring_gen))
+            h = instrument.hooks
+            if h is not None:
+                h.ring_submit(self)
             self._ring.append((eff.dest, eff.method, eff.payload, fut, hop))
             if len(self._ring) > self.ring_hwm:
                 self.ring_hwm = len(self._ring)
@@ -774,6 +833,10 @@ class BatchFiberScheduler(FiberScheduler):
         carrier = Fiber(self._batch_carrier(batch),
                         name=f"batch-carrier[{len(batch)}]")
         self.fibers_spawned += 1  # one carrier per *batch*, not per call
+        h = instrument.hooks
+        if h is not None:
+            h.ring_drain(self, len(batch), reason)
+            h.fiber_spawn(self, carrier)
         self._push_ready((carrier, None))
 
     def _batch_carrier(self, batch: List[Tuple[str, str, Any, Future,
@@ -837,6 +900,10 @@ class CompletionRing:
         whole ring when this append filled it to ``size`` (the appender
         must deliver it), ``first`` is True when the ring just went
         non-empty (the appender sends the single arming wakeup)."""
+        h = instrument.hooks
+        if h is not None:
+            h.ring_submit(self)
+            h.queue_put(self)
         with self._lock:
             self._entries.append((fib, value))
             n = len(self._entries)
@@ -863,7 +930,11 @@ class CompletionRing:
                 self.flushes_timeout += 1
             else:
                 self.flushes_idle += 1
-            return batch
+        h = instrument.hooks
+        if h is not None:
+            h.ring_drain(self, len(batch), reason)
+            h.queue_take(self)
+        return batch
 
     @property
     def gen(self) -> int:
@@ -940,6 +1011,10 @@ class CQBatchFiberScheduler(BatchFiberScheduler):
         batch, first = self._cq.append(fib, value)
         if batch is not None:
             # size flush: the whole batch crosses in ONE injection
+            h = instrument.hooks
+            if h is not None:
+                h.ring_drain(self._cq, len(batch), "size")
+                h.queue_put(self)
             with self._cond:
                 self._injected.extend(batch)
                 self._cond.notify()

@@ -33,6 +33,8 @@ import itertools
 import threading
 from typing import Any, Callable, List, Optional
 
+from . import instrument
+
 # Guards only the one-time materialization of a future's Condition (two
 # blocking waiters racing to create it).  Shared module-wide because the
 # blocking-wait path is already paying a kernel sync; the cooperative fast
@@ -64,6 +66,9 @@ class Future:
             raise FutureError("Future already resolved")
         self._value = value
         self._done = True  # publish: GIL orders the value store before this
+        h = instrument.hooks
+        if h is not None:
+            h.future_set(self)
         self._on_resolved()
 
     def set_exception(self, exc: BaseException) -> None:
@@ -79,6 +84,9 @@ class Future:
         # wait loop would grow the chain without bound.
         self._exc_tb = exc.__traceback__
         self._done = True
+        h = instrument.hooks
+        if h is not None:
+            h.future_set(self)
         self._on_resolved()
 
     def _on_resolved(self) -> None:
@@ -127,10 +135,16 @@ class Future:
     def wait(self, timeout: Optional[float] = None) -> Any:
         """Blocking get — the *thread* backend's join. Re-raises exceptions."""
         if not self._done:
+            h = instrument.hooks
+            if h is not None:
+                h.future_block(self, timeout)
             cond = self._materialize_cond()
             with cond:
-                if not cond.wait_for(lambda: self._done, timeout=timeout):
-                    raise TimeoutError("Future.wait timed out")
+                done = cond.wait_for(lambda: self._done, timeout=timeout)
+            if h is not None:
+                h.future_unblock(self, done)
+            if not done:
+                raise TimeoutError("Future.wait timed out")
         if self._exc is not None:
             # re-raise from the stored snapshot so multi-waiter re-raises
             # never compound each other's frames (see set_exception)
@@ -144,9 +158,15 @@ class Future:
         work-helping), not the value."""
         if self._done:
             return True
+        h = instrument.hooks
+        if h is not None:
+            h.future_block(self, timeout)
         cond = self._materialize_cond()
         with cond:
-            return cond.wait_for(lambda: self._done, timeout=timeout)
+            done = cond.wait_for(lambda: self._done, timeout=timeout)
+        if h is not None:
+            h.future_unblock(self, done)
+        return done
 
     def exception(self) -> Optional[BaseException]:
         """Non-raising outcome peek: the stored exception of a *resolved*

@@ -37,6 +37,7 @@ from typing import Any, Callable, List, Optional, Tuple
 
 import numpy as np
 
+from . import instrument
 from .context import RequestContext
 from .metrics import BackendStats, LatencyRecorder, PeakResult, TrialResult
 from .service import App
@@ -196,6 +197,9 @@ def run_trial(app: App, make_request: RequestFactory, rate: float,
         abandoned = outstanding[0]
         leftovers = list(inflight)
         inflight.clear()
+    h = instrument.hooks
+    if h is not None:
+        h.trial_sever(rec)
     app._loadgen_leftovers = leftovers  # next trial settles on these
 
     elapsed = duration  # completions attributed to the offered window

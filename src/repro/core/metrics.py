@@ -8,6 +8,8 @@ from typing import Dict, List
 
 import numpy as np
 
+from . import instrument
+
 
 class CacheStats:
     """Lock-free app-wide cache-tier counters (hits/misses).
@@ -188,12 +190,18 @@ class LatencyRecorder:
 
     def record(self, seconds: float) -> None:
         """Record one completed request's latency."""
+        h = instrument.hooks
+        if h is not None:
+            h.recorder_write(self)
         with self._lock:
             self._samples.append(seconds)
             self.completed += 1
 
     def record_error(self) -> None:
         """Count one errored request (no latency sample)."""
+        h = instrument.hooks
+        if h is not None:
+            h.recorder_write(self)
         with self._lock:
             self.errors += 1
 
@@ -204,6 +212,9 @@ class LatencyRecorder:
 
     def summary(self) -> Dict[str, float]:
         """n/mean/p50/p90/p99 over the current samples (NaNs when empty)."""
+        h = instrument.hooks
+        if h is not None:
+            h.recorder_summary(self)
         xs = np.asarray(self.snapshot(), dtype=np.float64)
         if xs.size == 0:
             return {"n": 0, "mean": float("nan"), "p50": float("nan"),

@@ -56,6 +56,15 @@ from dataclasses import dataclass
 from typing import Callable, Optional
 
 
+# Backoff-jitter RNG.  A dedicated seeded instance, not the module-global
+# ``random`` functions: repro.core is deterministic-by-construction (lint
+# rule A102), and jitter drawn from an unseeded global would make retry
+# schedules — and therefore breaker windows — unreproducible across runs.
+# One shared instance is fine: jitter needs decorrelation, not statistical
+# independence, and draws are a single C-level call under the GIL.
+_JITTER_RNG = random.Random(0x5EED)
+
+
 class DeadlineExceeded(RuntimeError):
     """The request's deadline expired before a reply was produced."""
 
@@ -93,7 +102,7 @@ class RetryPolicy:
         """Delay before attempt ``attempt + 1`` (``attempt`` >= 1 failed)."""
         raw = min(self.max_backoff, self.base_backoff * (2 ** (attempt - 1)))
         lo = 1.0 - self.jitter
-        return raw * (lo + 2.0 * self.jitter * random.random())
+        return raw * (lo + 2.0 * self.jitter * _JITTER_RNG.random())
 
 
 class RetryBudget:

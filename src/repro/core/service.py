@@ -15,6 +15,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
 
+from . import instrument
 from .context import RequestContext
 from .effects import Sleep, Wait
 from .executor import Executor, make_executor
@@ -380,20 +381,42 @@ class App:
 
     def stop(self) -> None:
         """Idempotent: a double stop() must not re-join executors or poison
-        the offload pool with extra shutdown sentinels."""
+        the offload pool with extra shutdown sentinels.
+
+        Shutdown-ordering contract (audited by the PR 10 sanitizer's
+        lock-order / future-leak rules):
+
+        1. ``_started = False`` — new sends fail fast;
+        2. settle blackholed replies while schedulers still run (their
+           done-callbacks may resume parked waiters);
+        3. stop executors, then the offload pool;
+        4. drain the kernel timer with ``fire_pending=True`` — a pending
+           retry backoff fires early, observes the stopped app and fails
+           the reply it owes.  Dropping it (the pre-PR-10 behaviour)
+           orphaned the caller: a leaked, waited-but-never-set future.
+        """
         if not self._started:
             return
+        h = instrument.hooks
         self._started = False  # send() fails fast while teardown runs
         if self.fault_plan is not None:
             # settle blackholed replies *before* the executors stop: their
             # done-callbacks may resume parked waiters, which needs live
             # schedulers.  No orphaned waiters survive teardown (same
             # discipline as the loadgen leftovers).
+            if h is not None:
+                h.stop_phase(self, "settle_blackholed")
             self.fault_plan.settle_blackholed()
+        if h is not None:
+            h.stop_phase(self, "executor_stop")
         for svc in self.services.values():
             svc.executor.stop()
+        if h is not None:
+            h.stop_phase(self, "offload_stop")
         self.offload_pool.stop()
-        self._timer.stop()
+        if h is not None:
+            h.stop_phase(self, "timer_stop")
+        self._timer.stop(fire_pending=True)
 
     def __enter__(self) -> "App":
         self.start()

@@ -24,6 +24,8 @@ import threading
 import time
 from typing import Any, Callable, List, Optional, Tuple
 
+from . import instrument
+
 
 class TimerWheel:
     """Deadline-ordered queue of opaque payloads (min-heap + FIFO ties)."""
@@ -37,6 +39,9 @@ class TimerWheel:
     def push(self, deadline: float, item: Any) -> None:
         """Schedule ``item`` to become due at monotonic time ``deadline``."""
         heapq.heappush(self._heap, (deadline, next(self._seq), item))
+        h = instrument.hooks
+        if h is not None:
+            h.timer_arm(self, deadline)
 
     def pop_due(self, now: float) -> List[Any]:
         """Remove and return every item whose deadline has passed, in
@@ -44,6 +49,10 @@ class TimerWheel:
         due: List[Any] = []
         while self._heap and self._heap[0][0] <= now:
             due.append(heapq.heappop(self._heap)[2])
+        if due:
+            h = instrument.hooks
+            if h is not None:
+                h.timer_fire(self, len(due))
         return due
 
     def next_deadline(self) -> Optional[float]:
@@ -95,17 +104,42 @@ class TimerThread:
                 self._thread.start()
             else:
                 self._cond.notify()  # may have become the new earliest
+        h = instrument.hooks
+        if h is not None:
+            h.timer_arm(self, deadline)
 
-    def stop(self) -> None:
-        """Stop the timer thread (idempotent; pending entries are dropped)."""
+    def stop(self, fire_pending: bool = False) -> None:
+        """Stop the timer thread (idempotent).
+
+        With ``fire_pending=False`` pending entries are silently dropped —
+        acceptable only when nothing downstream is waiting on them.  With
+        ``fire_pending=True`` every pending callback runs *now* (early, on
+        the stopping thread): shutdown paths use this so a pending retry
+        backoff still fires, observes the stopped app, and fails the reply
+        it owes instead of orphaning the caller (see ``App.stop``).
+        """
         with self._cond:
             thread = self._thread
             self._stop = True
+            pending = [entry[2] for entry in sorted(self._heap)]
+            self._heap.clear()
             self._cond.notify_all()
         if thread is not None:
             thread.join(timeout=5.0)
         with self._cond:
             self._thread = None
+        h = instrument.hooks
+        if pending:
+            if fire_pending:
+                if h is not None:
+                    h.timer_fire(self, len(pending))
+                for fn in pending:
+                    try:
+                        fn()
+                    except Exception:
+                        pass  # same contract as _loop: callbacks never kill us
+            elif h is not None:
+                h.timer_cancel(self, len(pending))
 
     def _loop(self) -> None:
         while True:
@@ -120,6 +154,9 @@ class TimerThread:
                     timeout = (self._heap[0][0] - now) if self._heap else None
                     self._cond.wait(timeout=timeout)
                     continue
+            h = instrument.hooks
+            if h is not None:
+                h.timer_fire(self, len(due))
             for fn in due:
                 try:
                     fn()

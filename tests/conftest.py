@@ -1,0 +1,95 @@
+"""Shared pytest wiring: the opt-in concurrency-sanitizer lane (PR 10).
+
+With ``REPRO_SANITIZE=1`` in the environment, every test in the tier-1
+concurrency suites (``SANITIZED_MODULES``) runs with a fresh
+:class:`repro.analysis.sanitizer.Sanitizer` installed on the
+``repro.core.instrument`` seam.  After each test:
+
+* **error-tier** findings (the known-clean rule set: SAN-RACE,
+  SAN-LOCK-ORDER, SAN-FUT-LEAK, SAN-TRIAL-SUMMARY) fail the test;
+* **warn-tier** findings (rules new this PR, e.g. SAN-SELF-DEADLOCK)
+  surface as pytest warnings — visible in CI, not yet gating;
+* event counts are accumulated per backend (from the test's ``backend``
+  param when it has one) and written to ``REPRO_SANITIZE_REPORT`` (a JSON
+  path; default ``sanitizer-counts.json``) at session end, which the CI
+  ``analysis`` job folds into its step summary.
+
+Without the env var this file costs nothing: the fixture yields
+immediately and no analysis module is ever imported.
+"""
+import json
+import os
+import warnings
+from collections import Counter, defaultdict
+
+import pytest
+
+# Tier-1 concurrency suites that must stay sanitizer-clean (the CI
+# analysis lane runs exactly these with REPRO_SANITIZE=1).
+SANITIZED_MODULES = {
+    "test_backends",
+    "test_fiber_scheduler",
+    "test_completion_ring",
+    "test_faults",
+}
+
+_counts_by_backend = defaultdict(Counter)
+
+
+def _sanitize_enabled() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "sanitizer_allow(rule, ...): suppress the named concurrency-"
+        "sanitizer rules for this test (the dynamic analogue of the lint "
+        "pass's `# repro: allow[RULE]` comment) — for tests that "
+        "*deliberately* construct the flagged condition.")
+
+
+@pytest.fixture(autouse=True)
+def _concurrency_sanitizer(request):
+    """Attach the sanitizer around sanitized-suite tests (opt-in via env)."""
+    if not _sanitize_enabled() \
+            or request.module.__name__ not in SANITIZED_MODULES:
+        yield
+        return
+    from repro.analysis.sanitizer import Sanitizer
+    from repro.core import instrument
+
+    san = Sanitizer()
+    instrument.install(san)
+    try:
+        yield
+    finally:
+        instrument.uninstall()
+        findings = san.check()
+        backend = "none"
+        callspec = getattr(request.node, "callspec", None)
+        if callspec is not None:
+            backend = str(callspec.params.get("backend", "none"))
+        _counts_by_backend[backend].update(san.counts)
+        allowed = set()
+        for mark in request.node.iter_markers("sanitizer_allow"):
+            allowed.update(mark.args)
+        for f in findings:
+            if f.severity == "warn":
+                warnings.warn(f"sanitizer (warn tier): {f}")
+        errors = [f for f in findings
+                  if f.severity == "error" and f.rule not in allowed]
+        if errors:
+            pytest.fail("concurrency sanitizer findings:\n"
+                        + "\n".join(str(f) for f in errors))
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """Write the per-backend sanitizer event-count report (sanitize lane)."""
+    if not _sanitize_enabled() or not _counts_by_backend:
+        return
+    path = os.environ.get("REPRO_SANITIZE_REPORT", "sanitizer-counts.json")
+    report = {backend: dict(counts)
+              for backend, counts in sorted(_counts_by_backend.items())}
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)

@@ -1,0 +1,25 @@
+"""Lint fixture: every A101 violation class in one handler module."""
+import threading
+import time
+
+
+def handler_sleeps(svc, payload):
+    time.sleep(0.1)                     # A101: blocks the carrier
+    yield
+
+
+def handler_blocking_wait(svc, payload):
+    fut = yield object()
+    fut.wait(timeout=1.0)               # A101: blocking join in a handler
+    return fut.wait_done()              # A101: ditto
+
+
+def handler_builds_primitive(svc, payload):
+    done = threading.Event()            # A101: kernel primitive in handler
+    yield
+    return done
+
+
+def handler_suppressed(svc, payload):
+    time.sleep(0.0)  # repro: allow[A101]
+    yield

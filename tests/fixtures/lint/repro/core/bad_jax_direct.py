@@ -1,0 +1,6 @@
+"""Lint fixture: A103 — direct module-level jax import in core."""
+import jax  # noqa: F401
+
+
+def uses_it():
+    return jax.__name__

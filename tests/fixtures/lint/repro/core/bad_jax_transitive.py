@@ -1,0 +1,6 @@
+"""Lint fixture: A103 — jax reached transitively through a repro module."""
+from repro.kernels_helper import fused_step  # noqa: F401
+
+
+def run():
+    return fused_step()

@@ -1,0 +1,25 @@
+"""Lint fixture: A102 violations (unseeded RNG, wall clock) in core."""
+import random
+import time
+
+_OK_RNG = random.Random(42)             # allowed: seeded instance
+
+
+def jitter():
+    return random.random()              # A102: unseeded module-level RNG
+
+
+def pick(n):
+    return random.randint(0, n)         # A102: unseeded module-level RNG
+
+
+def stamp():
+    return time.time()                  # A102: wall clock
+
+
+def ok_clock():
+    return time.monotonic(), time.perf_counter(), _OK_RNG.random()
+
+
+def suppressed():
+    return time.time()  # repro: allow[A102]

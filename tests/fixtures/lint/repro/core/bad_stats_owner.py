@@ -1,0 +1,31 @@
+"""Lint fixture: A104 violations — counters mutated outside their owner."""
+import threading
+
+
+class RogueExecutor:
+    """Not in the owner-thread table; must hold a lock to mutate."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.spawns = 0                 # ok: __init__ runs before sharing
+        self.switches = 0
+
+    def unlocked_bump(self):
+        self.spawns += 1                # A104: no owning lock held
+
+    def unlocked_gauge(self, depth):
+        self.queue_depth_hwm = depth    # A104: no owning lock held
+
+    def locked_bump(self):
+        with self._lock:
+            self.switches += 1          # ok: owner lock held
+
+    def suppressed_bump(self):
+        self.spawns += 1  # repro: allow[A104]
+
+
+class FiberScheduler:
+    """Shadows an owner-thread-only class name: mutations are sanctioned."""
+
+    def owner_thread_bump(self):
+        self.switches += 1              # ok: owner-thread-only class

@@ -1,0 +1,12 @@
+"""Lint fixture: a non-core repro module that imports jax at top level
+(legal here — but anything in core/apps importing *this* violates A103)."""
+import jax  # noqa: F401
+
+
+def fused_step():
+    return jax.__name__
+
+
+def lazy_ok():
+    import jax.numpy as jnp  # function-local: never counted by A103
+    return jnp

@@ -1,0 +1,183 @@
+"""Seeded regression reproducers: prove the sanitizer flags the bugs this
+repo has already fixed, by reverting each fix *in memory* and running the
+pre-fix ordering under the detector.
+
+* PR 6 — the latency-summary race: ``run_trial`` used to read
+  ``LatencyRecorder.summary()`` *before* severing the trial, racing late
+  completion callbacks.  Reenacted on a real recorder -> SAN-TRIAL-SUMMARY.
+* PR 9 — shutdown-mid-hang: ``App.stop`` settles blackholed replies
+  before stopping executors; with that settlement disabled (monkeypatched
+  to a no-op) a hung request's waiters are orphaned -> SAN-FUT-LEAK.
+* PR 10 satellite — ``App.stop`` used to *drop* pending TimerThread
+  entries, orphaning a retry-in-backoff's reply.  The fix
+  (``TimerThread.stop(fire_pending=True)``) fires them early so the
+  retry observes the stopped app and fails the reply; the reverted drop
+  behaviour is flagged as SAN-FUT-LEAK.
+"""
+import time
+
+import pytest
+
+from repro.analysis.sanitizer import attached
+from repro.core import (App, AsyncRpc, Compute, FaultPlan, FaultRule,
+                        ResiliencePolicy, RetryPolicy, ServiceSpec, Wait)
+from repro.core.metrics import LatencyRecorder
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ------------------------------------------------------------------- PR 6
+def test_pr6_summary_before_sever_flagged():
+    """Pre-fix run_trial ordering on a real recorder: summarize while the
+    trial is live, then a late completion records — the summary raced."""
+    rec = LatencyRecorder()
+    with attached() as san:
+        rec.record(0.010)                 # completions during the window
+        rec.record(0.012)
+        rec.summary()                     # PRE-FIX: read before the sever
+        rec.record(0.500)                 # late completion callback lands
+        san.trial_sever(rec)              # sever arrives too late
+        san.check()
+    errs = san.errors()
+    assert "SAN-TRIAL-SUMMARY" in _rules(errs)
+    assert any("raced" in f.message for f in errs)
+
+
+def test_pr6_fixed_ordering_clean():
+    """The shipped ordering — freeze first, summarize after — is clean."""
+    rec = LatencyRecorder()
+    with attached() as san:
+        rec.record(0.010)
+        rec.record(0.012)
+        san.trial_sever(rec)              # sever the trial...
+        rec.summary()                     # ...then read the frozen recorder
+        san.check()
+    assert san.errors() == []
+
+
+def test_write_after_sever_flagged():
+    """The other half of the protocol: a write escaping the sever means the
+    liveness check failed to freeze the recorder."""
+    rec = LatencyRecorder()
+    with attached() as san:
+        rec.record(0.010)
+        san.trial_sever(rec)
+        rec.record(0.500)                 # escaped the liveness check
+        san.check()
+    assert "SAN-TRIAL-SUMMARY" in _rules(san.errors())
+
+
+# ------------------------------------------------------------------- PR 9
+def _hang_app():
+    def leaf(svc, payload):
+        yield Compute(20e-6)
+        return "leaf"
+
+    def root(svc, payload):
+        f = yield AsyncRpc("leaf", "get", payload)
+        return (yield Wait(f))
+
+    app = App(backend="fiber")
+    app.add_service(ServiceSpec("leaf", {"get": leaf}, n_workers=2))
+    app.add_service(ServiceSpec("root", {"get": root}, n_workers=2))
+    plan = FaultPlan([FaultRule(dest="leaf", kind="hang")])
+    app.set_faults(plan)
+    return app, plan
+
+
+def test_pr9_stop_without_settlement_leaks(monkeypatch):
+    """Fix reverted in memory: settle_blackholed no-ops, so stopping the
+    app mid-hang orphans the cooperative waiter parked on the blackholed
+    reply — the sanitizer reports the leaked future."""
+    app, plan = _hang_app()
+    monkeypatch.setattr(FaultPlan, "settle_blackholed", lambda self: None)
+    with attached() as san:
+        app.start()
+        plan.arm()
+        f = app.send("root", "get")       # root parks on the hung leaf
+        time.sleep(0.08)
+        assert not f.done
+        app.stop()                        # pre-fix: waiters stay orphaned
+        san.check()
+    errs = san.errors()
+    assert "SAN-FUT-LEAK" in _rules(errs)
+    assert any("blackhole" in f.message for f in errs)
+    assert not f.done                     # the reply really was orphaned
+
+
+def test_pr9_fixed_stop_settles_cleanly():
+    """With the shipped fix in place the same scenario leaves nothing
+    leaked: stop settles the blackholed reply before executors die."""
+    app, plan = _hang_app()
+    with attached() as san:
+        app.start()
+        plan.arm()
+        f = app.send("root", "get")
+        time.sleep(0.08)
+        assert not f.done
+        app.stop()
+        assert f.wait_done(timeout=5.0)
+        san.check()
+    assert "SAN-FUT-LEAK" not in _rules(san.errors())
+
+
+# --------------------------------------------------- PR 10 satellite: stop()
+def _retry_app():
+    """A leaf that always fails + a retry policy with a backoff far longer
+    than the test: any retry is guaranteed to be pending when stop runs."""
+    def leaf(svc, payload):
+        yield Compute(1e-6)
+        raise RuntimeError("leaf down")
+
+    app = App(backend="fiber",
+              resilience=ResiliencePolicy(
+                  deadline=None, breakers=False,
+                  retry=RetryPolicy(max_attempts=3, base_backoff=30.0,
+                                    max_backoff=30.0, jitter=0.0)))
+    app.add_service(ServiceSpec("leaf", {"get": leaf}, n_workers=1))
+    return app
+
+
+def test_stop_fires_pending_retry_reply():
+    """Regression for the shutdown inversion: a retry parked in backoff on
+    the kernel TimerThread must resolve its reply at App.stop (the timer
+    drain fires pending callbacks early; they observe the stopped app and
+    fail fast) instead of being silently dropped."""
+    app = _retry_app()
+    app.start()
+    f = app.send("leaf", "get")
+    deadline = time.monotonic() + 5.0
+    while not app._res_stats.retries and time.monotonic() < deadline:
+        time.sleep(0.005)                 # first attempt failed, backoff armed
+    assert app._res_stats.retries == 1
+    assert not f.done                     # reply owed by the pending retry
+    app.stop()
+    assert f.wait_done(timeout=5.0), \
+        "pending retry was dropped at stop; reply orphaned"
+    assert isinstance(f.exception(), RuntimeError)
+    assert "stopped while retrying" in str(f.exception())
+
+
+def test_stop_dropping_pending_retry_flagged(monkeypatch):
+    """Fix reverted in memory: restore the old drop-the-heap stop() and the
+    sanitizer sees the orphaned reply (the caller awaited it)."""
+    from repro.core.timers import TimerThread
+    orig_stop = TimerThread.stop
+    monkeypatch.setattr(
+        TimerThread, "stop",
+        lambda self, fire_pending=False: orig_stop(self, fire_pending=False))
+    app = _retry_app()
+    with attached() as san:
+        app.start()
+        f = app.send("leaf", "get")
+        deadline = time.monotonic() + 5.0
+        while not app._res_stats.retries and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert app._res_stats.retries == 1
+        san.future_join(f)                # the caller's park on the reply
+        app.stop()                        # pre-fix: pending entry dropped
+        san.check()
+    assert not f.done                     # orphaned for real
+    assert "SAN-FUT-LEAK" in _rules(san.errors())

@@ -1,0 +1,220 @@
+"""Self-tests for the dynamic concurrency sanitizer (``repro.analysis``).
+
+Each detector gets a positive (seeded bug is flagged) and a negative
+(properly-synchronized equivalent is clean) — plus the headline
+acceptance check: a healthy app exercised across all 8 backends under the
+sanitizer, with its locks proxy-tracked, produces zero findings.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.analysis.sanitizer import (Sanitizer, TrackedLock, attached,
+                                      track_app_locks)
+from repro.core import (BACKEND_NAMES, App, AsyncRpc, Compute, ServiceSpec,
+                        SpawnLocal, Wait, instrument)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ------------------------------------------------------------------ SAN-RACE
+def test_racy_counter_flagged():
+    """Two threads hitting one shared counter with no synchronization edge
+    between them is a race, even though the sanitizer saw the events in a
+    serial order."""
+    with attached() as san:
+        def worker():
+            instrument.hooks.access("stats.requests", write=True)
+
+        t1 = threading.Thread(target=worker)
+        t2 = threading.Thread(target=worker)
+        t1.start(); t1.join()
+        t2.start(); t2.join()
+        findings = san.check()
+    assert "SAN-RACE" in _rules(san.errors())
+    assert any("stats.requests" in f.message for f in findings)
+
+
+def test_channel_synchronized_counter_clean():
+    """The same cross-thread counter handoff through a queue put/take edge
+    (the runtime's mailbox pattern) is ordered — no race."""
+    chan = object()
+    with attached() as san:
+        def producer():
+            instrument.hooks.access("stats.requests", write=True)
+            instrument.hooks.queue_put(chan)
+
+        def consumer():
+            instrument.hooks.queue_take(chan)
+            instrument.hooks.access("stats.requests", write=True)
+
+        t1 = threading.Thread(target=producer)
+        t1.start(); t1.join()
+        t2 = threading.Thread(target=consumer)
+        t2.start(); t2.join()
+        san.check()
+    assert san.errors() == []
+
+
+def test_concurrent_reads_clean_then_unordered_write_flagged():
+    with attached() as san:
+        def reader():
+            instrument.hooks.access("stats.snapshot", write=False)
+
+        t1 = threading.Thread(target=reader)
+        t2 = threading.Thread(target=reader)
+        t1.start(); t1.join()
+        t2.start(); t2.join()
+        assert san.check() == []          # readers never race readers
+        t3 = threading.Thread(
+            target=lambda: instrument.hooks.access("stats.snapshot",
+                                                   write=True))
+        t3.start(); t3.join()
+        san.check()
+    assert "SAN-RACE" in _rules(san.errors())
+
+
+# ------------------------------------------------------------ SAN-LOCK-ORDER
+def test_two_lock_inversion_flagged():
+    """AB on one thread, BA on another: a deadlock-capable cycle even when
+    this particular run got away with it."""
+    a, b = threading.Lock(), threading.Lock()
+    with attached() as san:
+        ta = TrackedLock(a, "lock.A")
+        tb = TrackedLock(b, "lock.B")
+
+        def ab():
+            with ta:
+                with tb:
+                    pass
+
+        def ba():
+            with tb:
+                with ta:
+                    pass
+
+        t1 = threading.Thread(target=ab)
+        t1.start(); t1.join()
+        t2 = threading.Thread(target=ba)
+        t2.start(); t2.join()
+        san.check()
+    errs = san.errors()
+    assert "SAN-LOCK-ORDER" in _rules(errs)
+    assert any("lock.A" in f.message and "lock.B" in f.message for f in errs)
+
+
+def test_consistent_lock_order_clean():
+    a, b = threading.Lock(), threading.Lock()
+    with attached() as san:
+        ta = TrackedLock(a, "lock.A")
+        tb = TrackedLock(b, "lock.B")
+
+        def ab():
+            with ta:
+                with tb:
+                    pass
+
+        for _ in range(2):
+            t = threading.Thread(target=ab)
+            t.start(); t.join()
+        san.check()
+    assert san.errors() == []
+
+
+# -------------------------------------------------------- SAN-SELF-DEADLOCK
+def test_same_carrier_self_deadlock_warned():
+    """A handler blocking on a future whose only producer is a fiber parked
+    behind it on the same single-carrier scheduler: the producer can never
+    run.  Warn tier this PR (see docs/ANALYSIS.md)."""
+    def child(svc, payload):
+        yield Compute(1e-6)
+        return "child"
+
+    def bad(svc, payload):
+        fut = yield SpawnLocal(lambda: child(svc, payload))
+        try:
+            fut.wait(timeout=0.05)    # blocking wait ON the carrier thread
+        except TimeoutError:
+            pass
+        return "timed-out"
+
+    app = App(backend="fiber")
+    app.add_service(ServiceSpec("solo", {"bad": bad}, n_workers=1))
+    with attached() as san:
+        with app:
+            assert app.send("solo", "bad").wait(timeout=5.0) == "timed-out"
+        san.check()
+    assert "SAN-SELF-DEADLOCK" in _rules(san.warnings())
+    assert "SAN-SELF-DEADLOCK" not in _rules(san.errors())
+
+
+# --------------------------------------------------------------- clean sweep
+@pytest.mark.parametrize("backend", BACKEND_NAMES)
+def test_healthy_app_sanitizer_clean(backend):
+    """The acceptance bar: a healthy request chain on every backend, locks
+    proxy-tracked, runs with zero sanitizer findings."""
+    def leaf(svc, payload):
+        yield Compute(5e-6)
+        return payload * 2
+
+    def root(svc, payload):
+        f = yield AsyncRpc("leaf", "get", payload)
+        return (yield Wait(f))
+
+    app = App(backend=backend)
+    app.add_service(ServiceSpec("leaf", {"get": leaf}, n_workers=2))
+    app.add_service(ServiceSpec("root", {"get": root}, n_workers=2))
+    with attached(app=app) as san:
+        with app:
+            futs = [app.send("root", "get", i) for i in range(32)]
+            for i, f in enumerate(futs):
+                assert f.wait(timeout=5.0) == 2 * i
+        findings = san.check()
+    assert san.errors() == [], [str(f) for f in findings]
+    assert san.counts["future_set"] > 0   # the seam actually fired
+
+
+def test_stop_phase_order_recorded():
+    """App.stop's documented shutdown order is observable on the seam —
+    the satellite-2 audit trail (timer drain last, after executors)."""
+    def get(svc, payload):
+        yield Compute(1e-6)
+        return "ok"
+
+    app = App(backend="fiber")
+    app.add_service(ServiceSpec("svc", {"get": get}, n_workers=1))
+    with attached() as san:
+        with app:
+            assert app.send("svc", "get").wait(timeout=5.0) == "ok"
+        san.check()
+    phases = san.stop_phases(app)
+    assert phases == ["executor_stop", "offload_stop", "timer_stop"]
+    assert san.errors() == []
+
+
+def test_track_app_locks_restores():
+    app = App(backend="fiber")
+    app.add_service(ServiceSpec("svc", {}, n_workers=1))
+    svc = app.services["svc"]
+    orig = svc.lock
+    restore = track_app_locks(app)
+    assert isinstance(svc.lock, TrackedLock)
+    restore()
+    assert svc.lock is orig
+
+
+def test_event_counts_accumulate():
+    """The counts surface the CI job summary reads is populated per event."""
+    san = Sanitizer()
+    instrument.install(san)
+    try:
+        from repro.core.future import Future
+        fut = Future()
+        fut.set_result(1)
+        assert fut.wait(timeout=1.0) == 1
+    finally:
+        instrument.uninstall()
+    assert san.counts["future_set"] == 1

@@ -6,6 +6,15 @@ at all.  This test runs that import in a subprocess with a meta-path finder
 that makes any ``import jax`` raise, which is stronger than checking the
 current environment (where jax IS installed and a stray import would pass
 silently).
+
+Since PR 10 the *static* half of this contract is owned by lint rule A103
+(``python -m repro.analysis.lint`` — see docs/ANALYSIS.md): it walks the
+module-level import closure of every ``repro.core``/``repro.apps`` module
+and names the offending chain, catching a stray jax import even in a
+module the smoke path never loads.  The CI bench lane runs that lint in
+its numpy-only environment; this file keeps the *runtime* half — proving
+the import machinery actually executes jax-free — plus a cross-check that
+the delegation target exists and holds.
 """
 import os
 import subprocess
@@ -60,3 +69,15 @@ def test_smoke_path_imports_without_jax():
         f"smoke-path import pulled in jax (or failed outright):\n"
         f"stdout: {proc.stdout}\nstderr: {proc.stderr}")
     assert "smoke path is jax-free" in proc.stdout
+
+
+def test_static_import_closure_delegated_to_lint():
+    """The import-graph half of the contract: rule A103 exists in the lint
+    pass and finds no ``repro.core``/``repro.apps`` -> jax chain in the
+    shipped tree (the runtime subprocess above can only see modules the
+    smoke path actually loads; A103 sees every module on disk)."""
+    from repro.analysis.lint import RULES, lint_paths
+    assert "A103" in RULES
+    findings = [f for f in lint_paths([str(REPO / "src" / "repro")])
+                if f.rule == "A103"]
+    assert findings == [], "\n".join(f.render() for f in findings)

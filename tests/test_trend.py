@@ -232,8 +232,10 @@ def test_committed_baseline_is_current_schema():
     # probe its knee-multiple cell, the pinning probe its two paired
     # placement-policy peaks in both warm and cold-start modes, and the
     # sick-dependency faults probe its hard-gated breaker win plus the two
-    # goodput context records behind it
-    from benchmarks.bench_rpc_path import INLINE_BACKENDS
+    # goodput context records behind it, and the instrumentation-seam
+    # probe its warn-only +hooks toll cell per probed backend
+    from benchmarks.bench_rpc_path import (HOOK_PROBE_BACKENDS,
+                                           INLINE_BACKENDS)
     from benchmarks.bench_smoke import (FAULTS_PROBE_APP,
                                         FAULTS_PROBE_BACKEND,
                                         OVERLOAD_PROBE_APP,
@@ -247,6 +249,7 @@ def test_committed_baseline_is_current_schema():
                  for a in APP_NAMES for b in BENCH_BACKENDS}
     expected |= {f"rpc_path/{b}" for b in BENCH_BACKENDS}
     expected |= {f"rpc_path/{b}+resilient" for b in INLINE_BACKENDS}
+    expected |= {f"rpc_path/{b}+hooks" for b in HOOK_PROBE_BACKENDS}
     expected |= {
         f"overload/{OVERLOAD_PROBE_APP}/{OVERLOAD_PROBE_BACKEND}/{label}"
         for label in ("breakers-off", "breakers-on", "knee")}
